@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: timed medians, dataset setup."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+
+DATA_DIR = "/tmp/repro_bench"
+
+
+def timed(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds; blocks on jax results."""
+    for _ in range(warmup):
+        r = fn()
+        jax.block_until_ready(r) if r is not None else None
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn()
+        if r is not None:
+            jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    line = f"{name},{seconds*1e6:.0f},{derived}"
+    print(line, flush=True)
+    return line

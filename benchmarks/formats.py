@@ -1,0 +1,62 @@
+"""Paper Fig. 3a: CSV/JSON vs columnar throughput.
+
+Text parsing is host-serial by design (DESIGN.md §2 — no TPU analogue);
+the benchmark quantifies the gap the paper reports as 14-16x for Parquet
+over text formats.  Query: q6-style scan+aggregate over lineitem columns.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import DatapathEngine, tpch
+from repro.core.queries import q6
+from repro.lakeformat import textformat
+from repro.lakeformat.reader import LakeReader
+
+from benchmarks.common import DATA_DIR, row, timed
+
+
+def run(sf: float = 0.25) -> dict:
+    d = os.path.join(DATA_DIR, f"fmt_sf{sf}")
+    os.makedirs(d, exist_ok=True)
+    data = tpch.gen_tables(sf, seed=0)
+    li_schema = tpch.lineitem_schema()
+    lake = os.path.join(d, "lineitem.lake")
+    csv = os.path.join(d, "lineitem.csv")
+    jsonl = os.path.join(d, "lineitem.jsonl")
+    if not os.path.exists(lake):
+        from repro.lakeformat.writer import write_table
+
+        write_table(lake, li_schema, data["lineitem"])
+        textformat.write_csv(csv, li_schema, data["lineitem"])
+        textformat.write_jsonl(jsonl, li_schema, data["lineitem"])
+
+    n = len(data["lineitem"]["l_quantity"])
+
+    def q6_np(cols):
+        m = ((cols["l_shipdate"] >= 365) & (cols["l_shipdate"] <= 729)
+             & (cols["l_discount"] >= 0.05 - 1e-4) & (cols["l_discount"] <= 0.07 + 1e-4)
+             & (cols["l_quantity"] < 24))
+        return float((cols["l_extendedprice"][m] * cols["l_discount"][m]).sum())
+
+    t_csv = timed(lambda: q6_np(textformat.parse_csv(csv, li_schema)), repeats=1, warmup=0)
+    t_json = timed(lambda: q6_np(textformat.parse_jsonl(jsonl, li_schema)), repeats=1, warmup=0)
+
+    reader = LakeReader(lake)
+    eng = DatapathEngine(backend="ref")
+    t_lake = timed(lambda: q6(eng, {"lineitem": reader}), repeats=3)
+
+    row("formats.csv", t_csv, f"rows={n}")
+    row("formats.jsonl", t_json, f"rows={n}")
+    row("formats.lake", t_lake, f"rows={n}")
+    row("formats.speedup", 0.0,
+        f"lake_vs_csv={t_csv/t_lake:.1f}x;lake_vs_json={t_json/t_lake:.1f}x;paper=14-16x")
+    return {"csv_s": t_csv, "jsonl_s": t_json, "lake_s": t_lake,
+            "speedup_csv": t_csv / t_lake, "speedup_json": t_json / t_lake}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,232 @@
+"""While-loop-aware HLO accounting for the roofline.
+
+XLA's `compiled.cost_analysis()` counts every while-loop body ONCE (scan
+trip counts are not multiplied in) and reports per-device numbers — both
+verified empirically in tests/test_hlo_analysis.py.  Since this framework
+scans over layers, microbatches, q-chunks and SSD chunks, a trip-aware
+walk of the optimized HLO is required for truthful per-step FLOPs and
+collective bytes.
+
+Mechanics (per computation in `compiled.as_text()`):
+  - build an SSA symbol table (value name -> shape) from definition lines
+    and computation parameters,
+  - dot FLOPs = 2 * prod(out_shape) * prod(lhs contracting dim sizes),
+  - collective bytes = result bytes * ring factor
+    (all-reduce 2x, gather/scatter/a2a/permute 1x),
+  - call graph via to_apply= / calls= / body= / branch_computations=,
+  - while trip counts from backend_config known_trip_count (fallback:
+    largest int constant in the condition computation),
+  - evaluate ENTRY recursively, multiplying while bodies by trip count.
+
+All numbers are PER DEVICE (the optimized HLO is the per-device SPMD
+program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+)\s*:\s*(\w+\[[\d,]*\])")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CONST_RE = re.compile(r"=\s*s(?:32|64)\[\]\s*constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_COLL_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+_OP_RE = re.compile(
+    r"\b(dot|while|fusion|call|conditional|custom-call|"
+    r"all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\("
+)
+
+
+def _parse_shape(txt: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
+    m = _SHAPE_RE.search(txt)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+def _numel(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _nbytes(shape: Tuple[str, Tuple[int, ...]]) -> float:
+    return _numel(shape[1]) * _DTYPE_BYTES[shape[0]]
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    whiles: List[Tuple[str, str, Optional[int]]] = dataclasses.field(default_factory=list)
+    calls: List[str] = dataclasses.field(default_factory=list)
+    max_const: int = 1
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    current: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if current is None:
+            if line.endswith("{") and "->" in line and ("(" in line):
+                head = line
+                is_entry = head.startswith("ENTRY")
+                if is_entry:
+                    head = head[len("ENTRY"):].strip()
+                name = head.lstrip("%").split("(")[0].split()[0].strip()
+                current = name
+                comps[current] = [line]  # keep header (has param shapes)
+                if is_entry:
+                    entry = name
+        else:
+            if line == "}":
+                current = None
+            else:
+                comps[current].append(line)
+    return comps, entry
+
+
+def _analyze_comp(lines: List[str]) -> CompStats:
+    st = CompStats()
+    sym: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+    # computation parameters from the header line
+    for pname, pshape in _PARAM_RE.findall(lines[0]):
+        shp = _parse_shape(pshape)
+        if shp:
+            sym[pname] = shp
+
+    for line in lines[1:]:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        shp = _parse_shape(rhs.split("(", 1)[0] if "(" in rhs else rhs)
+        if shp:
+            sym[name] = shp
+        cm = _CONST_RE.search(line)
+        if cm:
+            st.max_const = max(st.max_const, int(cm.group(1)))
+        # opcode: first known op token followed by '(' (tuple-typed results
+        # start with '(', so "token before first paren" doesn't work)
+        rhs_main = rhs.split(", metadata")[0]
+        opm = _OP_RE.search(rhs_main)
+        op = opm.group(1) if opm else ""
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+
+        if op == "dot":
+            out = _parse_shape(rhs)
+            args = re.findall(r"dot\(([^)]*)\)", rhs)
+            lhs_shape = None
+            if args:
+                ops_names = [a.strip().lstrip("%") for a in args[0].split(",")]
+                if ops_names:
+                    lhs_shape = sym.get(ops_names[0])
+            cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+            if out and lhs_shape and cdims is not None:
+                k = 1
+                for ci in (int(x) for x in cdims.group(1).split(",") if x):
+                    if ci < len(lhs_shape[1]):
+                        k *= lhs_shape[1][ci]
+                st.dot_flops += 2.0 * _numel(out[1]) * k
+                st.dot_bytes += _nbytes(out) + (
+                    _nbytes(lhs_shape) if lhs_shape else 0.0
+                )
+            continue
+
+        matched_coll = False
+        for kind in COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                out = _parse_shape(rhs)
+                if out:
+                    nb = _nbytes(out) * _COLL_FACTOR[kind]
+                    st.coll_bytes += nb
+                    st.coll_by_kind[kind] = st.coll_by_kind.get(kind, 0.0) + nb
+                matched_coll = True
+                break
+        if matched_coll:
+            continue
+
+        if op == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", rhs)
+            cm2 = re.search(r"condition=%?([\w\.\-]+)", rhs)
+            tm = _TRIP_RE.search(rhs)
+            if bm and cm2:
+                st.whiles.append(
+                    (bm.group(1), cm2.group(1), int(tm.group(1)) if tm else None)
+                )
+            continue
+
+        for m in re.finditer(r"(?:to_apply|calls)=%?([\w\.\-]+)", rhs):
+            st.calls.append(m.group(1))
+        bm = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+        if bm:
+            for b in bm.group(1).split(","):
+                st.calls.append(b.strip().lstrip("%"))
+    return st
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    dot_bytes: float
+    collective_bytes: float
+    collective_by_kind: Dict[str, float]
+
+
+def analyze_hlo(hlo_text: str) -> HloCost:
+    comps, entry = _split_computations(hlo_text)
+    stats = {name: _analyze_comp(lines) for name, lines in comps.items()}
+    memo: Dict[str, Tuple[float, float, float, Dict[str, float]]] = {}
+
+    def walk(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        st = stats.get(name)
+        if st is None or depth > 64:
+            return (0.0, 0.0, 0.0, {})
+        memo[name] = (0.0, 0.0, 0.0, {})
+        f, db, cb = st.dot_flops, st.dot_bytes, st.coll_bytes
+        kinds = dict(st.coll_by_kind)
+        for callee in st.calls:
+            cf, cdb, ccb, ck = walk(callee, depth + 1)
+            f += cf; db += cdb; cb += ccb
+            for k, v in ck.items():
+                kinds[k] = kinds.get(k, 0.0) + v
+        for body, cond, trip in st.whiles:
+            if trip is None:
+                trip = stats[cond].max_const if cond in stats else 1
+            bf, bdb, bcb, bk = walk(body, depth + 1)
+            f += bf * trip; db += bdb * trip; cb += bcb * trip
+            for k, v in bk.items():
+                kinds[k] = kinds.get(k, 0.0) + v * trip
+        memo[name] = (f, db, cb, kinds)
+        return memo[name]
+
+    f, db, cb, kinds = walk(entry) if entry else (0.0, 0.0, 0.0, {})
+    return HloCost(flops=f, dot_bytes=db, collective_bytes=cb,
+                   collective_by_kind=kinds)
+
+
+def analyze_compiled(compiled) -> HloCost:
+    return analyze_hlo(compiled.as_text())

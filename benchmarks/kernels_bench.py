@@ -1,0 +1,75 @@
+"""Kernel decode rates (paper §3 "line-rate data decoding").
+
+On this CPU container the meaningful numbers are the jnp reference-path
+decode rates (bytes of decoded output per second) and the encoded:decoded
+byte ratios (= DMA savings).  On a real TPU the Pallas kernels are HBM-
+bound; their arithmetic intensity is reported for the roofline argument.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.lakeformat import encodings as E
+
+from benchmarks.common import row, timed
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+    n = 1 << 20  # 1M values
+
+    # bitunpack @ 18 bits (202k vocab tokens)
+    v = rng.integers(0, 202048, size=n, dtype=np.uint64)
+    p = jnp.asarray(E.bitpack_encode(v, 18))
+    t = timed(lambda: ops.bitunpack(p, 18, n, backend="ref"))
+    out["bitunpack18"] = {"decoded_GBps": n * 4 / t / 1e9, "ratio": 32 / 18}
+    row("kernels.bitunpack18", t, f"GB/s={n*4/t/1e9:.2f};dma_ratio={32/18:.2f}")
+
+    # dict decode (7 distinct values)
+    v = rng.choice(np.array([1, 5, 9, 13, 20, 44, 90], dtype=np.int64), size=n)
+    b = E.dict_encode(v); k = int(b.pop("_k")[0])
+    pk, d = jnp.asarray(b["packed"]), jnp.asarray(b["dictionary"].astype(np.int32))
+    t = timed(lambda: ops.dict_decode(pk, d, k, n, backend="ref"))
+    out["dict"] = {"decoded_GBps": n * 4 / t / 1e9}
+    row("kernels.dict_decode", t, f"GB/s={n*4/t/1e9:.2f};k={k}")
+
+    # rle decode (runs ~64 long; n reduced: one-hot expansion is eager on CPU)
+    nr = 1 << 18
+    v = np.repeat(rng.integers(0, 100, size=nr // 64), 64).astype(np.int32)
+    b = E.rle_encode(v)
+    rv, re_ = jnp.asarray(b["rle_values"]), jnp.asarray(b["rle_ends"])
+    t = timed(lambda: ops.rle_decode(rv, re_, len(v), backend="ref"))
+    out["rle"] = {"decoded_GBps": len(v) * 4 / t / 1e9}
+    row("kernels.rle_decode", t, f"GB/s={len(v)*4/t/1e9:.2f}")
+
+    # delta decode
+    v = np.cumsum(rng.integers(0, 16, size=n)).astype(np.int64)
+    b = E.delta_encode(v); k = int(b.pop("_k")[0])
+    pk, bs = jnp.asarray(b["packed"]), jnp.asarray(b["bases"].astype(np.int32))
+    t = timed(lambda: ops.delta_decode(pk, bs, k, n, backend="ref"))
+    out["delta"] = {"decoded_GBps": n * 4 / t / 1e9, "k": k}
+    row("kernels.delta_decode", t, f"GB/s={n*4/t/1e9:.2f};k={k}")
+
+    # fused scan (decode + predicate, nothing materialized)
+    v = rng.integers(0, 2556, size=n, dtype=np.uint64)
+    p = jnp.asarray(E.bitpack_encode(v, 12))
+    t = timed(lambda: ops.fused_scan(p, 12, 365, 729, backend="ref"))
+    out["fused_scan"] = {"decoded_GBps": n * 4 / t / 1e9}
+    row("kernels.fused_scan", t, f"GB/s={n*4/t/1e9:.2f}")
+
+    # filter_compact (n reduced: permutation one-hot is MXU work, eager on CPU)
+    nf = 1 << 16
+    vals = jnp.asarray(rng.standard_normal((nf // 1024, 1024)).astype(np.float32))
+    mask = jnp.asarray(rng.random((nf // 1024, 1024)) < 0.2)
+    t = timed(lambda: ops.filter_compact(vals, mask, backend="ref"))
+    out["filter_compact"] = {"GBps": nf * 4 / t / 1e9}
+    row("kernels.filter_compact", t, f"GB/s={nf*4/t/1e9:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""LM input-pipeline offload (paper §1 "smaller CPUs match throughput",
+applied to the training workload).
+
+Measures host-CPU work and DMA bytes per training token across the three
+ingestion modes:
+  host    host decodes + filters (traditional pipeline)
+  engine  device decodes + filters (datapath offload)
+  fused   raw encoded blocks straight to the jitted step (zero host work)
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.data.corpus import write_corpus
+from repro.data.pipeline import TokenPipeline
+
+from benchmarks.common import DATA_DIR, row
+
+
+def run(n_tokens: int = 2_000_000, vocab: int = 151_936) -> dict:
+    d = os.path.join(DATA_DIR, "corpus")
+    marker = os.path.join(d, "shard_00000.lake")
+    if not os.path.exists(marker):
+        write_corpus(d, n_tokens=n_tokens, vocab=vocab, n_shards=2)
+    paths = [os.path.join(d, f) for f in sorted(os.listdir(d))]
+
+    out = {}
+    B, S, steps = 4, 4096, 8
+    for mode in ("host", "engine", "fused"):
+        pipe = TokenPipeline(paths, B, S, mode=mode,
+                             quality_min=30 if mode != "fused" else None)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            pipe.next_batch()
+        dt = time.perf_counter() - t0
+        toks = B * S * steps
+        out[mode] = {
+            "tokens_per_s": toks / dt,
+            "host_bytes_per_token": pipe.stats["host_bytes_decoded"] / toks,
+            "dma_bytes_per_token": pipe.stats["dma_bytes"] / toks,
+        }
+        row(f"pipeline.{mode}", dt / steps,
+            f"tok/s={toks/dt:.0f};hostB/tok={out[mode]['host_bytes_per_token']:.2f};"
+            f"dmaB/tok={out[mode]['dma_bytes_per_token']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

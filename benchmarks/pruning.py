@@ -1,0 +1,44 @@
+"""Paper Fig. 3b: sorted vs unsorted input ordering (zone-map pruning).
+
+Sorting lineitem on l_shipdate / orders on o_orderdate (paper footnote 2)
+lets zone maps prune row groups for date-selective scans; the paper reports
+big wins for q6/q14/q15 and ~none for order-insensitive queries.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.core import DatapathEngine, tpch
+from repro.core.queries import QUERIES
+from repro.lakeformat.reader import LakeReader
+
+from benchmarks.common import DATA_DIR, row, timed
+
+
+def run(sf: float = 0.2) -> dict:
+    out = {}
+    readers = {}
+    for sorted_data in (False, True):
+        tag = "sorted" if sorted_data else "unsorted"
+        d = os.path.join(DATA_DIR, f"tpch_{tag}_sf{sf}")
+        if not os.path.exists(os.path.join(d, "lineitem.lake")):
+            tpch.write_tables(d, sf=sf, seed=0, sorted_data=sorted_data,
+                              row_group_size=16384)
+        readers[tag] = {k: LakeReader(os.path.join(d, f"{k}.lake"))
+                        for k in ("lineitem", "orders", "part")}
+
+    for name, q in QUERIES.items():
+        ts = {}
+        for tag in ("unsorted", "sorted"):
+            eng = DatapathEngine(backend="ref")
+            ts[tag] = timed(lambda e=eng, r=readers[tag]: q(e, r))
+        speedup = ts["unsorted"] / ts["sorted"]
+        out[name] = {"unsorted_s": ts["unsorted"], "sorted_s": ts["sorted"],
+                     "speedup": speedup}
+        row(f"pruning.{name}", ts["sorted"], f"speedup={speedup:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

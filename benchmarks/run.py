@@ -1,0 +1,66 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks.common.row).
+Sections:
+    breakdown       Fig. 2  decode/filter/rest per query
+    throughput      Fig. 1  raw vs pre-loaded vs pre-filtered
+    formats         Fig. 3a CSV/JSON vs columnar
+    pruning         Fig. 3b sorted vs unsorted zone-map pruning
+    kernels         §3      decode-core rates + DMA ratios
+    pipeline        §1      LM ingestion offload (host/engine/fused)
+Roofline (§Roofline) runs separately off the dry-run JSON:
+    python benchmarks/roofline.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller scale factors")
+    ap.add_argument("--json", default=None, help="also dump results as JSON")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    sf = 0.1 if args.fast else 0.2
+    results = {}
+    sections = []
+
+    from benchmarks import breakdown, formats, kernels_bench, pipeline_bench, pruning, throughput
+
+    sections = [
+        ("breakdown", lambda: breakdown.run(sf=sf)),
+        ("throughput", lambda: throughput.run(sf=sf)),
+        ("formats", lambda: formats.run(sf=0.1 if args.fast else 0.25)),
+        ("pruning", lambda: pruning.run(sf=sf)),
+        ("kernels", kernels_bench.run),
+        ("pipeline", lambda: pipeline_bench.run(n_tokens=500_000 if args.fast else 2_000_000)),
+    ]
+
+    failed = 0
+    for name, fn in sections:
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            results[name] = fn()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{name},FAILED,{type(e).__name__}", flush=True)
+            failed += 1
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""pytest root config: make `repro` (src layout) and `benchmarks`
+importable without installation.  Tests see ONE device — multi-device
+tests spawn subprocesses with XLA_FLAGS (tests/util.py)."""
+
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (os.path.join(ROOT, "src"), ROOT):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,58 @@
+"""Quickstart: the datapath engine in 40 lines.
+
+Writes a small lake table, runs a pushed-down scan (zone-map pruning +
+on-device decode + predicate + compaction), and prints what the host CPU
+never had to do.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import Cmp, DatapathEngine, ScanPlan, and_
+from repro.lakeformat.reader import LakeReader
+from repro.lakeformat.schema import ColumnSchema, TableSchema
+from repro.lakeformat.writer import write_table
+
+# 1. a table in the lake: 500k rows, sorted by timestamp (zone-map friendly)
+rng = np.random.default_rng(0)
+n = 500_000
+schema = TableSchema(
+    "events",
+    [
+        ColumnSchema("ts", "int32", "auto"),        # sorted -> DELTA
+        ColumnSchema("user", "int32", "bitpack"),
+        ColumnSchema("score", "float32", "plain"),
+        ColumnSchema("country", "str"),             # low-card -> DICT codes
+    ],
+)
+table = {
+    "ts": np.sort(rng.integers(0, 1_000_000, n)),
+    "user": rng.integers(0, 10_000, n),
+    "score": rng.random(n).astype(np.float32),
+    "country": [["DE", "US", "JP", "BR"][i] for i in rng.integers(0, 4, n)],
+}
+path = write_table("/tmp/events.lake", schema, table)
+reader = LakeReader(path)
+
+# 2. a pushed-down scan: the engine decodes + filters on DEVICE
+plan = ScanPlan(
+    "events",
+    columns=["user", "score"],
+    predicate=and_(
+        Cmp("ts", "between", (100_000, 150_000)),
+        Cmp("country", "eq", "DE"),
+    ),
+    compact=True,
+)
+engine = DatapathEngine(backend="ref")  # 'pallas' on TPU
+res = engine.scan(reader, plan)
+
+print(f"rows total            : {res.stats.rows_total}")
+print(f"row groups pruned     : {res.stats.row_groups_total - res.stats.row_groups_scanned}"
+      f" / {res.stats.row_groups_total}  (zone maps, before any byte was read)")
+print(f"encoded bytes touched : {res.stats.encoded_bytes:,}")
+print(f"decoded on device     : {res.stats.decoded_bytes:,} bytes "
+      f"(host CPU decoded: 0)")
+print(f"rows delivered        : {int(res.count)} (pre-filtered, compacted)")
+print(f"mean score            : {float(res.columns['score'][:int(res.count)].mean()):.4f}")

@@ -1,0 +1,47 @@
+"""End-to-end serving driver (the paper is a data-serving paper, so this is
+the primary e2e example): a small model served with batched requests
+through the slot-based continuous-batching engine.
+
+    PYTHONPATH=src python examples/serve_batch.py --requests 12 --slots 4
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.model import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=256)
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        eng.submit(Request(rid=i, tokens=rng.integers(0, cfg.vocab, (8 + i % 17,)),
+                           max_new_tokens=args.max_new))
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(r.out) for r in done)
+    print(f"[serve] {len(done)} requests, {total_tokens} tokens in {dt:.1f}s "
+          f"({total_tokens/dt:.1f} tok/s) over {eng.steps} engine ticks "
+          f"({args.slots} slots, continuous batching)")
+    for r in done[:3]:
+        print(f"  rid={r.rid} -> {r.out[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

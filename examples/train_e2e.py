@@ -1,0 +1,54 @@
+"""End-to-end training driver: corpus in the lake -> fused bit-packed
+batches -> decode inside the jitted step -> AdamW -> checkpoints.
+
+Defaults are CPU-sized (a ~25M-param qwen3-family model); pass --arch and
+--steps to scale up.  On re-run it resumes from the latest checkpoint.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 30
+"""
+
+import argparse
+import dataclasses
+import os
+
+from repro.configs import get_smoke_config
+from repro.data.corpus import write_corpus
+from repro.data.pipeline import TokenPipeline
+from repro.train.loop import train
+from repro.train.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--mode", default="fused", choices=["fused", "engine", "host"])
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    cfg = dataclasses.replace(cfg, d_model=args.d_model, n_layers=args.layers,
+                              d_ff=4 * args.d_model, vocab=8192)
+    print(f"[e2e] {cfg.arch_id}: {cfg.n_params()/1e6:.1f}M params")
+
+    corpus_dir = os.path.join(args.workdir, "corpus")
+    if not os.path.exists(corpus_dir):
+        write_corpus(corpus_dir, n_tokens=2_000_000, vocab=cfg.vocab, n_shards=2)
+    paths = [os.path.join(corpus_dir, f) for f in sorted(os.listdir(corpus_dir))]
+
+    pipe = TokenPipeline(paths, args.batch, args.seq, mode=args.mode,
+                         quality_min=20 if args.mode != "fused" else None)
+    optcfg = OptConfig(lr=3e-4, warmup_steps=10, total_steps=args.steps,
+                       weight_decay=0.1)
+    out = train(cfg, optcfg, pipe, steps=args.steps,
+                ckpt_dir=os.path.join(args.workdir, "ckpt"), ckpt_every=10)
+    print(f"[e2e] loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} "
+          f"in {out['wall_s']:.0f}s; pipeline stats: {pipe.stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""core — the paper's primary contribution: the datapath offload engine.
+
+plan.py      pushed-down scan plans + predicate algebra ("post-optimizer hook")
+zonemap.py   metadata-only row-group pruning
+engine.py    DatapathEngine: decode + filter + compact, on-device
+cache.py     BlockCache ("SSD table cache")
+queries.py   mini TPC-H analytical suite (the "DuckDB host")
+tpch.py      synthetic TPC-H-like data generator
+"""
+
+from repro.core.cache import BlockCache  # noqa: F401
+from repro.core.engine import DatapathEngine, ScanResult, ScanStats  # noqa: F401
+from repro.core.plan import (  # noqa: F401
+    And,
+    BloomProbe,
+    Cmp,
+    InSet,
+    Or,
+    ScanPlan,
+    and_,
+    or_,
+)
+from repro.core.zonemap import prune_row_groups  # noqa: F401

@@ -1,0 +1,82 @@
+"""BlockCache — the paper's "SSD table cache", host-memory edition.
+
+Caches (a) decoded row-group columns ("pre-loaded" configuration) and
+(b) whole pre-filtered scan results keyed by plan signature ("pre-filtered"
+configuration), with LRU eviction under a byte budget.  On a real
+deployment the same interface fronts host NVMe; here entries are jax
+arrays in host/device memory (one CPU device — identical address space).
+
+Metadata and orchestration (which row groups are cached vs must be fetched
+and decoded) is exactly the open challenge the paper flags for the SSD
+cache; `plan_fetch()` returns the cached/missing split the engine uses to
+route work.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Any, Dict, Hashable, List, Optional, Tuple
+
+
+def _nbytes(obj) -> int:
+    if hasattr(obj, "nbytes"):
+        return int(obj.nbytes)
+    if isinstance(obj, dict):
+        return sum(_nbytes(v) for v in obj.values())
+    if isinstance(obj, (list, tuple)):
+        return sum(_nbytes(v) for v in obj)
+    return 64
+
+
+class BlockCache:
+    def __init__(self, capacity_bytes: int = 2 << 30):
+        self.capacity = capacity_bytes
+        self._store: "collections.OrderedDict[Hashable, Any]" = collections.OrderedDict()
+        self._bytes: Dict[Hashable, int] = {}
+        self.used = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Hashable):
+        if key in self._store:
+            self._store.move_to_end(key)
+            self.hits += 1
+            return self._store[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Hashable, value: Any):
+        nb = _nbytes(value)
+        if nb > self.capacity:
+            return  # never cache something bigger than the device
+        if key in self._store:
+            self.used -= self._bytes[key]
+        self._store[key] = value
+        self._store.move_to_end(key)
+        self._bytes[key] = nb
+        self.used += nb
+        while self.used > self.capacity and self._store:
+            k, _ = self._store.popitem(last=False)
+            self.used -= self._bytes.pop(k)
+            self.evictions += 1
+
+    def plan_fetch(self, keys: List[Hashable]) -> Tuple[List[Hashable], List[Hashable]]:
+        """Split keys into (cached, missing) without touching LRU order."""
+        cached = [k for k in keys if k in self._store]
+        missing = [k for k in keys if k not in self._store]
+        return cached, missing
+
+    def clear(self):
+        self._store.clear()
+        self._bytes.clear()
+        self.used = 0
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._store),
+            "bytes": self.used,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }

@@ -1,0 +1,143 @@
+"""Scan plans and the pushdown predicate algebra.
+
+This is the framework's "post-optimizer hook" (paper §2): a query's plan is
+rewritten so that its filtered table scans become DatapathEngine scans —
+decode + predicate + projection evaluated in the datapath — and the host
+query only ever sees pre-filtered columns.
+
+Predicate expressions form a small algebra (Cmp / And / Or / InSet /
+BloomProbe) that the engine can evaluate entirely on-device.  String
+constants are folded to dictionary codes at bind time (bind_plan), mirroring
+how real engines constant-fold against file metadata.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import List, Optional, Sequence, Tuple, Union
+
+Value = Union[int, float, str]
+
+
+@dataclasses.dataclass(frozen=True)
+class Cmp:
+    column: str
+    op: str  # 'lt','le','gt','ge','eq','ne','between'
+    value: Union[Value, Tuple[Value, Value]]
+
+
+@dataclasses.dataclass(frozen=True)
+class InSet:
+    column: str
+    values: Tuple[Value, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class BloomProbe:
+    """Probe-side semijoin filter: keep rows whose `column` hits the bloom."""
+
+    column: str
+    n_bits: int = 1 << 15
+    n_hashes: int = 4
+    name: str = "bloom"  # key into ScanRequest.blooms
+
+
+@dataclasses.dataclass(frozen=True)
+class And:
+    children: Tuple["Expr", ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Or:
+    children: Tuple["Expr", ...]
+
+
+Expr = Union[Cmp, InSet, BloomProbe, And, Or]
+
+
+def and_(*children: Expr) -> Expr:
+    return And(tuple(children))
+
+
+def or_(*children: Expr) -> Expr:
+    return Or(tuple(children))
+
+
+def expr_columns(e: Optional[Expr]) -> List[str]:
+    if e is None:
+        return []
+    if isinstance(e, (Cmp, InSet, BloomProbe)):
+        return [e.column]
+    cols: List[str] = []
+    for c in e.children:
+        cols.extend(expr_columns(c))
+    return cols
+
+
+@dataclasses.dataclass
+class ScanPlan:
+    """One pushed-down table scan."""
+
+    table: str  # reader key / path
+    columns: List[str]  # projection the consumer needs (post-filter)
+    predicate: Optional[Expr] = None
+    compact: bool = False  # materialize survivors packed to the front
+
+    def all_columns(self) -> List[str]:
+        seen = dict.fromkeys(self.columns)
+        for c in expr_columns(self.predicate):
+            seen.setdefault(c)
+        return list(seen)
+
+    def signature(self) -> str:
+        """Stable id for prefiltered-cache keys."""
+        blob = json.dumps(
+            {
+                "table": self.table,
+                "columns": self.columns,
+                "pred": _expr_repr(self.predicate),
+                "compact": self.compact,
+            },
+            sort_keys=True,
+        )
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def _expr_repr(e: Optional[Expr]):
+    if e is None:
+        return None
+    if isinstance(e, Cmp):
+        return ["cmp", e.column, e.op, e.value]
+    if isinstance(e, InSet):
+        return ["in", e.column, list(e.values)]
+    if isinstance(e, BloomProbe):
+        return ["bloom", e.column, e.n_bits, e.n_hashes, e.name]
+    tag = "and" if isinstance(e, And) else "or"
+    return [tag] + [_expr_repr(c) for c in e.children]
+
+
+def bind_expr(e: Optional[Expr], reader) -> Optional[Expr]:
+    """Fold string constants to dictionary codes using file metadata."""
+    if e is None:
+        return None
+    if isinstance(e, Cmp):
+        v = e.value
+        if isinstance(v, str):
+            v = reader.string_code(e.column, v)
+        elif isinstance(v, tuple):
+            v = tuple(
+                reader.string_code(e.column, x) if isinstance(x, str) else x for x in v
+            )
+        return Cmp(e.column, e.op, v)
+    if isinstance(e, InSet):
+        vals = tuple(
+            reader.string_code(e.column, x) if isinstance(x, str) else x
+            for x in e.values
+        )
+        return InSet(e.column, vals)
+    if isinstance(e, BloomProbe):
+        return e
+    children = tuple(bind_expr(c, reader) for c in e.children)
+    return And(children) if isinstance(e, And) else Or(children)

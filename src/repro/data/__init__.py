@@ -1,0 +1,4 @@
+"""Data-lake-backed training data pipeline."""
+
+from repro.data.corpus import corpus_schema, write_corpus, synth_corpus  # noqa: F401
+from repro.data.pipeline import TokenPipeline  # noqa: F401

@@ -1,0 +1,8 @@
+"""Distributed runtime: sharding rules, collectives, fault tolerance."""
+
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingCtx,
+    constrain,
+    local_ctx,
+    spec_for,
+)

@@ -1,0 +1,108 @@
+"""Distributed-optimization collectives.
+
+1. `hierarchical_psum` — topology-aware gradient reduction for the
+   (pod, data, model) mesh: reduce-scatter over the fast intra-pod ICI
+   axis, all-reduce only the 1/N shard over the slow cross-pod DCN axis,
+   then all-gather intra-pod.  Cross-pod bytes drop by the data-axis size
+   (16x here) versus a flat all-reduce.
+
+2. `compressed_psum` — int8-quantized cross-pod all-reduce with error
+   feedback: q = round((g+err)/scale); the residual feeds back into the
+   next step, so quantization error accumulates to zero over time instead
+   of biasing the trajectory.  Cross-pod bytes drop 4x (f32->i8).
+
+Both are expressed with shard_map + jax.lax collectives (the JAX-native
+mapping of the NCCL patterns, per the hardware-adaptation brief) and are
+unit-tested for exactness/convergence on an 8-device host mesh.  GSPMD
+inserts plain all-reduces on its own; these are the *explicit-DP* variants
+a production launcher swaps in for the cross-pod hop (used by
+make_compressed_dp_fn below).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+# ---------------------------------------------------------------------------
+# hierarchical psum (inside shard_map over ('pod','data'))
+# ---------------------------------------------------------------------------
+
+
+def hierarchical_psum(x: jax.Array, intra_axis: str, inter_axis: str) -> jax.Array:
+    """Sum over both axes; cross-`inter_axis` traffic is 1/size(intra)."""
+    n = jax.lax.axis_size(intra_axis)
+    pad = (-x.shape[0]) % n
+    xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)) if pad else x
+    shard = jax.lax.psum_scatter(xp, intra_axis, scatter_dimension=0, tiled=True)
+    shard = jax.lax.psum(shard, inter_axis)  # only 1/n of bytes cross pods
+    full = jax.lax.all_gather(shard, intra_axis, axis=0, tiled=True)
+    return full[: x.shape[0]] if pad else full
+
+
+# ---------------------------------------------------------------------------
+# int8 compressed psum with error feedback
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (q int8, scale f32 scalar, new_err)."""
+    comb = x.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(comb)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(comb / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, comb - deq
+
+
+def compressed_psum(x: jax.Array, err: jax.Array, axis: str
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """int8 all-gather + local dequant-sum over `axis` (error feedback).
+
+    Bytes on the wire: n*size(int8) vs ring-all-reduce 2*size(f32) — a 8x
+    reduction at n=2 pods.  Returns (summed f32, new local error)."""
+    q, scale, new_err = quantize_int8(x, err)
+    qs = jax.lax.all_gather(q, axis)  # (n, ...)
+    ss = jax.lax.all_gather(scale, axis)  # (n,)
+    total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=(0, 0))
+    return total, new_err
+
+
+# ---------------------------------------------------------------------------
+# explicit-DP wrapper: per-pod grads -> compressed cross-pod reduction
+# ---------------------------------------------------------------------------
+
+
+def make_compressed_dp_fn(grad_fn: Callable, mesh: Mesh, pod_axis: str = "pod"):
+    """Wrap a per-shard gradient function with int8 cross-pod reduction.
+
+    grad_fn(batch_shard) -> grads pytree (local).  Returns fn(batch, err)
+    -> (summed grads, new err) under shard_map over the pod axis."""
+
+    def inner(batch, err):
+        g = grad_fn(batch)
+        flat_g, tdef = jax.tree.flatten(g)
+        flat_e = jax.tree.leaves(err)
+        out, errs = [], []
+        for gl, el in zip(flat_g, flat_e):
+            s, ne = compressed_psum(gl, el, pod_axis)
+            out.append(s)
+            errs.append(ne)
+        return jax.tree.unflatten(tdef, out), jax.tree.unflatten(tdef, errs)
+
+    return shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(P(pod_axis), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )

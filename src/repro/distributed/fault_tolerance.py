@@ -1,0 +1,115 @@
+"""Fault tolerance at 1000+-node posture: heartbeats, stragglers, elasticity.
+
+No real cluster exists in this container, so the *policies* are built and
+tested against simulated telemetry, and the *mechanisms* they trigger
+(checkpoint restore, elastic re-mesh) are real and tested:
+
+  HeartbeatMonitor  — declares hosts dead after `timeout_s` silence;
+                      produces a RestartPlan (same-size restart if spares
+                      exist, else shrink to the largest feasible mesh)
+  StragglerDetector — robust per-step timing stats (median + MAD); flags
+                      hosts slower than `factor` x median; policy choices:
+                      'observe' | 'skip_batch' (drop the straggler's
+                      microbatch that step) | 'evict' (treat as failed)
+  plan_elastic_mesh — largest (data, model) mesh fitting the survivors,
+                      keeping the model axis (TP needs full shards — you
+                      shrink DP, never TP)
+
+CheckpointManager.restore_latest + distributed.sharding re-spec the arrays
+onto whatever mesh the plan selects (tests/test_fault_tolerance.py runs a
+kill -> shrink -> resume cycle on host devices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class RestartPlan:
+    dead_hosts: List[str]
+    surviving_hosts: List[str]
+    action: str  # 'none' | 'restart_same' | 'shrink'
+    new_mesh: Optional[Tuple[int, int]] = None  # (data, model)
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: List[str], timeout_s: float = 60.0,
+                 spares: int = 0, clock=time.monotonic):
+        self.timeout = timeout_s
+        self.spares = spares
+        self.clock = clock
+        self.last_seen: Dict[str, float] = {h: clock() for h in hosts}
+
+    def beat(self, host: str, at: Optional[float] = None):
+        self.last_seen[host] = self.clock() if at is None else at
+
+    def dead_hosts(self) -> List[str]:
+        now = self.clock()
+        return [h for h, t in self.last_seen.items() if now - t > self.timeout]
+
+    def plan(self, mesh_shape: Tuple[int, int]) -> RestartPlan:
+        dead = self.dead_hosts()
+        alive = [h for h in self.last_seen if h not in dead]
+        if not dead:
+            return RestartPlan([], alive, "none")
+        if len(dead) <= self.spares:
+            return RestartPlan(dead, alive, "restart_same", mesh_shape)
+        new_mesh = plan_elastic_mesh(len(alive), mesh_shape)
+        return RestartPlan(dead, alive, "shrink", new_mesh)
+
+
+def plan_elastic_mesh(n_hosts_alive: int, old_mesh: Tuple[int, int],
+                      chips_per_host: int = 4) -> Tuple[int, int]:
+    """Largest (data, model) mesh on surviving chips; model axis preserved
+    (TP shards are not divisible), data axis shrinks to the largest
+    power-of-two that fits."""
+    data, model = old_mesh
+    chips = n_hosts_alive * chips_per_host
+    max_data = max(1, chips // model)
+    new_data = 1
+    while new_data * 2 <= max_data:
+        new_data *= 2
+    return (new_data, model)
+
+
+class StragglerDetector:
+    def __init__(self, factor: float = 2.0, min_samples: int = 5,
+                 policy: str = "observe"):
+        self.factor = factor
+        self.min_samples = min_samples
+        self.policy = policy
+        self.times: Dict[str, List[float]] = {}
+
+    def record(self, host: str, step: int, seconds: float):
+        self.times.setdefault(host, []).append(seconds)
+
+    def stragglers(self) -> List[str]:
+        if not self.times:
+            return []
+        recent = {h: ts[-self.min_samples:] for h, ts in self.times.items()
+                  if len(ts) >= self.min_samples}
+        if not recent:
+            return []
+        med = statistics.median(v for ts in recent.values() for v in ts)
+        return [h for h, ts in recent.items()
+                if statistics.median(ts) > self.factor * med]
+
+    def action_for(self, host: str) -> str:
+        if host not in self.stragglers():
+            return "none"
+        return {"observe": "log", "skip_batch": "skip_batch", "evict": "evict"}[self.policy]
+
+    def report(self) -> dict:
+        out = {}
+        for h, ts in self.times.items():
+            out[h] = {
+                "n": len(ts),
+                "median_s": statistics.median(ts),
+                "p_max_s": max(ts),
+            }
+        out["stragglers"] = self.stragglers()
+        return out

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the datapath engine + consumer hot spots.
+
+Each kernel <name>.py carries a pl.pallas_call with explicit BlockSpec VMEM
+tiling; ref.py holds the pure-jnp oracles; ops.py is the public dispatching
+API.  See kernels/EXAMPLE.md and DESIGN.md §4.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

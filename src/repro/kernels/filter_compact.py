@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: stream compaction (the pushed-down filter's output stage).
+
+A streaming filter on an FPGA emits a variable-length stream; TPUs need
+static shapes.  The TPU-idiomatic equivalent: per 1024-value block, build
+the permutation one-hot P[p, j] = (prefix(mask)[j]-1 == p) & mask[j] and
+contract it with the values on the MXU, packing survivors to the front.
+Per-block survivor counts come along for free; the engine stitches blocks
+with an exclusive scan over counts (core/engine.py).
+
+Exactness: float columns are exact in f32; int columns are compacted via
+the f32 MXU only when |v| < 2^24, else the ops wrapper splits into two
+16-bit halves and recombines (two matmuls, still exact).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _prefix_sum_last(x: jax.Array) -> jax.Array:
+    n = x.shape[-1]
+    sh = 1
+    while sh < n:
+        x = x + jnp.pad(x[..., :-sh], [(0, 0)] * (x.ndim - 1) + [(sh, 0)])
+        sh *= 2
+    return x
+
+
+def _kernel(vals_ref, mask_ref, out_ref, cnt_ref):
+    vals = vals_ref[...]  # (1, B)
+    m = mask_ref[...].astype(jnp.int32)  # (1, B)
+    pos = _prefix_sum_last(m) - 1  # (1, B)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (1, BLOCK, 1), 1)  # (1, p, 1)
+    onehot = (pos[:, None, :] == slots) & (m[:, None, :] > 0)  # (1, p, j)
+    out = jax.lax.dot_general(
+        onehot.astype(jnp.float32),
+        vals[:, :, None].astype(jnp.float32),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )[..., 0]
+    out_ref[...] = out.astype(out_ref.dtype)
+    cnt_ref[...] = jnp.sum(m, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def filter_compact_pallas(
+    values: jax.Array, mask: jax.Array, *, interpret: bool = True
+):
+    """values (nblk, 1024), mask (nblk, 1024) int32/bool ->
+    (compacted (nblk, 1024), counts (nblk,))."""
+    nblk = values.shape[0]
+    out, cnt = pl.pallas_call(
+        _kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, BLOCK), values.dtype),
+            jax.ShapeDtypeStruct((nblk, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(values, mask.astype(jnp.int32))
+    return out, cnt[:, 0]

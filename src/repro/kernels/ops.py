@@ -1,0 +1,133 @@
+"""Public jit'd kernel API: dispatches Pallas kernel vs pure-jnp reference.
+
+backend:
+  'ref'    — pure jnp (default on CPU; also the dry-run path, since Pallas
+             TPU lowering is unavailable on the CPU dry-run backend)
+  'pallas' — pl.pallas_call (interpret=True automatically off-TPU)
+  'auto'   — 'pallas' on TPU, 'ref' elsewhere
+
+Every function here is shape/dtype-stable across backends; tests assert
+exact agreement.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitunpack import bitunpack_pallas
+from repro.kernels.bloom_probe import bloom_probe_pallas
+from repro.kernels.delta_decode import delta_decode_pallas
+from repro.kernels.dict_decode import dict_decode_pallas
+from repro.kernels.filter_compact import filter_compact_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_scan import fused_scan_pallas
+from repro.kernels.rle_decode import rle_decode_pallas
+
+
+def _resolve(backend: str) -> Tuple[str, bool]:
+    """-> (backend, interpret)"""
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "auto":
+        backend = "pallas" if on_tpu else "ref"
+    return backend, not on_tpu
+
+
+def bitunpack(packed, k: int, n: Optional[int] = None, *, backend: str = "auto"):
+    """(nblocks,k,128) uint32 -> flat (n,) int32 (or (nb,32,128) if n is None)."""
+    backend, interp = _resolve(backend)
+    out = (
+        bitunpack_pallas(packed, k, interpret=interp)
+        if backend == "pallas"
+        else ref.bitunpack(packed, k)
+    )
+    return out if n is None else out.reshape(-1)[:n]
+
+
+def dict_decode(packed, dictionary, k: int, n: Optional[int] = None, *, backend="auto"):
+    backend, interp = _resolve(backend)
+    out = (
+        dict_decode_pallas(packed, dictionary, k, interpret=interp)
+        if backend == "pallas"
+        else ref.dict_decode(packed, dictionary, k)
+    )
+    return out if n is None else out.reshape(-1)[:n]
+
+
+def rle_decode(values, ends, n: Optional[int] = None, *, backend="auto"):
+    backend, interp = _resolve(backend)
+    out = (
+        rle_decode_pallas(values, ends, interpret=interp)
+        if backend == "pallas"
+        else ref.rle_decode(values, ends)
+    )
+    return out if n is None else out.reshape(-1)[:n]
+
+
+def delta_decode(packed, bases, k: int, n: Optional[int] = None, *, backend="auto"):
+    backend, interp = _resolve(backend)
+    out = (
+        delta_decode_pallas(packed, bases, k, interpret=interp)
+        if backend == "pallas"
+        else ref.delta_decode(packed, bases, k)
+    )
+    return out if n is None else out.reshape(-1)[:n]
+
+
+def filter_compact(values, mask, *, backend="auto"):
+    """values (nblk,1024), mask (nblk,1024) -> (compacted, counts).
+
+    Ints with |v| >= 2^24 are split into two 16-bit halves so the f32 MXU
+    contraction stays exact.
+    """
+    backend, interp = _resolve(backend)
+    fn = (
+        (lambda v, m: filter_compact_pallas(v, m, interpret=interp))
+        if backend == "pallas"
+        else ref.filter_compact
+    )
+    if jnp.issubdtype(values.dtype, jnp.integer):
+        v = values.astype(jnp.int32)
+        hi16 = jax.lax.shift_right_arithmetic(v, 16)
+        lo16 = v & 0xFFFF
+        chi, cnt = fn(hi16, mask)
+        clo, _ = fn(lo16, mask)
+        out = jax.lax.shift_left(chi.astype(jnp.int32), 16) | clo.astype(jnp.int32)
+        return out.astype(values.dtype), cnt
+    return fn(values, mask)
+
+
+def bloom_build(keys, n_bits: int, n_hashes: int = 4):
+    return ref.bloom_build(keys, n_bits, n_hashes)
+
+
+def bloom_probe(keys, bits, n_hashes: int = 4, *, backend="auto"):
+    """keys (nblk,1024) -> membership (nblk,1024) bool."""
+    backend, interp = _resolve(backend)
+    if backend == "pallas":
+        return bloom_probe_pallas(keys, bits, n_hashes=n_hashes, interpret=interp) > 0
+    return ref.bloom_probe(keys, bits, n_hashes)
+
+
+def fused_scan(packed, k: int, lo, hi, dictionary=None, *, backend="auto"):
+    backend, interp = _resolve(backend)
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    if backend == "pallas":
+        mask, cnt = fused_scan_pallas(packed, k, lo, hi, dictionary, interpret=interp)
+        return mask > 0, cnt
+    return ref.fused_scan(packed, k, lo, hi, dictionary)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None, backend="auto",
+                    bq: int = 256, bk: int = 256):
+    backend, interp = _resolve(backend)
+    if backend == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, scale=scale, bq=bq, bk=bk,
+            interpret=interp,
+        )
+    return ref.mha(q, k, v, causal=causal, window=window, scale=scale)

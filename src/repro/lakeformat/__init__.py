@@ -1,0 +1,29 @@
+"""lakeformat: the columnar, TPU-decodable storage substrate ("Parquet" analog).
+
+Encodings are co-designed with the Pallas decoders (see DESIGN.md §4):
+  - BITPACK(k): lane-transposed k-bit packing; decode is pure shift/mask VPU ops
+  - DICT(k):    dictionary + bitpacked codes
+  - RLE:        block-aligned runs with a fixed per-block run window
+  - DELTA(k):   zigzag deltas, bitpacked, blocked prefix-sum decode
+  - PLAIN:      raw values
+
+Files carry per-row-group zone maps (min/max/count) for pruning.
+"""
+
+from repro.lakeformat.encodings import (  # noqa: F401
+    PACK_BLOCK,
+    LANES,
+    SUBLANES,
+    RLE_OUT_BLOCK,
+    RLE_WINDOW,
+    Encoding,
+    EncodedColumn,
+    encode_column,
+    decode_column_host,
+    bitpack_encode,
+    bitpack_decode_np,
+    bits_needed,
+)
+from repro.lakeformat.schema import ColumnSchema, TableSchema  # noqa: F401
+from repro.lakeformat.writer import LakeWriter, write_table  # noqa: F401
+from repro.lakeformat.reader import LakeReader  # noqa: F401

@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, with 512 placeholder host devices.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both --json out.json
+
+Per cell this prints/records:
+  - compiled.memory_analysis()  (per-device bytes: args/outputs/temps/peak)
+  - compiled.cost_analysis()    (HLO FLOPs + bytes for §Roofline)
+  - collective bytes parsed from the post-SPMD optimized HLO
+A failure to lower/compile (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the framework — the suite must be green.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ALIASES, get_config, list_archs  # noqa: E402
+from repro.distributed.sharding import ShardingCtx  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import production_ctx  # noqa: E402
+from repro.models.model import decode_step, forward_train, prefill  # noqa: E402
+from repro.train.optimizer import OptConfig  # noqa: E402
+
+# while-loop-aware HLO accounting (see benchmarks/hlo_analysis.py)
+import os as _os  # noqa: E402
+import sys as _sys  # noqa: E402
+
+_sys.path.insert(0, _os.path.join(_os.path.dirname(__file__), "..", "..", "..", "benchmarks"))
+from hlo_analysis import analyze_hlo  # noqa: E402
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               microbatches: int | None = None, strategy: str = "tp",
+               remat_policy: str | None = None):
+    cfg = get_config(arch)
+    import dataclasses
+    if microbatches:
+        cfg = dataclasses.replace(cfg, microbatches=microbatches)
+    if remat_policy:
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    ok, why = S.cell_supported(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": why}
+
+    if strategy == "auto":
+        strategy = "fsdp_ep" if cfg.moe_experts else "fsdp"
+    ctx = production_ctx(multi_pod=multi_pod, strategy=strategy)
+    info = S.SHAPES[shape_name]
+    pspecs = S.param_specs(cfg, ctx)
+    t0 = time.time()
+
+    with jax.set_mesh(ctx.mesh):
+        if info["kind"] == "train":
+            from repro.train.loop import make_train_step
+            from repro.train.optimizer import init_opt_state
+
+            batch = S.batch_specs(cfg, shape_name, ctx)
+            optcfg = OptConfig(
+                name="adafactor" if cfg.n_params() > 5e10 else "adamw",
+                moments_dtype="bfloat16",
+            )
+            opt_specs = jax.eval_shape(lambda p: init_opt_state(p, optcfg), pspecs)
+            # moments inherit param shardings; scalars replicated
+            def _opt_sharded(leaf, path_is_scalar=False):
+                return leaf
+            step = make_train_step(cfg, optcfg, ctx)
+            lowered = jax.jit(step).lower(pspecs, opt_specs, batch)
+        elif info["kind"] == "prefill":
+            batch = S.batch_specs(cfg, shape_name, ctx)
+            lowered = jax.jit(
+                lambda p, b: prefill(p, b, cfg, ctx, cache_len=info["seq"])
+            ).lower(pspecs, batch)
+        else:  # decode
+            B = info["batch"]
+            cache = S.cache_specs_from_eval(cfg, shape_name, ctx)
+            tok = S._sds((B, 1), jnp.int32, ("batch", None), ctx)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jax.jit(
+                lambda p, t, c, q: decode_step(p, t, c, q, cfg, ctx)
+            ).lower(pspecs, tok, cache, pos)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = analyze_hlo(compiled.as_text())
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "strategy": strategy,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # raw XLA numbers (per device; while bodies counted once):
+        "xla_flops_raw": float(cost.get("flops", -1)) if cost else -1.0,
+        "xla_bytes_raw": float(cost.get("bytes accessed", -1)) if cost else -1.0,
+        # trip-aware per-device accounting (benchmarks/hlo_analysis.py):
+        "flops": hlo.flops,
+        "dot_bytes": hlo.dot_bytes,
+        "collective_bytes": hlo.collective_bytes,
+        "collectives": hlo.collective_by_kind,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(S.SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--strategy", default="tp", choices=["tp", "fsdp", "fsdp_ep", "auto"])
+    ap.add_argument("--remat-policy", default=None, choices=[None, "full", "dots"])
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(S.SHAPES) if args.all or not args.shape else [args.shape]
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+
+    results = []
+    failed = 0
+    for mp in pods:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = lower_cell(arch, shape, mp, args.microbatches, args.strategy,
+                                     args.remat_policy)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                    failed += 1
+                results.append(rec)
+                if rec["status"] == "ok":
+                    mem = rec["memory"]
+                    peak = mem.get("peak_bytes") or 0
+                    print(f"[dryrun] OK  {tag}: compile {rec['compile_s']}s, "
+                          f"flops {rec['flops']:.3e}, coll {rec['collective_bytes']:.3e}B, "
+                          f"peak/device {peak/2**30:.2f} GiB", flush=True)
+                elif rec["status"] == "skipped":
+                    print(f"[dryrun] SKIP {tag}: {rec['reason']}", flush=True)
+                else:
+                    print(f"[dryrun] FAIL {tag}: {rec['error']}", flush=True)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    print(f"[dryrun] {sum(r['status']=='ok' for r in results)} ok, "
+          f"{sum(r['status']=='skipped' for r in results)} skipped, {failed} failed")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e-256).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the pod axis is pure
+data parallelism over DCN, the inner axes ride ICI.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import ShardingCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — "
+            "run under launch/dryrun.py (it sets XLA_FLAGS first)"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def production_ctx(*, multi_pod: bool = False, strategy: str = "tp") -> ShardingCtx:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    return ShardingCtx(mesh=mesh, dp_axes=dp_axes, strategy=strategy)
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

@@ -1,0 +1,131 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation ever happens here — weak-type-correct, shardable
+specs only.  The four assigned shapes:
+
+    train_4k     seq 4,096   global_batch 256   -> train_step
+    prefill_32k  seq 32,768  global_batch 32    -> prefill_step
+    decode_32k   seq 32,768  global_batch 128   -> serve_step (1 token, KV=32k)
+    long_500k    seq 524,288 global_batch 1     -> serve_step (sub-quadratic only)
+
+Train/prefill token inputs are BIT-PACKED (the datapath feature is on in
+production), at k = ceil(log2 vocab) bits in 4096-token blocks.
+Frontend stubs ([audio]/[vlm]) are precomputed embedding specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingCtx, sharding_for, spec_for
+from repro.models.config import ModelConfig
+from repro.models.model import packed_token_shape, param_shapes, token_bits
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 512k decode requires sub-quadratic attention (DESIGN.md §6)"
+    return True, ""
+
+
+def _sds(shape, dtype, dims, ctx: ShardingCtx, activation: bool = True):
+    # inputs/caches are data (activation path: strategy-aware batch widening)
+    sh = sharding_for(dims, ctx, shape, activation=activation) if ctx.enabled else None
+    if sh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def param_specs(cfg: ModelConfig, ctx: ShardingCtx):
+    shapes, dims = param_shapes(cfg)
+    dt = jnp.dtype(cfg.dtype)
+
+    def build(shp, dm, name):
+        dtype = jnp.float32 if name in ("A_log", "dt_bias") else dt
+        return _sds(tuple(shp), dtype, dm, ctx, activation=False)  # storage sharding
+
+    out: Dict[str, Any] = {}
+    for name, shp in shapes.items():
+        if name == "segments":
+            out["segments"] = [
+                {k: build(s, dims["segments"][i][k], k) for k, s in seg.items()}
+                for i, seg in enumerate(shapes["segments"])
+            ]
+        else:
+            out[name] = build(shp, dims[name], name)
+    return out
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, ctx: ShardingCtx,
+                packed: bool = True) -> Dict[str, Any]:
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    dt = jnp.dtype(cfg.dtype)
+    batch: Dict[str, Any] = {}
+    if info["kind"] in ("train", "prefill"):
+        if packed and cfg.decode_bitpack and S % 4096 == 0:
+            shp = packed_token_shape(cfg, B, S)
+            batch["packed"] = _sds(shp, jnp.uint32, ("batch", None, None, None), ctx)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32, ("batch", None), ctx)
+        if cfg.family == "vlm":
+            batch["embeds"] = _sds((B, cfg.vision_tokens, cfg.d_model), dt,
+                                   ("batch", None, None), ctx)
+        if cfg.is_encdec:
+            batch["enc_embeds"] = _sds((B, cfg.encoder_seq, cfg.d_model), dt,
+                                       ("batch", None, None), ctx)
+    return batch
+
+
+def cache_sharding_dims(shape: Tuple[int, ...], ctx: ShardingCtx):
+    """Heuristic logical dims for cache leaves (L, B, ...): batch on dp,
+    largest remaining tp-divisible axis on model."""
+    dims: list = [None] * len(shape)
+    if len(shape) >= 2:
+        dims[1] = "batch"
+    tp = ctx.tp if ctx.enabled else 1
+    if tp > 1 and len(shape) > 2:
+        best, best_size = None, 0
+        for i in range(2, len(shape)):
+            if shape[i] % tp == 0 and shape[i] > best_size:
+                best, best_size = i, shape[i]
+        if best is not None:
+            dims[best] = "seq_tp"
+    return tuple(dims)
+
+
+def cache_specs_from_eval(cfg: ModelConfig, shape_name: str, ctx: ShardingCtx):
+    """Shape-infer the decode cache via eval_shape of prefill (no compile),
+    then attach shardings per cache_sharding_dims."""
+    from repro.models.model import prefill
+
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    dt = jnp.dtype(cfg.dtype)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["embeds"] = jax.ShapeDtypeStruct((B, cfg.vision_tokens, cfg.d_model), dt)
+    if cfg.is_encdec:
+        batch["enc_embeds"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), dt)
+    pspecs = param_specs(cfg, ctx)
+    _, cache_shape = jax.eval_shape(
+        lambda p, b: prefill(p, b, cfg, ctx, cache_len=S), pspecs, batch
+    )
+
+    def attach(leaf):
+        dims = cache_sharding_dims(leaf.shape, ctx)
+        return _sds(leaf.shape, leaf.dtype, dims, ctx)
+
+    return jax.tree.map(attach, cache_shape)

@@ -1,0 +1,62 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --corpus /data/corpus --steps 1000 [--mesh single|multi|none]
+
+On real hardware the mesh flags select the production (16,16) or
+(2,16,16) topology; `--mesh none` runs single-device (CPU smoke).
+`--smoke` swaps in the reduced config.
+"""
+
+import argparse
+import dataclasses
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--corpus", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--mesh", default="none", choices=["none", "single", "multi"])
+    ap.add_argument("--mode", default="fused", choices=["fused", "engine", "host"])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    if args.mesh == "multi":
+        os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data.pipeline import TokenPipeline
+    from repro.distributed.sharding import local_ctx
+    from repro.launch.mesh import production_ctx
+    from repro.train.loop import train
+    from repro.train.optimizer import OptConfig
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.microbatches > 1:
+        cfg = dataclasses.replace(cfg, microbatches=args.microbatches)
+    ctx = local_ctx() if args.mesh == "none" else production_ctx(multi_pod=args.mesh == "multi")
+
+    paths = [os.path.join(args.corpus, f) for f in sorted(os.listdir(args.corpus))
+             if f.endswith(".lake")]
+    pipe = TokenPipeline(paths, args.batch, args.seq, mode=args.mode)
+    optcfg = OptConfig(
+        name="adafactor" if cfg.n_params() > 5e10 else "adamw",
+        lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+        total_steps=args.steps,
+    )
+    out = train(cfg, optcfg, pipe, steps=args.steps, ctx=ctx,
+                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    print(f"[launch.train] done: {len(out['losses'])} steps, "
+          f"final loss {out['losses'][-1]:.4f}, stragglers: {out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Model zoo: the ten assigned architectures as composable JAX modules."""
+
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    build_model,
+    init_params,
+    loss_fn,
+    param_dims,
+)

@@ -1,0 +1,191 @@
+"""Shared model layers: norms, rotary, GQA attention (TP- or SP-parallel),
+GLU MLPs, embeddings.
+
+Attention parallelism is divisibility-driven (see distributed/sharding.py):
+  - head-parallel (Megatron TP) when n_heads and n_kv divide the model axis,
+  - sequence-parallel otherwise (q sharded on Sq, K/V replicated): exact
+    same math, no head-count constraint — this is how 40H/25H/56H archs run
+    on a 16-way model axis.
+Decode attention shards the KV cache on Skv (flash-decode); GSPMD inserts
+the small softmax-statistics all-reduces.
+
+The blocked q-chunk implementation keeps HLO compact (lax.scan) and caps
+the live score tensor at (B, H, chunk, Skv) — required for 32k/500k cells.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingCtx, constrain
+
+# ---------------------------------------------------------------------------
+# norms / rotary
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6, plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (xf * scale).astype(dt)
+
+
+def rotary(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _attn_parallelism(n_heads: int, n_kv: int, ctx: ShardingCtx) -> str:
+    tp = ctx.tp
+    if tp == 1 or ctx.strategy in ("fsdp", "fsdp_ep"):
+        return "none"  # ZeRO: attention fully local per batch shard
+    return "head" if (n_heads % tp == 0 and n_kv % tp == 0) else "seq"
+
+
+def attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, KV, hd)
+    v: jax.Array,
+    ctx: ShardingCtx,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    chunk: int = 1024,
+    q_offset: int = 0,
+    kv_valid_len: Optional[jax.Array] = None,  # decode: current cache fill
+) -> jax.Array:
+    """Grouped-query attention, q-chunked.  Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    par = _attn_parallelism(H, KV, ctx)
+
+    if par == "head":
+        q = constrain(q, ("batch", None, "heads", None), ctx)
+        k = constrain(k, ("batch", None, "kv", None), ctx)
+        v = constrain(v, ("batch", None, "kv", None), ctx)
+    elif Sq == 1 and ctx.tp > 1:
+        # decode under any strategy: shard the KV cache (flash-decode)
+        k = constrain(k, ("batch", "seq_tp", None, None), ctx)
+        v = constrain(v, ("batch", "seq_tp", None, None), ctx)
+    elif par == "seq" and Sq > 1:
+        q = constrain(q, ("batch", "seq_tp", None, None), ctx)
+
+    qg = q.reshape(B, Sq, KV, rep, hd).transpose(0, 2, 3, 1, 4)  # (B,KV,rep,Sq,hd)
+    kg = k.transpose(0, 2, 1, 3)  # (B,KV,Skv,hd)
+    vg = v.transpose(0, 2, 1, 3)
+
+    k_pos = jnp.arange(Skv, dtype=jnp.int32)[None, :]
+
+    def attend(qc: jax.Array, qc_start) -> jax.Array:
+        # qc: (B,KV,rep,C,hd)
+        C = qc.shape[3]
+        s = jnp.einsum(
+            "bkrcd,bksd->bkrcs", qc.astype(jnp.float32), kg.astype(jnp.float32)
+        ) * scale
+        q_pos = (qc_start + jnp.arange(C, dtype=jnp.int32) + q_offset)[:, None]
+        m = jnp.ones((C, Skv), jnp.bool_)
+        if causal:
+            m = m & (k_pos <= q_pos)
+        if window is not None:
+            m = m & (k_pos > q_pos - window)
+        if kv_valid_len is not None:
+            m = m & (k_pos < kv_valid_len)
+        s = jnp.where(m[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkrcs,bksd->bkrcd", p, vg.astype(jnp.float32))
+
+    if Sq > chunk and Sq % chunk:
+        # non-multiple sequence (whisper 1500 frames, llava 4672 stream):
+        # largest divisor of Sq that fits the chunk budget
+        c = chunk
+        while c > 1 and Sq % c:
+            c -= 1
+        chunk = c if c > 64 else Sq
+    if Sq <= chunk:
+        out = attend(qg, 0)
+    else:
+        nq = Sq // chunk
+        qs = qg.reshape(B, KV, rep, nq, chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+
+        def body(_, args):
+            i, qc = args
+            return None, attend(qc, i * chunk)
+
+        _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qs))
+        out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, KV, rep, Sq, hd)
+
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+    if par == "seq" and Sq > 1:
+        out = constrain(out, ("batch", "seq_tp", None, None), ctx)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLP / embeddings
+# ---------------------------------------------------------------------------
+
+
+def glu_mlp(x: jax.Array, wg: jax.Array, wu: jax.Array, wo: jax.Array, act: str,
+            ctx: ShardingCtx) -> jax.Array:
+    h_g = x @ wg
+    h_u = x @ wu
+    h_g = constrain(h_g, ("batch", None, "ff"), ctx)
+    h_u = constrain(h_u, ("batch", None, "ff"), ctx)
+    a = jax.nn.silu(h_g) if act == "swiglu" else jax.nn.gelu(h_g, approximate=True)
+    out = (a * h_u) @ wo
+    return constrain(out, ("batch", None, None), ctx)
+
+
+def embed_lookup(embed: jax.Array, tokens: jax.Array, ctx: ShardingCtx,
+                 scale: bool = False) -> jax.Array:
+    out = jnp.take(embed, tokens, axis=0, mode="clip").astype(embed.dtype)
+    if scale:
+        out = out * math.sqrt(embed.shape[1])
+    return constrain(out, ("batch", None, None), ctx)
+
+
+def lm_head_logits(h: jax.Array, w: jax.Array, ctx: ShardingCtx) -> jax.Array:
+    """h (B,S,D) @ w (D,Vp) -> logits (B,S,Vp) sharded on vocab."""
+    logits = h @ w
+    return constrain(logits, ("batch", None, "vocab"), ctx)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, vocab_real: int,
+                 label_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE; padded vocab rows masked out of the partition."""
+    Vp = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if Vp > vocab_real:
+        pad_bias = jnp.where(jnp.arange(Vp) >= vocab_real, -1e30, 0.0)
+        lf = lf + pad_bias
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    if label_mask is not None:
+        nll = nll * label_mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(label_mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,374 @@
+"""Model API: parameter init, logical sharding dims, train/serve entry points.
+
+The datapath integration (the paper's contribution as a first-class
+feature): `forward_train` accepts tokens either decoded ('tokens') or
+bit-packed ('packed', (B, nb, k, 128) uint32 at k = ceil(log2 vocab) bits).
+Packed batches are decoded *inside the jitted step* by the same kernels the
+analytical engine uses — host->device DMA carries ~k/32 of the plain bytes
+and decode overlaps model compute under the XLA scheduler (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingCtx, constrain, local_ctx
+from repro.kernels import ops
+from repro.lakeformat.encodings import bits_needed
+from repro.models.config import ModelConfig
+from repro.models.layers import embed_lookup, lm_head_logits, rmsnorm, softmax_xent
+from repro.models.transformer import (
+    Segment,
+    build_segments,
+    run_segments_decode,
+    run_segments_prefill,
+    run_segments_train,
+)
+
+# ---------------------------------------------------------------------------
+# parameter shapes / dims / init
+# ---------------------------------------------------------------------------
+
+
+def _attn_shapes(cfg: ModelConfig, prefix: str = "") -> Dict[str, Tuple]:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    s = {
+        prefix + "ln1": ((D,), (None,)),
+        prefix + "wq": ((D, H * hd), ("d", "heads")),
+        prefix + "wk": ((D, KV * hd), ("d", "heads")),
+        prefix + "wv": ((D, KV * hd), ("d", "heads")),
+        prefix + "wo": ((H * hd, D), ("heads", "d")),
+    }
+    if cfg.qk_norm:
+        s[prefix + "qn"] = ((hd,), (None,))
+        s[prefix + "kn"] = ((hd,), (None,))
+    return s
+
+
+def _mlp_shapes(cfg: ModelConfig, prefix: str = "") -> Dict[str, Tuple]:
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.act == "gelu":
+        return {
+            prefix + "ln2": ((D,), (None,)),
+            prefix + "w1": ((D, F), ("d", "ff")),
+            prefix + "w2": ((F, D), ("ff", "d")),
+        }
+    return {
+        prefix + "ln2": ((D,), (None,)),
+        prefix + "wg": ((D, F), ("d", "ff")),
+        prefix + "wu": ((D, F), ("d", "ff")),
+        prefix + "wo2": ((F, D), ("ff", "d")),
+    }
+
+
+def _moe_shapes(cfg: ModelConfig, prefix: str = "") -> Dict[str, Tuple]:
+    D, E, F = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    s = {
+        prefix + "ln2": ((D,), (None,)),
+        prefix + "router": ((D, E), ("d", None)),
+        # expert weights stored F-sharded over data (matches the 2D-EP
+        # compute layout exactly -> zero per-layer weight resharding)
+        prefix + "e_wg": ((E, D, F), ("experts", None, "fsdp")),
+        prefix + "e_wu": ((E, D, F), ("experts", None, "fsdp")),
+        prefix + "e_wo": ((E, F, D), ("experts", "fsdp", None)),
+    }
+    if cfg.moe_shared:
+        Fs = cfg.moe_shared * F
+        s[prefix + "shared_wg"] = ((D, Fs), ("d", "ff"))
+        s[prefix + "shared_wu"] = ((D, Fs), ("d", "ff"))
+        s[prefix + "shared_wo"] = ((Fs, D), ("ff", "d"))
+    return s
+
+
+def _ssm_shapes(cfg: ModelConfig, prefix: str = "") -> Dict[str, Tuple]:
+    D, di, N, H, W = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.conv_width
+    cc = di + 2 * N
+    s = {
+        prefix + "in_proj": ((D, 2 * di + 2 * N + H), ("d", "inner")),
+        prefix + "conv_w": ((W, cc), (None, None)),
+        prefix + "conv_b": ((cc,), (None,)),
+        prefix + "A_log": ((H,), (None,)),
+        prefix + "D_skip": ((H,), (None,)),
+        prefix + "dt_bias": ((H,), (None,)),
+        prefix + "norm_y": ((di,), (None,)),
+        prefix + "out_proj": ((di, D), ("inner", "d")),
+    }
+    if prefix == "":
+        s["ln1"] = ((D,), (None,))
+    return s
+
+
+def _layer_shapes(kind: str, cfg: ModelConfig) -> Dict[str, Tuple]:
+    D = cfg.d_model
+    if kind == "dense":
+        return {**_attn_shapes(cfg), **_mlp_shapes(cfg)}
+    if kind == "moe":
+        return {**_attn_shapes(cfg), **_moe_shapes(cfg)}
+    if kind == "moe_pair":
+        a = {**_attn_shapes(cfg, "a_"), **_mlp_shapes(cfg, "a_")}
+        b = {**_attn_shapes(cfg, "b_"), **_moe_shapes(cfg, "b_")}
+        return {**a, **b}
+    if kind == "ssm":
+        s = _ssm_shapes(cfg)
+        if cfg.d_ff:
+            s.update(_mlp_shapes(cfg))
+        return s
+    if kind == "hybrid":
+        s = {**_attn_shapes(cfg), **_ssm_shapes(cfg, "s_"), **_mlp_shapes(cfg)}
+        s.update({
+            "na": ((D,), (None,)),
+            "ns": ((D,), (None,)),
+            "beta_a": ((D,), (None,)),
+            "beta_s": ((D,), (None,)),
+        })
+        return s
+    if kind == "enc":
+        return {**_attn_shapes(cfg), **_mlp_shapes(cfg)}
+    if kind == "decx":
+        return {**_attn_shapes(cfg), **_attn_shapes(cfg, "x_"), **_mlp_shapes(cfg)}
+    raise ValueError(kind)
+
+
+def _top_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    D, Vp = cfg.d_model, cfg.vocab_padded
+    s = {
+        "embed": ((Vp, D), ("vocab", "d")),
+        "final_ln": ((D,), (None,)),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ((D, Vp), ("d", "vocab"))
+    if cfg.is_encdec:
+        s["enc_final_ln"] = ((D,), (None,))
+    if cfg.family == "vlm":
+        s["vis_proj"] = ((D, D), ("d", None))
+    return s
+
+
+def model_segments(cfg: ModelConfig) -> List[Segment]:
+    segs = build_segments(cfg)
+    if cfg.is_encdec:
+        segs = [Segment("enc", cfg.encoder_layers)] + [
+            Segment("decx", s.count, s.window) for s in segs if s.kind == "dense"
+        ]
+    return segs
+
+
+def param_shapes(cfg: ModelConfig):
+    """(shapes pytree, dims pytree) — dims feed distributed.sharding.spec_for."""
+    segs = model_segments(cfg)
+    shapes: Dict[str, Any] = {}
+    dims: Dict[str, Any] = {}
+    for name, (shp, dm) in _top_shapes(cfg).items():
+        shapes[name] = shp
+        dims[name] = dm
+    seg_shapes, seg_dims = [], []
+    for seg in segs:
+        ls = _layer_shapes(seg.kind, cfg)
+        seg_shapes.append({k: (seg.count, *s) for k, (s, _) in ls.items()})
+        seg_dims.append({k: (None, *d) for k, (_, d) in ls.items()})
+    shapes["segments"] = seg_shapes
+    dims["segments"] = seg_dims
+    return shapes, dims
+
+
+def param_dims(cfg: ModelConfig):
+    return param_shapes(cfg)[1]
+
+
+_NORM_KEYS = ("ln1", "ln2", "final_ln", "enc_final_ln", "norm_y", "na", "ns",
+              "qn", "kn", "D_skip", "beta_a", "beta_s", "conv_b")
+
+
+def _init_leaf(key, name: str, shape, cfg: ModelConfig):
+    base = name.split("_", 1)[-1] if name[:2] in ("a_", "b_", "s_", "x_") else name
+    dt = jnp.dtype(cfg.dtype)
+    if base in _NORM_KEYS or name in _NORM_KEYS:
+        if name.endswith(("ln1", "ln2", "final_ln")) and cfg.norm_plus_one:
+            return jnp.zeros(shape, dt)
+        return jnp.ones(shape, dt)
+    if base == "A_log" or name == "A_log":
+        u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(jnp.float32)
+    if base == "dt_bias" or name == "dt_bias":
+        u = jax.random.uniform(key, shape, jnp.float32, 1e-3, 0.1)
+        return jnp.log(jnp.expm1(u)).astype(jnp.float32)
+    std = 0.02
+    if base in ("wo", "wo2", "w2", "out_proj") or base == "shared_wo":
+        std = 0.02 / math.sqrt(2 * cfg.n_layers)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dt)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    shapes, _ = param_shapes(cfg)
+    flat: Dict[str, Any] = {}
+    keys = jax.random.split(key, 4096)
+    ki = iter(range(4096))
+
+    def mk(name, shp):
+        return _init_leaf(keys[next(ki)], name, shp, cfg)
+
+    out: Dict[str, Any] = {}
+    for name, shp in shapes.items():
+        if name == "segments":
+            out["segments"] = [
+                {k: mk(k, s) for k, s in seg.items()} for seg in shapes["segments"]
+            ]
+        else:
+            out[name] = mk(name, shp)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# datapath token decode (stage 0 of the jitted step)
+# ---------------------------------------------------------------------------
+
+
+def token_bits(cfg: ModelConfig) -> int:
+    return bits_needed(cfg.vocab - 1)
+
+
+def packed_token_shape(cfg: ModelConfig, B: int, S: int) -> Tuple[int, int, int, int]:
+    nb = -(-S // 4096)
+    return (B, nb, token_bits(cfg), 128)
+
+
+def unpack_tokens(packed: jax.Array, S: int, cfg: ModelConfig,
+                  backend: str = "auto") -> jax.Array:
+    B, nb, k, _ = packed.shape
+    flat = ops.bitunpack(packed.reshape(B * nb, k, 128), k, backend=backend)
+    return flat.reshape(B, nb * 4096)[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _tokens_from_batch(params, batch, cfg, ctx):
+    if "packed" in batch:
+        S = batch["packed"].shape[1] * 4096  # shapes are block-aligned by design
+        tokens = unpack_tokens(batch["packed"], S, cfg, backend="ref" if ctx.enabled else "auto")
+        tokens = constrain(tokens, ("batch", None), ctx)
+        return tokens
+    return batch["tokens"]
+
+
+def forward_train(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+                  ctx: Optional[ShardingCtx] = None):
+    """Returns (loss, metrics).  batch: tokens|packed [+ embeds / enc_embeds]."""
+    ctx = ctx or local_ctx()
+    segs = model_segments(cfg)
+    tokens = _tokens_from_batch(params, batch, cfg, ctx)
+    B, S = tokens.shape
+    h = embed_lookup(params["embed"], tokens, ctx, scale=cfg.embed_scale)
+
+    enc_out = None
+    seg_params = params["segments"]
+    if cfg.is_encdec:
+        enc_h = batch["enc_embeds"].astype(h.dtype)
+        enc_pos = jnp.broadcast_to(jnp.arange(enc_h.shape[1], dtype=jnp.int32), enc_h.shape[:2])
+        enc_h, _ = run_segments_train(seg_params[:1], segs[:1], enc_h, cfg, ctx, enc_pos)
+        enc_out = rmsnorm(enc_h, params["enc_final_ln"], cfg.norm_eps, cfg.norm_plus_one)
+        segs, seg_params = segs[1:], seg_params[1:]
+
+    n_vis = 0
+    if cfg.family == "vlm" and "embeds" in batch:
+        vis = batch["embeds"].astype(h.dtype) @ params["vis_proj"]
+        vis = constrain(vis, ("batch", None, None), ctx)
+        h = jnp.concatenate([vis, h], axis=1)
+        n_vis = vis.shape[1]
+
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1], dtype=jnp.int32), h.shape[:2])
+    h, aux = run_segments_train(seg_params, segs, h, cfg, ctx, positions, enc_kv=enc_out)
+    h = rmsnorm(h, params["final_ln"], cfg.norm_eps, cfg.norm_plus_one)
+
+    head_w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if n_vis > 0:
+        pred_h = h[:, n_vis - 1 : n_vis + S - 1]
+        labels = tokens
+    else:
+        pred_h = h[:, :-1]
+        labels = tokens[:, 1:]
+    logits = lm_head_logits(pred_h, head_w, ctx)
+    loss = softmax_xent(logits, labels, cfg.vocab)
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux, "tokens": jnp.int32(B * S)}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            ctx: Optional[ShardingCtx] = None, cache_len: Optional[int] = None):
+    """Process a prompt, build caches.  Returns (last-token logits, caches)."""
+    ctx = ctx or local_ctx()
+    segs = model_segments(cfg)
+    tokens = _tokens_from_batch(params, batch, cfg, ctx)
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    h = embed_lookup(params["embed"], tokens, ctx, scale=cfg.embed_scale)
+
+    enc_out = None
+    seg_params = params["segments"]
+    caches: List[Any] = []
+    if cfg.is_encdec:
+        enc_h = batch["enc_embeds"].astype(h.dtype)
+        enc_pos = jnp.broadcast_to(jnp.arange(enc_h.shape[1], dtype=jnp.int32), enc_h.shape[:2])
+        enc_h, _ = run_segments_train(seg_params[:1], segs[:1], enc_h, cfg, ctx, enc_pos)
+        enc_out = rmsnorm(enc_h, params["enc_final_ln"], cfg.norm_eps, cfg.norm_plus_one)
+        caches.append({})  # encoder segment carries no decode cache
+        segs_d, seg_params_d = segs[1:], seg_params[1:]
+    else:
+        segs_d, seg_params_d = segs, seg_params
+
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h, dec_caches = run_segments_prefill(seg_params_d, segs_d, h, cfg, ctx,
+                                         positions, cache_len, enc_kv=enc_out)
+    caches.extend(dec_caches)
+    h = rmsnorm(h, params["final_ln"], cfg.norm_eps, cfg.norm_plus_one)
+    head_w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = lm_head_logits(h[:, -1:], head_w, ctx)[:, 0]
+    return logits, caches
+
+
+def decode_step(params, token: jax.Array, caches, pos, cfg: ModelConfig,
+                ctx: Optional[ShardingCtx] = None):
+    """One token in, one distribution out.  token (B,1) int32; pos scalar int32."""
+    ctx = ctx or local_ctx()
+    segs = model_segments(cfg)
+    seg_params = params["segments"]
+    h = embed_lookup(params["embed"], token, ctx, scale=cfg.embed_scale)
+    if cfg.is_encdec:
+        segs_d, seg_params_d = segs[1:], seg_params[1:]
+        dec_caches = caches[1:]
+    else:
+        segs_d, seg_params_d, dec_caches = segs, seg_params, caches
+    h, new_caches = run_segments_decode(seg_params_d, segs_d, h, cfg, ctx, pos, dec_caches)
+    h = rmsnorm(h, params["final_ln"], cfg.norm_eps, cfg.norm_plus_one)
+    head_w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = lm_head_logits(h, head_w, ctx)[:, 0]
+    if cfg.is_encdec:
+        new_caches = [caches[0]] + new_caches
+    return logits, new_caches
+
+
+def build_model(cfg: ModelConfig):
+    """Convenience bundle."""
+    return {
+        "init": lambda key: init_params(cfg, key),
+        "train": lambda p, b, ctx=None: forward_train(p, b, cfg, ctx),
+        "prefill": lambda p, b, ctx=None, cache_len=None: prefill(p, b, cfg, ctx, cache_len),
+        "decode": lambda p, t, c, pos, ctx=None: decode_step(p, t, c, pos, cfg, ctx),
+        "segments": model_segments(cfg),
+        "config": cfg,
+    }
+
+
+def loss_fn(params, batch, cfg, ctx=None):
+    return forward_train(params, batch, cfg, ctx)

@@ -1,0 +1,309 @@
+"""Mixture-of-Experts FFN with expert parallelism (EP) over the model axis.
+
+Design (DESIGN.md §7): activations are replicated across the model axis at
+the MoE boundary (they already are, post attention all-reduce), experts are
+sharded E/tp per model shard.  Each shard:
+
+  1. sorts its (token, expert, gate) triples by expert id (one argsort),
+  2. for each LOCAL expert: dynamic-slices a capacity-C segment out of the
+     sorted order, gathers tokens, runs the expert GLU, scatter-adds back,
+  3. psum over the model axis combines contributions (each token's experts
+     live on some shards; others contribute zero).
+
+Communication per MoE layer = ONE all-reduce of (B_local, S, D) — identical
+to a dense Megatron TP FFN — instead of two all-to-alls; the trade is
+capacity-C padding compute, bounded by moe_capacity.  Tokens over capacity
+are dropped (standard).  Gathers/scatters are row-wise and local.
+
+The same `_routed_local` body runs un-sharded in single-device smoke tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ShardingCtx, constrain
+from repro.models.config import ModelConfig
+
+try:  # jax >= 0.6 moved shard_map to the top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def _capacity(n_tokens: int, k: int, n_experts: int, factor: float) -> int:
+    c = int(factor * n_tokens * k / n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def _routed_local(
+    x, ids, gates, wg, wu, wo, *, e_local: int, k: int, n_experts: int,
+    capacity: float, act: str, tp_axis: Optional[str]
+):
+    """Per-shard routed-expert compute.  x (Bl,S,D); wg/wu/wo (El,D,F)/(El,F,D)."""
+    Bl, S, D = x.shape
+    N = Bl * S
+    e0 = (jax.lax.axis_index(tp_axis) if tp_axis else 0) * e_local
+    xf = x.reshape(N, D)
+    flat_ids = ids.reshape(-1)  # (N*k,)
+    flat_gates = gates.reshape(-1)
+    tok = jnp.arange(N * k, dtype=jnp.int32) // k
+    order = jnp.argsort(flat_ids)
+    s_ids = flat_ids[order]
+    s_tok = tok[order]
+    s_gate = flat_gates[order]
+    C = min(_capacity(N, k, n_experts, capacity), N * k)
+    out = jnp.zeros((N, D), jnp.float32)
+    for j in range(e_local):
+        e = e0 + j
+        start = jnp.searchsorted(s_ids, e).astype(jnp.int32)
+        seg_ids = jax.lax.dynamic_slice_in_dim(s_ids, start, C)
+        seg_tok = jax.lax.dynamic_slice_in_dim(s_tok, start, C)
+        seg_gate = jax.lax.dynamic_slice_in_dim(s_gate, start, C)
+        valid = (seg_ids == e).astype(x.dtype)
+        xs = jnp.take(xf, seg_tok, axis=0) * valid[:, None]
+        hg = xs @ wg[j]
+        hu = xs @ wu[j]
+        a = jax.nn.silu(hg) if act == "swiglu" else jax.nn.gelu(hg, approximate=True)
+        ys = (a * hu) @ wo[j]
+        w = (seg_gate * valid.astype(jnp.float32))[:, None]
+        out = out.at[seg_tok].add(ys.astype(jnp.float32) * w)
+    if tp_axis:
+        out = jax.lax.psum(out, tp_axis)
+    return out.reshape(Bl, S, D).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# 2D expert parallelism: tokens a2a'd along the model axis to their expert's
+# owner column, broadcast along the data axis (expert F dims are data-sharded
+# so every row computes a 1/dp slice), partial outputs psum'd over data, then
+# a2a'd back.  Comm per layer per device ~ 3 x (C x D) buffers instead of the
+# full expert-weight all-gather — the production path for 400B-scale MoE.
+# ---------------------------------------------------------------------------
+
+
+def _row_index(row_axes, row_sizes):
+    if isinstance(row_axes, str):
+        return jax.lax.axis_index(row_axes)
+    idx = jax.lax.axis_index(row_axes[0])
+    for a, n in zip(row_axes[1:], row_sizes[1:]):
+        idx = idx * n + jax.lax.axis_index(a)
+    return idx
+
+
+def _routed_2d(
+    x, ids, gates, wg, wu, wo, *, e_local: int, k: int, n_experts: int,
+    capacity: float, act: str, tp_axis: str, tp: int, row_axes, row_sizes,
+    resident: bool = False
+):
+    """Per-shard body under shard_map over (row_axes..., tp_axis).
+
+    x (Nl_b, S, D) wide-batch block.
+    resident=False: wg/wu (El, D, F/dp), wo (El, F/dp, D) — F row-sharded,
+      tokens broadcast along rows, partials reduce-scattered (400B scale).
+    resident=True: full-F expert weights live on the owner column
+      (small MoE, e.g. deepseek 16B) — no row broadcast, no reduction:
+      tokens only a2a along the model axis."""
+    Bl, S, D = x.shape
+    N = Bl * S
+    dp = 1
+    for n in row_sizes:
+        dp *= n
+    xf = x.reshape(N, D)
+
+    # --- 1) bucket tokens by destination column (expert owner) ------------
+    flat_ids = ids.reshape(-1)  # (N*k,) global expert ids
+    owner = flat_ids // e_local  # destination column
+    flat_gates = gates.reshape(-1)
+    tok = jnp.arange(N * k, dtype=jnp.int32) // k
+    order = jnp.argsort(owner)
+    s_owner = owner[order]
+    s_tok = tok[order]
+    s_gate = flat_gates[order]
+    s_eid = (flat_ids % e_local)[order]  # expert index within the column
+    C = max(8, -(-int(capacity * N * k / tp) // 8) * 8)
+    C = min(C, N * k)
+
+    send_x = jnp.zeros((tp, C, D), x.dtype)
+    send_eid = jnp.zeros((tp, C), jnp.int32)
+    send_gate = jnp.zeros((tp, C), jnp.float32)
+    send_valid = jnp.zeros((tp, C), jnp.bool_)
+    send_tok = jnp.zeros((tp, C), jnp.int32)  # stays local (return scatter)
+    for j in range(tp):  # static, tp = 16
+        start = jnp.searchsorted(s_owner, j).astype(jnp.int32)
+        seg_own = jax.lax.dynamic_slice_in_dim(s_owner, start, C)
+        seg_tok = jax.lax.dynamic_slice_in_dim(s_tok, start, C)
+        seg_gid = jax.lax.dynamic_slice_in_dim(s_eid, start, C)
+        seg_gate = jax.lax.dynamic_slice_in_dim(s_gate, start, C)
+        valid = seg_own == j
+        send_x = send_x.at[j].set(jnp.take(xf, seg_tok, axis=0)
+                                  * valid[:, None].astype(x.dtype))
+        send_eid = send_eid.at[j].set(jnp.where(valid, seg_gid, e_local))
+        send_gate = send_gate.at[j].set(seg_gate * valid)
+        send_valid = send_valid.at[j].set(valid)
+        send_tok = send_tok.at[j].set(seg_tok)
+
+    # --- 2) a2a along model: tokens reach their owner column --------------
+    rx = jax.lax.all_to_all(send_x, tp_axis, split_axis=0, concat_axis=0, tiled=True)
+    re = jax.lax.all_to_all(send_eid, tp_axis, split_axis=0, concat_axis=0, tiled=True)
+
+    if resident:
+        gx = rx.reshape(-1, D)  # (tp*C, D): this row's tokens only
+        ge = re.reshape(-1)
+    else:
+        # --- 3) broadcast along data rows (F is row-sharded) --------------
+        gx = jax.lax.all_gather(rx, row_axes, axis=0, tiled=True)  # (dp*tp, C, D)
+        ge = jax.lax.all_gather(re, row_axes, axis=0, tiled=True)
+        gx = gx.reshape(-1, D)  # (dp*tp*C, D)
+        ge = ge.reshape(-1)
+
+    # --- 4) local expert compute on the F/dp slice -------------------------
+    order2 = jnp.argsort(ge)
+    t_ids = ge[order2]
+    t_pos = order2.astype(jnp.int32)
+    Tall = gx.shape[0]
+    C2 = min(Tall, max(8, -(-int(capacity * Tall / max(e_local, 1)) // 8) * 8))
+    out_partial = jnp.zeros((Tall, D), jnp.float32)
+    for j2 in range(e_local):
+        start = jnp.searchsorted(t_ids, j2).astype(jnp.int32)
+        seg_ids = jax.lax.dynamic_slice_in_dim(t_ids, start, C2)
+        seg_pos = jax.lax.dynamic_slice_in_dim(t_pos, start, C2)
+        valid = (seg_ids == j2).astype(x.dtype)
+        xs = jnp.take(gx, seg_pos, axis=0) * valid[:, None]
+        hg = xs @ wg[j2]
+        hu = xs @ wu[j2]
+        a = jax.nn.silu(hg) if act == "swiglu" else jax.nn.gelu(hg, approximate=True)
+        ys = (a * hu) @ wo[j2]  # (C2, D) partial over the F slice
+        out_partial = out_partial.at[seg_pos].add(
+            ys.astype(jnp.float32) * valid.astype(jnp.float32)[:, None])
+
+    # --- 5) combine F slices; reduce-scatter hands each row its own chunk
+    #        directly (1/dp the bytes of psum + slice) --------------------
+    if resident:
+        mine = out_partial  # (tp*C, D): already complete (full F)
+    else:
+        mine = jax.lax.psum_scatter(
+            out_partial, row_axes, scatter_dimension=0, tiled=True
+        )  # (tp*C, D)
+
+    # --- 6) a2a back + gated scatter into source tokens --------------------
+    back = jax.lax.all_to_all(mine.reshape(tp, C, D), tp_axis,
+                              split_axis=0, concat_axis=0, tiled=True)
+    out = jnp.zeros((N, D), jnp.float32)
+    for j in range(tp):
+        w = (send_gate[j] * send_valid[j].astype(jnp.float32))[:, None]
+        out = out.at[send_tok[j]].add(back[j].astype(jnp.float32) * w)
+    return out.reshape(Bl, S, D).astype(x.dtype)
+
+
+def moe_ffn(
+    x: jax.Array,
+    params: dict,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,D) -> (out (B,S,D), aux_loss scalar).
+
+    params: router (D,E), e_wg/e_wu (E,D,F), e_wo (E,F,D),
+            optional shared_wg/shared_wu (D, n_shared*F), shared_wo.
+    """
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (B,S,E)
+    gates, ids = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    ids = ids.astype(jnp.int32)
+
+    # Switch-style load-balance loss (computed globally; cheap).
+    one_hot = jax.nn.one_hot(ids[..., 0], E, dtype=jnp.float32)
+    f = jnp.mean(one_hot, axis=(0, 1))
+    p = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f * p) * cfg.moe_aux_weight
+
+    tp = ctx.tp
+    B = x.shape[0]
+    wide = tuple(ctx.dp_axes) + (ctx.tp_axis,)
+    use_2d = (
+        ctx.enabled and tp > 1 and E % tp == 0
+        and ctx.strategy == "fsdp_ep"
+        and B % ctx.axis_size(wide) == 0
+        and cfg.moe_d_ff % ctx.axis_size(ctx.fsdp_axis) == 0
+    )
+    if use_2d:
+        row_axes = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+        row_sizes = tuple(ctx.axis_size(a) for a in ctx.dp_axes)
+        # small expert blocks (<= 512 MB per owner column) live resident on
+        # their owner: tokens a2a only, zero row-axis collectives
+        e_bytes = (E // tp) * 3 * cfg.d_model * cfg.moe_d_ff * 2
+        resident = e_bytes <= (512 << 20)
+        fn = functools.partial(
+            _routed_2d,
+            e_local=E // tp, k=k, n_experts=E, capacity=cfg.moe_capacity,
+            act=cfg.act, tp_axis=ctx.tp_axis, tp=tp,
+            row_axes=row_axes, row_sizes=row_sizes, resident=resident,
+        )
+        w_spec = (
+            P(ctx.tp_axis, None, None) if resident
+            else P(ctx.tp_axis, None, ctx.fsdp_axis)
+        )
+        wo_spec = (
+            P(ctx.tp_axis, None, None) if resident
+            else P(ctx.tp_axis, ctx.fsdp_axis, None)
+        )
+        routed = shard_map(
+            fn,
+            mesh=ctx.mesh,
+            in_specs=(
+                P(wide, None, None),
+                P(wide, None, None),
+                P(wide, None, None),
+                w_spec,   # wg (E, D, F[/dp])
+                w_spec,   # wu
+                wo_spec,  # wo (E, F[/dp], D)
+            ),
+            out_specs=P(wide, None, None),
+        )(x, ids, gates, params["e_wg"], params["e_wu"], params["e_wo"])
+    elif ctx.enabled and tp > 1 and E % tp == 0:
+        dp_spec = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+        fn = functools.partial(
+            _routed_local,
+            e_local=E // tp,
+            k=k,
+            n_experts=E,
+            capacity=cfg.moe_capacity,
+            act=cfg.act,
+            tp_axis=ctx.tp_axis,
+        )
+        routed = shard_map(
+            fn,
+            mesh=ctx.mesh,
+            in_specs=(
+                P(dp_spec, None, None),
+                P(dp_spec, None, None),
+                P(dp_spec, None, None),
+                P(ctx.tp_axis, None, None),
+                P(ctx.tp_axis, None, None),
+                P(ctx.tp_axis, None, None),
+            ),
+            out_specs=P(dp_spec, None, None),
+        )(x, ids, gates, params["e_wg"], params["e_wu"], params["e_wo"])
+    else:
+        routed = _routed_local(
+            x, ids, gates, params["e_wg"], params["e_wu"], params["e_wo"],
+            e_local=E, k=k, n_experts=E, capacity=cfg.moe_capacity,
+            act=cfg.act, tp_axis=None,
+        )
+
+    if cfg.moe_shared:
+        from repro.models.layers import glu_mlp
+
+        routed = routed + glu_mlp(
+            x, params["shared_wg"], params["shared_wu"], params["shared_wo"],
+            cfg.act, ctx,
+        )
+    return constrain(routed, ("batch", None, None), ctx), aux

@@ -1,0 +1,184 @@
+"""Mamba2 (SSD — state-space duality) in chunked-parallel JAX form.
+
+Train/prefill use the chunkwise-parallel SSD decomposition (arXiv:2405.21060):
+within a chunk of Q tokens the quadratic masked-decay form runs on the MXU;
+states are carried across chunks with a lax.scan.  Decode is the O(1)
+recurrent update.  All state math in f32; io in model dtype.
+
+Layer params:
+  in_proj (D, 2*di + 2*N + H)   -> [z, x, B, C, dt]
+  conv_w (W, di + 2*N), conv_b  -> causal depthwise conv on (x, B, C)
+  A_log (H,), D_skip (H,), dt_bias (H,)
+  norm_y (di,)                  -> gated RMSNorm before out_proj
+  out_proj (di, D)
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingCtx, constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xin, Bc, Cc, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    return z, xin, Bc, Cc, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """x (B,S,C), w (W,C) depthwise causal; state (B,W-1,C) carries history.
+    Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros_like(x)
+    S = x.shape[1]
+    for i in range(W):  # static tiny loop (W=4)
+        y = y + xp[:, i : i + S, :] * w[i][None, None, :]
+    new_state = xp[:, -(W - 1):, :] if W > 1 else state
+    return y + b[None, None, :], new_state
+
+
+def ssd_scan(
+    xh: jax.Array,  # (B,S,H,P) conv'd inputs, head-split
+    Bc: jax.Array,  # (B,S,N)
+    Cc: jax.Array,  # (B,S,N)
+    dt: jax.Array,  # (B,S,H) post-softplus
+    A: jax.Array,  # (H,) negative
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B,H,P,N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B_, S, H, Pd = xh.shape
+    N = Bc.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xf = (xh.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    la = (A.astype(jnp.float32)[None, None, :] * dt.astype(jnp.float32))  # log decay (B,S,H)
+
+    # chunked views: (nc, B, Q, ...)
+    def chunked(t):
+        return t.reshape(B_, nc, Q, *t.shape[2:]).transpose(1, 0, *range(2, t.ndim + 1))
+
+    xc = chunked(xf)  # (nc,B,Q,H,P)
+    bc = chunked(Bc.astype(jnp.float32))  # (nc,B,Q,N)
+    cc = chunked(Cc.astype(jnp.float32))
+    lac = chunked(la)  # (nc,B,Q,H)
+
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((B_, H, Pd, N), jnp.float32)
+    )
+
+    def body(state, inp):
+        xq, bq, cq, laq = inp  # (B,Q,...)
+        clog = jnp.cumsum(laq, axis=1)  # (B,Q,H) inclusive
+        # intra-chunk: M[b,h,i,j] = (C_i . B_j) * exp(clog_i - clog_j), j <= i
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)  # (B,Q,Q)
+        dec = jnp.exp(clog[:, :, None, :] - clog[:, None, :, :])  # (B,i,j,H)
+        tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+        m = cb[:, :, :, None] * dec * tri[None, :, :, None]  # (B,i,j,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, xq)
+        # inter-chunk from carried state
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cq, state, jnp.exp(clog))
+        # new state
+        tail = jnp.exp(clog[:, -1:, :] - clog)  # decay from j to chunk end
+        s_new = jnp.einsum("bjn,bjhp,bjh->bhpn", bq, xq, tail)
+        state = state * jnp.exp(clog[:, -1, :])[:, :, None, None] + s_new
+        return state, y_intra + y_inter
+
+    state, ys = jax.lax.scan(body, s0, (xc, bc, cc, lac))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, S, H, Pd)
+    return y, state
+
+
+def ssm_forward(
+    h: jax.Array,  # (B,S,D) pre-normed input
+    p: dict,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    conv_state: Optional[jax.Array] = None,
+    ssm_state: Optional[jax.Array] = None,
+    return_state: bool = False,
+):
+    """Full-sequence SSM branch (train / prefill)."""
+    B, S, D = h.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    Pd = cfg.ssm_head_dim
+    proj = h @ p["in_proj"]
+    proj = constrain(proj, ("batch", None, "inner"), ctx)
+    z, xin, Bc, Cc, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, S, H, Pd)
+    # ragged tail: pad to a chunk multiple with dt=0 steps (decay=exp(0)=1,
+    # update=dt*x=0 -> exactly zero-effect on state and outputs)
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        dtp = jnp.pad(dtp, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_scan(xh, Bc, Cc, dtp, A, Q, ssm_state)
+    if pad:
+        y = y[:, :S]
+        xh = xh[:, :S]
+    y = y + xh.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(h.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_y"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    out = constrain(out, ("batch", None, None), ctx)
+    if return_state:
+        return out, (new_conv, state.astype(jnp.float32))
+    return out
+
+
+def ssm_decode_step(
+    h: jax.Array,  # (B,1,D)
+    p: dict,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    conv_state: jax.Array,  # (B,W-1,di+2N)
+    ssm_state: jax.Array,  # (B,H,P,N) f32
+):
+    """O(1) recurrent step.  Returns (out (B,1,D), (conv_state, ssm_state))."""
+    B, _, D = h.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    Pd = cfg.ssm_head_dim
+    proj = h @ p["in_proj"]
+    z, xin, Bc, Cc, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)  # (B,1,C)
+    xp = jnp.concatenate([conv_state, conv_in], axis=1)  # (B,W,C)
+    w = p["conv_w"]
+    y = jnp.einsum("bwc,wc->bc", xp.astype(jnp.float32), w.astype(jnp.float32))
+    y = jax.nn.silu(y + p["conv_b"].astype(jnp.float32))[:, None, :].astype(h.dtype)
+    new_conv = xp[:, 1:, :]
+    xin, Bc, Cc = jnp.split(y, [di, di + N], axis=-1)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,1,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(A[None, :] * dtp[:, 0])  # (B,H)
+    xh = xin.reshape(B, H, Pd).astype(jnp.float32) * dtp[:, 0, :, None]
+    upd = jnp.einsum("bn,bhp->bhpn", Bc[:, 0].astype(jnp.float32), xh)
+    state = ssm_state * a[:, :, None, None] + upd
+    yh = jnp.einsum("bn,bhpn->bhp", Cc[:, 0].astype(jnp.float32), state)
+    yh = yh + xin.reshape(B, H, Pd).astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, :, None]
+    yf = yh.reshape(B, 1, di).astype(h.dtype)
+    yf = rmsnorm(yf * jax.nn.silu(z), p["norm_y"], cfg.norm_eps)
+    out = yf @ p["out_proj"]
+    return out, (new_conv, state)

@@ -1,0 +1,349 @@
+"""Architecture assembly: segments of scanned layers.
+
+A model is a list of SEGMENTS, each (kind, count) with parameters stacked
+on a leading layer axis and executed with lax.scan — compile time stays
+O(#segments), not O(#layers), which is what lets the 88-layer
+mistral-large dry-run compile on one CPU core.
+
+Layer kinds:
+  dense     attn + GLU-MLP                      (qwen3/gemma/mistral/granite/llava)
+  moe       attn + routed-expert FFN            (deepseek-moe tail)
+  moe_pair  dense layer then MoE layer          (llama4 interleaved "early-fusion" stack)
+  ssm       Mamba2 SSD block                    (mamba2)
+  hybrid    parallel attn + SSM heads, then MLP (hymba; window/global per segment)
+  enc       bidirectional attn + MLP            (whisper encoder)
+  decx      causal self-attn + cross-attn + MLP (whisper decoder)
+
+Caches are per-segment pytrees stacked on the layer axis; sliding-window
+segments keep ring buffers of size `window` (so hymba long_500k holds 1024
+keys per SWA layer, not 524288).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingCtx, constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import attention, glu_mlp, rmsnorm, rotary
+from repro.models.moe import moe_ffn
+from repro.models.ssm import ssm_decode_step, ssm_forward
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str
+    count: int
+    window: Optional[int] = None  # hybrid SWA segments
+
+
+def build_segments(cfg: ModelConfig) -> List[Segment]:
+    if cfg.family == "ssm":
+        return [Segment("ssm", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        segs: List[Segment] = []
+        ids = sorted(set(cfg.global_layers))
+        prev = 0
+        for g in ids:
+            if g > prev:
+                segs.append(Segment("hybrid", g - prev, window=cfg.window))
+            segs.append(Segment("hybrid", 1, window=None))
+            prev = g + 1
+        if prev < cfg.n_layers:
+            segs.append(Segment("hybrid", cfg.n_layers - prev, window=cfg.window))
+        return segs
+    if cfg.moe_experts:
+        if cfg.moe_period == 2:
+            segs = []
+            if cfg.moe_first_dense:
+                segs.append(Segment("dense", cfg.moe_first_dense))
+            segs.append(Segment("moe_pair", (cfg.n_layers - cfg.moe_first_dense) // 2))
+            return segs
+        segs = []
+        if cfg.moe_first_dense:
+            segs.append(Segment("dense", cfg.moe_first_dense))
+        segs.append(Segment("moe", cfg.n_layers - cfg.moe_first_dense))
+        return segs
+    return [Segment("dense", cfg.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# attention sub-block
+# ---------------------------------------------------------------------------
+
+
+def _proj_qkv(x, p, cfg: ModelConfig, positions, ctx, prefix=""):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ p[prefix + "wq"]).reshape(B, S, H, hd)
+    k = (x @ p[prefix + "wk"]).reshape(B, S, KV, hd)
+    v = (x @ p[prefix + "wv"]).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p[prefix + "qn"], cfg.norm_eps)
+        k = rmsnorm(k, p[prefix + "kn"], cfg.norm_eps)
+    if positions is not None:
+        q = rotary(q, positions, cfg.rope_theta)
+        k = rotary(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_train(h, p, cfg, ctx, positions, *, causal=True, window=None, prefix="",
+               src=None):
+    """Self-attention, or cross-attention when `src` (B,Se,D) is given."""
+    x = rmsnorm(h, p[prefix + "ln1"], cfg.norm_eps, cfg.norm_plus_one)
+    if src is None:
+        q, k, v = _proj_qkv(x, p, cfg, positions, ctx, prefix)
+    else:
+        B, S = x.shape[:2]
+        H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+        q = (x @ p[prefix + "wq"]).reshape(B, S, H, hd)
+        k = (src @ p[prefix + "wk"]).reshape(B, src.shape[1], KV, hd)
+        v = (src @ p[prefix + "wv"]).reshape(B, src.shape[1], KV, hd)
+    o = attention(q, k, v, ctx, causal=causal, window=window,
+                  scale=cfg.attn_scale, chunk=cfg.attn_block)
+    B, S = h.shape[:2]
+    out = o.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p[prefix + "wo"]
+    return h + constrain(out, ("batch", None, None), ctx), (k, v)
+
+
+def attn_decode(h, p, cfg, ctx, pos, kcache, vcache, *, window=None, prefix="",
+                ring: bool = False):
+    """h (B,1,D); kcache/vcache (B,Smax,KV,hd).  pos: scalar current index."""
+    B = h.shape[0]
+    x = rmsnorm(h, p[prefix + "ln1"], cfg.norm_eps, cfg.norm_plus_one)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _proj_qkv(x, p, cfg, positions, ctx, prefix)
+    Smax = kcache.shape[1]
+    write_at = (pos % Smax) if ring else pos
+    kcache = jax.lax.dynamic_update_slice(kcache, k.astype(kcache.dtype), (0, write_at, 0, 0))
+    vcache = jax.lax.dynamic_update_slice(vcache, v.astype(vcache.dtype), (0, write_at, 0, 0))
+    valid = jnp.minimum(pos + 1, Smax) if ring else (pos + 1)
+    o = attention(q, kcache, vcache, ctx, causal=False, window=None,
+                  scale=cfg.attn_scale, kv_valid_len=valid)
+    out = o.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ p[prefix + "wo"]
+    return h + out, kcache, vcache
+
+
+def mlp_block(h, p, cfg, ctx, prefix=""):
+    x = rmsnorm(h, p[prefix + "ln2"], cfg.norm_eps, cfg.norm_plus_one)
+    if cfg.act == "gelu":  # non-gated (whisper)
+        y = jax.nn.gelu(x @ p[prefix + "w1"], approximate=True) @ p[prefix + "w2"]
+        y = constrain(y, ("batch", None, None), ctx)
+    else:
+        y = glu_mlp(x, p[prefix + "wg"], p[prefix + "wu"], p[prefix + "wo2"], cfg.act, ctx)
+    return h + y
+
+
+def moe_block(h, p, cfg, ctx):
+    x = rmsnorm(h, p["ln2"], cfg.norm_eps, cfg.norm_plus_one)
+    y, aux = moe_ffn(x, p, cfg, ctx)
+    return h + y, aux
+
+
+# ---------------------------------------------------------------------------
+# per-kind layer application (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def layer_train(kind: str, h, lp, cfg, ctx, positions, window=None, enc_kv=None,
+                want_cache: bool = False, cache_len: Optional[int] = None):
+    """Returns (h, aux, cache_entry)."""
+    aux = jnp.float32(0.0)
+    cache: Dict[str, Any] = {}
+    if kind == "dense":
+        h, (k, v) = attn_train(h, lp, cfg, ctx, positions)
+        if want_cache:
+            cache = {"k": _to_cache(k, cache_len), "v": _to_cache(v, cache_len)}
+        h = mlp_block(h, lp, cfg, ctx)
+    elif kind == "moe":
+        h, (k, v) = attn_train(h, lp, cfg, ctx, positions)
+        if want_cache:
+            cache = {"k": _to_cache(k, cache_len), "v": _to_cache(v, cache_len)}
+        h, aux = moe_block(h, lp, cfg, ctx)
+    elif kind == "moe_pair":
+        h, (k1, v1) = attn_train(h, lp, cfg, ctx, positions, prefix="a_")
+        h = mlp_block(h, lp, cfg, ctx, prefix="a_")
+        h, (k2, v2) = attn_train(h, lp, cfg, ctx, positions, prefix="b_")
+        h, aux = moe_block(h, _sub(lp, "b_"), cfg, ctx)
+        if want_cache:
+            cache = {"k": _to_cache(k1, cache_len), "v": _to_cache(v1, cache_len),
+                     "k2": _to_cache(k2, cache_len), "v2": _to_cache(v2, cache_len)}
+    elif kind == "ssm":
+        x = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        if want_cache:
+            y, (cs, ss) = ssm_forward(x, lp, cfg, ctx, return_state=True)
+            cache = {"conv": cs, "state": ss}
+        else:
+            y = ssm_forward(x, lp, cfg, ctx)
+        h = h + y
+        h = mlp_block(h, lp, cfg, ctx) if cfg.d_ff else h
+    elif kind == "hybrid":
+        x = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = _proj_qkv(x, lp, cfg, positions, ctx)
+        o = attention(q, k, v, ctx, causal=True, window=window,
+                      scale=cfg.attn_scale, chunk=cfg.attn_block)
+        B, S = h.shape[:2]
+        attn_out = o.reshape(B, S, cfg.n_heads * cfg.head_dim) @ lp["wo"]
+        if want_cache:
+            y, (cs, ss) = ssm_forward(x, _sub(lp, "s_"), cfg, ctx, return_state=True)
+            clen = window if window is not None else cache_len
+            cache = {"k": _to_cache(k, clen, ring=window is not None),
+                     "v": _to_cache(v, clen, ring=window is not None),
+                     "conv": cs, "state": ss}
+        else:
+            y = ssm_forward(x, _sub(lp, "s_"), cfg, ctx)
+        mix = 0.5 * (
+            rmsnorm(attn_out, lp["na"], cfg.norm_eps) * lp["beta_a"]
+            + rmsnorm(y, lp["ns"], cfg.norm_eps) * lp["beta_s"]
+        )
+        h = h + constrain(mix.astype(h.dtype), ("batch", None, None), ctx)
+        h = mlp_block(h, lp, cfg, ctx)
+    elif kind == "enc":
+        h, _ = attn_train(h, lp, cfg, ctx, positions, causal=False)
+        h = mlp_block(h, lp, cfg, ctx)
+    elif kind == "decx":
+        h, (k, v) = attn_train(h, lp, cfg, ctx, positions)
+        if want_cache:
+            cache = {"k": _to_cache(k, cache_len), "v": _to_cache(v, cache_len)}
+        h, (ck, cv) = attn_train(h, lp, cfg, ctx, None, causal=False, prefix="x_",
+                                 src=enc_kv)
+        if want_cache:
+            cache["ck"], cache["cv"] = ck, cv
+        h = mlp_block(h, lp, cfg, ctx)
+    else:
+        raise ValueError(kind)
+    return h, aux, cache
+
+
+def _to_cache(k: jax.Array, cache_len: Optional[int], ring: bool = False) -> jax.Array:
+    """Pad/trim a (B,S,KV,hd) tensor to the cache length.
+
+    Ring caches place token t at slot t % W, so a trimmed window is rolled
+    into ring phase before handoff to decode."""
+    S = k.shape[1]
+    if cache_len is None or S == cache_len and not (ring and S > cache_len):
+        return k
+    if S < cache_len:
+        return jnp.pad(k, ((0, 0), (0, cache_len - S), (0, 0), (0, 0)))
+    trimmed = k[:, S - cache_len :]
+    if ring:
+        trimmed = jnp.roll(trimmed, S % cache_len, axis=1)
+    return trimmed
+
+
+def _sub(lp: dict, prefix: str) -> dict:
+    return {k[len(prefix):]: v for k, v in lp.items() if k.startswith(prefix)}
+
+
+def layer_decode(kind: str, h, lp, cfg, ctx, pos, cache, window=None):
+    """One-token step.  Returns (h, new_cache)."""
+    if kind in ("dense", "moe"):
+        h, kc, vc = attn_decode(h, lp, cfg, ctx, pos, cache["k"], cache["v"])
+        if kind == "dense":
+            h = mlp_block(h, lp, cfg, ctx)
+            return h, {"k": kc, "v": vc}
+        h, _ = moe_block(h, lp, cfg, ctx)
+        return h, {"k": kc, "v": vc}
+    if kind == "moe_pair":
+        h, kc1, vc1 = attn_decode(h, lp, cfg, ctx, pos, cache["k"], cache["v"], prefix="a_")
+        h = mlp_block(h, lp, cfg, ctx, prefix="a_")
+        h, kc2, vc2 = attn_decode(h, lp, cfg, ctx, pos, cache["k2"], cache["v2"], prefix="b_")
+        h, _ = moe_block(h, _sub(lp, "b_"), cfg, ctx)
+        return h, {"k": kc1, "v": vc1, "k2": kc2, "v2": vc2}
+    if kind == "ssm":
+        x = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        y, (cs, ss) = ssm_decode_step(x, lp, cfg, ctx, cache["conv"], cache["state"])
+        h = h + y
+        h = mlp_block(h, lp, cfg, ctx) if cfg.d_ff else h
+        return h, {"conv": cs, "state": ss}
+    if kind == "hybrid":
+        x = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        B = h.shape[0]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q, k, v = _proj_qkv(x, lp, cfg, positions, ctx)
+        Smax = cache["k"].shape[1]
+        ring = window is not None
+        write_at = (pos % Smax) if ring else pos
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, write_at, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, write_at, 0, 0))
+        valid = jnp.minimum(pos + 1, Smax) if ring else (pos + 1)
+        o = attention(q, kc, vc, ctx, causal=False, scale=cfg.attn_scale, kv_valid_len=valid)
+        attn_out = o.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ lp["wo"]
+        y, (cs, ss) = ssm_decode_step(x, _sub(lp, "s_"), cfg, ctx, cache["conv"], cache["state"])
+        mix = 0.5 * (
+            rmsnorm(attn_out, lp["na"], cfg.norm_eps) * lp["beta_a"]
+            + rmsnorm(y, lp["ns"], cfg.norm_eps) * lp["beta_s"]
+        )
+        h = h + mix.astype(h.dtype)
+        h = mlp_block(h, lp, cfg, ctx)
+        return h, {"k": kc, "v": vc, "conv": cs, "state": ss}
+    if kind == "decx":
+        h, kc, vc = attn_decode(h, lp, cfg, ctx, pos, cache["k"], cache["v"])
+        x = rmsnorm(h, lp["x_ln1"], cfg.norm_eps)
+        B = h.shape[0]
+        q = (x @ lp["x_wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        o = attention(q, cache["ck"], cache["cv"], ctx, causal=False, scale=cfg.attn_scale)
+        h = h + o.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ lp["x_wo"]
+        h = mlp_block(h, lp, cfg, ctx)
+        return h, {"k": kc, "v": vc, "ck": cache["ck"], "cv": cache["cv"]}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# segment execution
+# ---------------------------------------------------------------------------
+
+
+def run_segments_train(params_segs, segs, h, cfg, ctx, positions, enc_kv=None):
+    aux_total = jnp.float32(0.0)
+
+    for seg, sp in zip(segs, params_segs):
+        def body(carry, lp, _kind=seg.kind, _win=seg.window):
+            hh, aux = carry
+            hh, a, _ = layer_train(_kind, hh, lp, cfg, ctx, positions,
+                                   window=_win, enc_kv=enc_kv)
+            return (hh, aux + a), None
+
+        if cfg.remat:
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if cfg.remat_policy == "dots" else None
+            )
+            fn = jax.checkpoint(body, policy=policy)
+        else:
+            fn = body
+        (h, aux_total), _ = jax.lax.scan(fn, (h, aux_total), sp)
+    return h, aux_total
+
+
+def run_segments_prefill(params_segs, segs, h, cfg, ctx, positions, cache_len,
+                         enc_kv=None):
+    caches = []
+    for seg, sp in zip(segs, params_segs):
+        def body(hh, lp, _kind=seg.kind, _win=seg.window):
+            hh, _, cache = layer_train(_kind, hh, lp, cfg, ctx, positions,
+                                       window=_win, enc_kv=enc_kv,
+                                       want_cache=True, cache_len=cache_len)
+            return hh, cache
+
+        h, seg_cache = jax.lax.scan(body, h, sp)
+        caches.append(seg_cache)
+    return h, caches
+
+
+def run_segments_decode(params_segs, segs, h, cfg, ctx, pos, caches):
+    new_caches = []
+    for seg, sp, sc in zip(segs, params_segs, caches):
+        def body(hh, inp, _kind=seg.kind, _win=seg.window):
+            lp, cache_l = inp
+            hh, new_cache = layer_decode(_kind, hh, lp, cfg, ctx, pos, cache_l,
+                                         window=_win)
+            return hh, new_cache
+
+        h, seg_cache = jax.lax.scan(body, h, (sp, sc))
+        new_caches.append(seg_cache)
+    return h, new_caches

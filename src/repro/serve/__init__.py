@@ -1,0 +1,3 @@
+"""Serving runtime: slot-based continuous batching over prefill/decode."""
+
+from repro.serve.engine import ServeEngine, Request  # noqa: F401

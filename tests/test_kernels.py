@@ -1,0 +1,125 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp ref vs host
+oracle, swept over shapes, bit widths and dtypes."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.lakeformat import encodings as E
+
+
+@pytest.mark.parametrize("k", [1, 5, 8, 13, 18, 24, 32])
+@pytest.mark.parametrize("n", [4096, 3 * 4096 + 100])
+def test_bitunpack_backends(k, n):
+    rng = np.random.default_rng(k * 1000 + n)
+    hi = min((1 << k), 2**31)
+    v = rng.integers(0, hi, size=n, dtype=np.uint64)
+    p = jnp.asarray(E.bitpack_encode(v, k))
+    host = E.bitpack_decode_np(np.asarray(p), k, n).astype(np.int32)
+    for be in ("ref", "pallas"):
+        got = np.asarray(ops.bitunpack(p, k, n, backend=be))
+        np.testing.assert_array_equal(got, host, err_msg=f"backend={be} k={k}")
+
+
+@pytest.mark.parametrize("dtype", ["int32", "float32"])
+def test_dict_decode_backends(dtype):
+    rng = np.random.default_rng(0)
+    base = np.array([5, 900, 17, 123456, -44], dtype=np.int64)
+    if dtype == "float32":
+        base = (base / 7).astype(np.float32)
+    v = rng.choice(base, size=9000)
+    b = E.dict_encode(v)
+    k = int(b.pop("_k")[0])
+    host = E.dict_decode_np(b, k, len(v))
+    d = b["dictionary"]
+    d = jnp.asarray(d.astype(np.int32) if d.dtype.kind in "iu" else d)
+    for be in ("ref", "pallas"):
+        got = np.asarray(ops.dict_decode(jnp.asarray(b["packed"]), d, k, len(v), backend=be))
+        np.testing.assert_array_equal(got, host.astype(got.dtype), err_msg=be)
+
+
+@pytest.mark.parametrize("dtype", ["int32", "float32"])
+def test_rle_decode_backends(dtype):
+    rng = np.random.default_rng(1)
+    v = np.repeat(rng.integers(0, 2000, 150), rng.integers(5, 200, 150))
+    v = v.astype(dtype)
+    b = E.rle_encode(v)
+    host = E.rle_decode_np(b, len(v))
+    for be in ("ref", "pallas"):
+        got = np.asarray(ops.rle_decode(jnp.asarray(b["rle_values"]), jnp.asarray(b["rle_ends"]), len(v), backend=be))
+        np.testing.assert_array_equal(got, host, err_msg=be)
+
+
+def test_delta_decode_backends():
+    rng = np.random.default_rng(2)
+    v = np.cumsum(rng.integers(-5, 30, size=2 * 4096 + 99)).astype(np.int64)
+    b = E.delta_encode(v)
+    k = int(b.pop("_k")[0])
+    host = E.delta_decode_np(b, k, len(v)).astype(np.int32)
+    bases = jnp.asarray(b["bases"].astype(np.int32))
+    for be in ("ref", "pallas"):
+        got = np.asarray(ops.delta_decode(jnp.asarray(b["packed"]), bases, k, len(v), backend=be))
+        np.testing.assert_array_equal(got, host, err_msg=be)
+
+
+@pytest.mark.parametrize("dtype,hi", [("int32", 2**30), ("float32", 1)])
+def test_filter_compact_backends(dtype, hi):
+    rng = np.random.default_rng(3)
+    if dtype == "int32":
+        v = rng.integers(-hi, hi, size=(5, 1024)).astype(np.int32)
+    else:
+        v = rng.standard_normal((5, 1024)).astype(np.float32)
+    m = rng.random((5, 1024)) < 0.37
+    for be in ("ref", "pallas"):
+        out, cnt = ops.filter_compact(jnp.asarray(v), jnp.asarray(m), backend=be)
+        out, cnt = np.asarray(out), np.asarray(cnt)
+        assert np.array_equal(cnt, m.sum(1))
+        for i in range(5):
+            np.testing.assert_array_equal(out[i, : cnt[i]], v[i][m[i]], err_msg=be)
+
+
+def test_bloom_no_false_negatives():
+    rng = np.random.default_rng(4)
+    keys = rng.integers(0, 10**7, size=800).astype(np.int32)
+    bits = ops.bloom_build(jnp.asarray(keys), 1 << 14)
+    probe = rng.integers(0, 10**7, size=(4, 1024)).astype(np.int32)
+    probe[0, :800] = keys
+    for be in ("ref", "pallas"):
+        got = np.asarray(ops.bloom_probe(jnp.asarray(probe), bits, backend=be))
+        assert got[0, :800].all(), be  # never a false negative
+        fp = got[~np.isin(probe, keys)].mean()
+        assert fp < 0.05, (be, fp)
+    r1 = np.asarray(ops.bloom_probe(jnp.asarray(probe), bits, backend="ref"))
+    r2 = np.asarray(ops.bloom_probe(jnp.asarray(probe), bits, backend="pallas"))
+    np.testing.assert_array_equal(r1, r2)
+
+
+@pytest.mark.parametrize("k,lo,hi", [(13, 1000, 3000), (18, 0, 0), (8, 250, 255)])
+def test_fused_scan_backends(k, lo, hi):
+    rng = np.random.default_rng(k)
+    v = rng.integers(0, 1 << k, size=2 * 4096 + 17, dtype=np.uint64)
+    p = jnp.asarray(E.bitpack_encode(v, k))
+    exp = (v >= lo) & (v <= hi)
+    for be in ("ref", "pallas"):
+        mask, cnt = ops.fused_scan(p, k, lo, hi, backend=be)
+        got = np.asarray(mask).reshape(-1)[: len(v)]
+        np.testing.assert_array_equal(got, exp, err_msg=be)
+        assert int(np.asarray(cnt).sum()) >= exp.sum()  # padding rows only add
+
+
+@pytest.mark.parametrize(
+    "B,H,Hkv,S,D,win",
+    [(2, 4, 2, 256, 64, None), (1, 8, 8, 256, 128, None), (1, 4, 1, 512, 64, 128),
+     (1, 2, 2, 256, 256, None)],
+)
+def test_flash_attention_vs_ref(B, H, Hkv, S, D, win):
+    rng = np.random.default_rng(B + H + S)
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)).astype(np.float32) * 0.3)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, D)).astype(np.float32) * 0.3)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, D)).astype(np.float32) * 0.3)
+    o_ref = ops.flash_attention(q, k, v, causal=True, window=win, backend="ref")
+    o_pal = ops.flash_attention(q, k, v, causal=True, window=win, backend="pallas",
+                                bq=128, bk=128)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pal), atol=3e-5, rtol=1e-4)

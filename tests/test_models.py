@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, output shapes + finiteness; prefill/decode == teacher-forced forward;
+datapath (bit-packed) ingestion equivalence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.lakeformat.encodings import bitpack_encode
+from repro.models.model import (
+    decode_step,
+    forward_train,
+    init_params,
+    packed_token_shape,
+    param_shapes,
+    prefill,
+    token_bits,
+)
+from repro.train.loop import make_train_step
+from repro.train.optimizer import OptConfig, init_opt_state
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng, b=B, s=S):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.vision_tokens, cfg.d_model)), jnp.bfloat16)
+    if cfg.is_encdec:
+        batch["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.encoder_seq, cfg.d_model)), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = _batch(cfg, rng)
+    loss, metrics = jax.jit(lambda p, b: forward_train(p, b, cfg))(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert 3.0 < float(loss) < 12.0, (arch, float(loss))  # ~uniform over vocab at init
+    # one optimizer step must decrease nothing NaN and change params
+    opt = init_opt_state(params, OptConfig(warmup_steps=1, total_steps=10))
+    step = jax.jit(make_train_step(cfg, OptConfig(warmup_steps=1, total_steps=10), None))
+    p2, o2, m = step(params, opt, batch)
+    assert jnp.isfinite(m["loss"])
+    delta = float(jnp.abs(p2["embed"].astype(jnp.float32) - params["embed"].astype(jnp.float32)).max())
+    assert delta > 0, arch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode_matches_forward(arch):
+    """serve path == train path: decode logits at position S must equal the
+    prefill logits of the (S+1)-token prompt."""
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, cfg.vocab, (B, S + 1)).astype(np.int32)
+    extra = {k: v for k, v in _batch(cfg, rng).items() if k != "tokens"}
+    lp, caches = prefill(params, {"tokens": jnp.asarray(toks[:, :S]), **extra}, cfg,
+                         cache_len=S + 8)
+    l_full, _ = prefill(params, {"tokens": jnp.asarray(toks[:, : S + 1]), **extra}, cfg,
+                        cache_len=S + 8)
+    l_dec, _ = decode_step(params, jnp.asarray(toks[:, S : S + 1]), caches,
+                           jnp.int32(S), cfg)
+    err = float(jnp.max(jnp.abs(l_dec.astype(jnp.float32) - l_full.astype(jnp.float32))))
+    assert err < 5e-2, (arch, err)  # bf16 accumulation tolerance
+
+
+def test_packed_ingestion_equals_tokens():
+    """Datapath feature: bit-packed batches produce identical loss."""
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    s = 4096  # block-aligned
+    toks = rng.integers(0, cfg.vocab, (B, s)).astype(np.int64)
+    k = token_bits(cfg)
+    packed = np.stack([bitpack_encode(toks[i], k) for i in range(B)])
+    l1, _ = forward_train(params, {"tokens": jnp.asarray(toks, jnp.int32)}, cfg)
+    l2, _ = forward_train(params, {"packed": jnp.asarray(packed)}, cfg)
+    assert abs(float(l1) - float(l2)) < 1e-5
+    assert packed_token_shape(cfg, B, s) == packed.shape
+
+
+def test_sliding_window_ring_cache():
+    """hymba ring cache: long decode must agree with full-context windowed
+    attention (window semantics preserved past the buffer wrap)."""
+    cfg = get_smoke_config("hymba-1.5b")  # window=32
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    n_total = 80  # > 2x window: cache wraps
+    toks = rng.integers(0, cfg.vocab, (1, n_total)).astype(np.int32)
+    # reference: prefill of all tokens, logits at last position
+    l_ref, _ = prefill(params, {"tokens": jnp.asarray(toks)}, cfg, cache_len=n_total)
+    # decode path: prefill 48, then decode the rest one by one (jit once)
+    n0 = 48
+    _, caches = prefill(params, {"tokens": jnp.asarray(toks[:, :n0])}, cfg, cache_len=n_total)
+    step = jax.jit(lambda p, t, c, pos: decode_step(p, t, c, pos, cfg))
+    logits = None
+    for t in range(n0, n_total):
+        logits, caches = step(params, jnp.asarray(toks[:, t : t + 1]), caches,
+                              jnp.int32(t))
+    err = float(jnp.max(jnp.abs(logits.astype(jnp.float32) - l_ref.astype(jnp.float32))))
+    assert err < 5e-2, err
+
+
+def test_param_shapes_match_init():
+    for arch in ("llama4-maverick-400b-a17b", "mamba2-370m"):
+        cfg = get_smoke_config(arch)
+        shapes, dims = param_shapes(cfg)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        is_shape = lambda x: isinstance(x, tuple) and all(isinstance(i, int) for i in x)
+        flat_s = [tuple(s) for s in jax.tree.leaves(shapes, is_leaf=is_shape)]
+        flat_p = [tuple(x.shape) for x in jax.tree.leaves(params)]
+        assert sorted(flat_s) == sorted(flat_p)

@@ -1,0 +1,95 @@
+"""Analytical query suite vs numpy oracles (the paper's benchmark queries)."""
+
+import numpy as np
+import pytest
+
+from repro.core import DatapathEngine, tpch
+from repro.core.queries import QUERIES, q1, q6, q12, q14, q15
+from repro.lakeformat.reader import LakeReader
+
+SF = 0.05
+
+
+@pytest.fixture(scope="module")
+def env(tmp_path_factory):
+    d = tmp_path_factory.mktemp("q")
+    paths = tpch.write_tables(str(d), sf=SF, seed=0)
+    readers = {k: LakeReader(p) for k, p in paths.items()}
+    data = tpch.gen_tables(SF, 0)
+    eng = DatapathEngine(backend="ref")
+    return eng, readers, data
+
+
+def test_q6_oracle(env):
+    eng, readers, data = env
+    li = data["lineitem"]
+    r = q6(eng, readers, year_start=365)
+    m = (
+        (li["l_shipdate"] >= 365) & (li["l_shipdate"] <= 729)
+        & (li["l_discount"] >= 0.05 - 1e-4) & (li["l_discount"] <= 0.07 + 1e-4)
+        & (li["l_quantity"] < 24)
+    )
+    exp = float((li["l_extendedprice"][m].astype(np.float64) * li["l_discount"][m]).sum())
+    assert r["rows"] == int(m.sum())
+    assert abs(r["revenue"] - exp) / max(exp, 1) < 1e-3
+
+
+def test_q1_oracle(env):
+    eng, readers, data = env
+    li = data["lineitem"]
+    r = q1(eng, readers, delta_days=90)
+    m = li["l_shipdate"] <= 2556 - 90
+    rf = np.asarray(li["l_returnflag"])[m]
+    ls = np.asarray(li["l_linestatus"])[m]
+    qty = li["l_quantity"][m]
+    for (rfv, lsv), row in r.items():
+        sel = (rf == rfv) & (ls == lsv)
+        assert row["count"] == sel.sum()
+        assert abs(row["sum_qty"] - qty[sel].sum()) / max(qty[sel].sum(), 1) < 1e-3
+
+
+def test_q14_oracle(env):
+    eng, readers, data = env
+    li, part = data["lineitem"], data["part"]
+    r = q14(eng, readers, month_start=1000)
+    m = (li["l_shipdate"] >= 1000) & (li["l_shipdate"] <= 1029)
+    ptype = np.asarray(part["p_type"])
+    promo = np.char.startswith(ptype[li["l_partkey"][m]], "PROMO")
+    rev = (li["l_extendedprice"][m] * (1 - li["l_discount"][m])).astype(np.float64)
+    exp = 100.0 * rev[promo].sum() / rev.sum()
+    assert abs(r["promo_revenue_pct"] - exp) < 0.2
+
+
+def test_q15_oracle(env):
+    eng, readers, data = env
+    li = data["lineitem"]
+    r = q15(eng, readers, quarter_start=365)
+    m = (li["l_shipdate"] >= 365) & (li["l_shipdate"] <= 454)
+    rev = (li["l_extendedprice"][m] * (1 - li["l_discount"][m])).astype(np.float64)
+    per = np.zeros(int(li["l_suppkey"].max()) + 1)
+    np.add.at(per, li["l_suppkey"][m], rev)
+    assert r["suppkey"] == int(per.argmax())
+    assert abs(r["revenue"] - per.max()) / per.max() < 1e-3
+
+
+def test_q12_oracle(env):
+    eng, readers, data = env
+    li, orders = data["lineitem"], data["orders"]
+    r = q12(eng, readers, year_start=730)
+    prio = np.asarray(orders["o_orderpriority"])
+    sm = np.asarray(li["l_shipmode"])
+    for mode in ("MAIL", "SHIP"):
+        m = (sm == mode) & (li["l_receiptdate"] >= 730) & (li["l_receiptdate"] <= 730 + 364)
+        p = prio[li["l_orderkey"][m]]
+        high = np.char.startswith(p, "1-") | np.char.startswith(p, "2-")
+        assert r[mode]["high"] == int(high.sum())
+        assert r[mode]["low"] == int((~high).sum())
+
+
+def test_all_queries_run_all_backends(env):
+    _, readers, _ = env
+    for be in ("ref", "host"):
+        eng = DatapathEngine(backend=be)
+        for name, q in QUERIES.items():
+            out = q(eng, readers)
+            assert out is not None, (be, name)

@@ -1,0 +1,53 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's claim chain, on this framework:
+  1. querying raw encoded files spends most time in decode+filter,
+  2. a datapath engine that decodes + filters before the consumer removes
+     that cost from the consumer's critical path,
+  3. pre-filtered consumers match raw-file answer EXACTLY,
+  4. the same datapath feeds LM training (bit-packed ingestion) end-to-end.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import BlockCache, DatapathEngine, tpch
+from repro.core.queries import QUERIES
+from repro.data.corpus import write_corpus
+from repro.data.pipeline import TokenPipeline
+from repro.lakeformat.reader import LakeReader
+from repro.train.loop import train
+from repro.train.optimizer import OptConfig
+from repro.configs import get_smoke_config
+
+
+def test_offload_configs_same_answers(tmp_path):
+    """Fig. 1 invariant: raw / pre-loaded / pre-filtered give identical
+    query results — only the work distribution changes."""
+    paths = tpch.write_tables(str(tmp_path), sf=0.03, seed=0)
+    readers = {k: LakeReader(p) for k, p in paths.items()}
+    answers = {}
+    for offload in ("raw", "preloaded", "prefiltered"):
+        eng = DatapathEngine(backend="ref", offload=offload, cache=BlockCache())
+        answers[offload] = {n: q(eng, readers) for n, q in QUERIES.items()}
+    assert answers["raw"] == answers["preloaded"] == answers["prefiltered"]
+
+
+def test_train_e2e_with_datapath(tmp_path):
+    """Corpus in the lake -> fused bit-packed batches -> loss goes down ->
+    checkpoint -> resume."""
+    cfg = get_smoke_config("qwen3-1.7b")
+    paths = write_corpus(str(tmp_path / "c"), n_tokens=120_000, vocab=cfg.vocab,
+                         n_shards=1, row_group_size=32768)
+    pipe = TokenPipeline(paths, batch_size=1, seq_len=4096, mode="fused")
+    optcfg = OptConfig(lr=1e-3, warmup_steps=2, total_steps=10, weight_decay=0.01)
+    out = train(cfg, optcfg, pipe, steps=4, ckpt_dir=str(tmp_path / "ck"),
+                ckpt_every=2, log_every=10, log_fn=lambda s: None)
+    assert out["losses"][-1] < out["losses"][0]
+    # resume picks up at step 4
+    pipe2 = TokenPipeline(paths, batch_size=1, seq_len=4096, mode="fused")
+    out2 = train(cfg, optcfg, pipe2, steps=5, ckpt_dir=str(tmp_path / "ck"),
+                 ckpt_every=2, log_every=10, log_fn=lambda s: None)
+    assert len(out2["losses"]) == 1

@@ -1,0 +1,30 @@
+"""Test helpers: subprocess runner for multi-device (fake-device) tests."""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 480) -> str:
+    """Run `code` in a fresh python with N fake host devices.
+
+    Multi-device tests must not pollute the main pytest process (jax locks
+    the device count at first init), hence subprocesses."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + os.path.join(REPO, "benchmarks")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+        cwd=REPO,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
