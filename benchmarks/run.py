@@ -10,6 +10,7 @@ Sections:
     pruning         Fig. 3b sorted vs unsorted zone-map pruning
     kernels         §3      decode-core rates + DMA ratios
     pipeline        §1      LM ingestion offload (host/engine/fused)
+    service         §SmartNIC-as-service: multi-tenant coalescing + policy
 Roofline (§Roofline) runs separately off the dry-run JSON:
     python benchmarks/roofline.py
 """
@@ -33,7 +34,15 @@ def main() -> None:
     results = {}
     sections = []
 
-    from benchmarks import breakdown, formats, kernels_bench, pipeline_bench, pruning, throughput
+    from benchmarks import (
+        breakdown,
+        formats,
+        kernels_bench,
+        pipeline_bench,
+        pruning,
+        service_bench,
+        throughput,
+    )
 
     sections = [
         ("breakdown", lambda: breakdown.run(sf=sf)),
@@ -42,7 +51,12 @@ def main() -> None:
         ("pruning", lambda: pruning.run(sf=sf)),
         ("kernels", kernels_bench.run),
         ("pipeline", lambda: pipeline_bench.run(n_tokens=500_000 if args.fast else 2_000_000)),
+        ("service", lambda: service_bench.run(sf=sf, n_tenants=4 if args.fast else 6)),
     ]
+
+    if args.only and args.only not in {name for name, _ in sections}:
+        ap.error(f"--only {args.only!r}: unknown section "
+                 f"(choose from {', '.join(n for n, _ in sections)})")
 
     failed = 0
     for name, fn in sections:

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 tests + the service benchmark (the perf-trajectory point).
+#   scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q
+python -m benchmarks.run --fast --only service --json BENCH_service.json

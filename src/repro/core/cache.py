@@ -15,6 +15,7 @@ route work.
 from __future__ import annotations
 
 import collections
+import dataclasses
 from typing import Any, Dict, Hashable, List, Optional, Tuple
 
 
@@ -25,6 +26,10 @@ def _nbytes(obj) -> int:
         return sum(_nbytes(v) for v in obj.values())
     if isinstance(obj, (list, tuple)):
         return sum(_nbytes(v) for v in obj)
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        # e.g. a whole prefiltered ScanResult: bill its column arrays + mask,
+        # otherwise the LRU budget never sees them and the cache grows unbounded
+        return sum(_nbytes(getattr(obj, f.name)) for f in dataclasses.fields(obj))
     return 64
 
 
@@ -37,6 +42,10 @@ class BlockCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+
+    def __contains__(self, key: Hashable) -> bool:
+        """Presence check without touching LRU order or hit/miss counters."""
+        return key in self._store
 
     def get(self, key: Hashable):
         if key in self._store:

@@ -19,12 +19,19 @@ Offload configurations reproduce the paper's Figure 1:
 
 Backends: 'ref' (pure jnp — also the multi-pod dry-run path), 'pallas'
 (Pallas kernels; interpret off-TPU), 'host' (numpy on the host CPU — the
-"no SmartNIC, the CPU does everything" baseline).
+"no SmartNIC, the CPU does everything" baseline), 'auto' ('pallas' on TPU,
+'ref' elsewhere — resolved per kernel call in kernels/ops.py).
+
+The engine is also drivable at row-group granularity (`scan_row_group`)
+by the shared service scheduler (repro.datapath): a tick-level decode
+pool lets N concurrent scans over the same row groups decode each
+(row group, column) pair once ("shared-scan coalescing", DESIGN.md §8).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional
 
 import jax
@@ -33,7 +40,7 @@ import numpy as np
 
 from repro.core.cache import BlockCache
 from repro.core.plan import And, BloomProbe, Cmp, Expr, InSet, Or, ScanPlan, bind_expr
-from repro.core.zonemap import prune_row_groups
+from repro.core.zonemap import estimate_selectivity, prune_row_groups
 from repro.kernels import ops
 from repro.lakeformat.encodings import (
     PACK_BLOCK,
@@ -52,7 +59,10 @@ class ScanStats:
     row_groups_total: int = 0
     row_groups_scanned: int = 0
     encoded_bytes: int = 0
-    decoded_bytes: int = 0
+    decoded_bytes: int = 0  # decode output materialized for this scan
+    decoded_bytes_fresh: int = 0  # subset actually decoded now (no pool/cache hit)
+    pool_hits: int = 0  # (rg, column) decodes served by a shared decode pool
+    pool_hit_bytes: int = 0
     rows_total: int = 0
     rows_out: int = 0
     fused: bool = False
@@ -124,15 +134,49 @@ class DatapathEngine:
         out[: arr.shape[0]] = arr
         return jnp.asarray(out)
 
-    def _decode_column(self, reader, rg: int, name: str, col: EncodedColumn, L: int):
-        key = ("rg", reader.path, rg, name, self.backend)
-        if self.offload in ("preloaded", "prefiltered"):
+    def rg_cache_key(self, reader, rg: int, name: str):
+        """BlockCache / decode-pool key for one decoded row-group column."""
+        return ("rg", reader.path, rg, name, self.backend)
+
+    def _decode_column(
+        self,
+        reader,
+        rg: int,
+        name: str,
+        col: EncodedColumn,
+        L: int,
+        offload: Optional[str] = None,
+        pool: Optional[Dict] = None,
+        stats: Optional[ScanStats] = None,
+    ):
+        offload = offload or self.offload
+        key = self.rg_cache_key(reader, rg, name)
+        if pool is not None:
+            hit = pool.get(key)
+            if hit is not None:
+                if offload in ("preloaded", "prefiltered") and key not in self.cache:
+                    self.cache.put(key, hit)  # pool hits must still persist
+                if stats is not None:
+                    stats.decoded_bytes += int(hit.nbytes)
+                    stats.pool_hits += 1
+                    stats.pool_hit_bytes += int(hit.nbytes)
+                return hit, True
+        if offload in ("preloaded", "prefiltered"):
             hit = self.cache.get(key)
             if hit is not None:
+                if pool is not None:
+                    pool[key] = hit
+                if stats is not None:
+                    stats.decoded_bytes += int(hit.nbytes)
                 return hit, True
         arr = self._decode_host(col, L) if self.backend == "host" else self._decode_device(col, L)
-        if self.offload in ("preloaded", "prefiltered"):
+        if offload in ("preloaded", "prefiltered"):
             self.cache.put(key, arr)
+        if pool is not None:
+            pool[key] = arr
+        if stats is not None:
+            stats.decoded_bytes += int(arr.nbytes)
+            stats.decoded_bytes_fresh += int(arr.nbytes)
         return arr, False
 
     # ------------------------------------------------------------------
@@ -228,23 +272,171 @@ class DatapathEngine:
         return lo, hi
 
     # ------------------------------------------------------------------
+    # service hooks (metadata only — used by repro.datapath for admission
+    # control and the adaptive offload policy)
+    # ------------------------------------------------------------------
+    def plan_cache_key(self, reader, plan: ScanPlan, blooms: Optional[Dict] = None):
+        """Prefiltered-cache key for a whole scan: plan signature + backend +
+        a digest of any probe-side bloom filters.  Blooms are per-caller
+        state that the plan signature cannot see — leaving them out would
+        let one tenant's semijoin result answer another tenant's probe."""
+        key = ("scan", reader.path, plan.signature(), self.backend)
+        if blooms:
+            digest = tuple(
+                sorted(
+                    (name, hashlib.sha1(np.asarray(bits).tobytes()).hexdigest()[:16])
+                    for name, bits in blooms.items()
+                )
+            )
+            key += (digest,)
+        return key
+
+    def estimate_selectivity(self, reader, plan: ScanPlan) -> float:
+        """Estimated fraction of rows surviving the plan's predicate, from
+        zone maps alone (uniform-within-row-group assumption)."""
+        pred = bind_expr(plan.predicate, reader)
+        return estimate_selectivity(reader, pred)
+
+    def estimate_scan_bytes(self, reader, plan: ScanPlan, row_groups=None) -> int:
+        """Encoded bytes the scan would pull over the storage->NIC hop,
+        after zone-map pruning.  Metadata only.  Pass `row_groups` when the
+        caller already pruned (the service does, at admission)."""
+        if row_groups is None:
+            pred = bind_expr(plan.predicate, reader)
+            row_groups = prune_row_groups(reader, pred)
+        need = plan.all_columns()
+        total = 0
+        for rg in row_groups:
+            cols = reader.row_group_meta(rg)["columns"]
+            total += sum(cols[c]["encoded_bytes"] for c in need if c in cols)
+        return total
+
+    # ------------------------------------------------------------------
     # scan
     # ------------------------------------------------------------------
-    def scan(self, reader, plan: ScanPlan, blooms: Optional[Dict[str, jax.Array]] = None) -> ScanResult:
+    def scan_row_group(
+        self,
+        reader,
+        rg: int,
+        plan: ScanPlan,
+        pred: Optional[Expr],
+        blooms: Dict[str, jax.Array],
+        stats: ScanStats,
+        pool: Optional[Dict] = None,
+        offload: Optional[str] = None,
+    ):
+        """Decode + filter ONE row group; the entry point the service
+        scheduler drives.  `pred` must already be bound (bind_expr).
+
+        Returns (cols, mask): `cols` maps each needed column to its decoded
+        array — or None for a predicate-only column skipped under fusion —
+        and `mask` is (L,) bool including row validity.  `pool` is an
+        optional tick-level decode pool shared across coalesced scans.
+        """
+        need = plan.all_columns()
+        proj = plan.columns
+        n = reader.row_group_meta(rg)["n"]
+        L = -(-n // PACK_BLOCK) * PACK_BLOCK
+
+        # Fully resident shortcut: every needed column already decoded in
+        # the tick pool (coalescing) or, under preloaded/prefiltered, in the
+        # BlockCache -> no encoded fetch at all.  Fusable plans never
+        # qualify (their predicate column is never decoded), so the mask is
+        # always _eval over the exact same resident arrays a direct scan of
+        # this plan shape would produce — bit-identity preserved.
+        mode = offload or self.offload
+        resident = False
+        if pool is not None or mode in ("preloaded", "prefiltered"):
+            keys = [self.rg_cache_key(reader, rg, name) for name in need]
+            resident = (pool is not None and all(k in pool for k in keys)) or (
+                mode in ("preloaded", "prefiltered") and all(k in self.cache for k in keys)
+            )
+        if resident:
+            cols = {}
+            for name in need:
+                arr, _ = self._decode_column(
+                    reader, rg, name, None, L, offload=offload, pool=pool, stats=stats
+                )
+                cols[name] = arr
+            mask = (
+                self._eval(pred, cols, blooms)
+                if pred is not None
+                else jnp.ones((L,), jnp.bool_)
+            )
+            mask = mask & (jnp.arange(L) < n)
+            return cols, mask
+
+        enc = reader.read_encoded(rg, need)
+        stats.encoded_bytes += sum(c.encoded_bytes() for c in enc.values())
+
+        fuse = None
+        if self.backend in ("ref", "pallas", "auto"):
+            fuse = self._fusable(pred, enc, proj)
+
+        cols: Dict[str, Optional[jax.Array]] = {}
+        if fuse is not None:
+            stats.fused = True
+            lo, hi = fuse
+            fmask, _ = ops.fused_scan(
+                jnp.asarray(enc[pred.column].buffers["packed"]),
+                enc[pred.column].k,
+                lo,
+                hi,
+                backend=self.backend,
+            )
+            fmask = fmask.reshape(-1)[:L]
+            for name in proj:
+                arr, _ = self._decode_column(
+                    reader, rg, name, enc[name], L, offload=offload, pool=pool, stats=stats
+                )
+                cols[name] = arr
+            mask = fmask
+        else:
+            for name in need:
+                arr, _ = self._decode_column(
+                    reader, rg, name, enc[name], L, offload=offload, pool=pool, stats=stats
+                )
+                cols[name] = arr
+            mask = (
+                self._eval(pred, cols, blooms)
+                if pred is not None
+                else jnp.ones((L,), jnp.bool_)
+            )
+
+        mask = mask & (jnp.arange(L) < n)  # row validity
+        for name in need:
+            cols.setdefault(name, None)  # predicate-only column under fusion
+        return cols, mask
+
+    def scan(
+        self,
+        reader,
+        plan: ScanPlan,
+        blooms: Optional[Dict[str, jax.Array]] = None,
+        offload: Optional[str] = None,
+        pool: Optional[Dict] = None,
+        row_groups=None,
+    ) -> ScanResult:
+        """Full pushed-down scan.  `offload` overrides the engine-wide mode
+        for this call (the adaptive policy's per-request knob); `pool` is a
+        tick-level decode pool shared across coalesced scans; `row_groups`
+        skips re-pruning when the caller already did it (service admission)."""
+        assert offload in (None, "raw", "preloaded", "prefiltered"), offload
+        offload = offload or self.offload
         stats = ScanStats(row_groups_total=reader.n_row_groups, rows_total=reader.n_rows)
         pred = bind_expr(plan.predicate, reader)
         blooms = blooms or {}
 
-        if self.offload == "prefiltered":
-            key = ("scan", reader.path, plan.signature(), self.backend)
+        if offload == "prefiltered":
+            key = self.plan_cache_key(reader, plan, blooms)
             hit = self.cache.get(key)
             if hit is not None:
                 stats.cache_hit = True
                 stats.rows_out = int(hit.count)
                 return ScanResult(hit.columns, hit.mask, hit.count, stats)
 
-        # 1) zone-map pruning (host, metadata only)
-        rgs = prune_row_groups(reader, pred)
+        # 1) zone-map pruning (host, metadata only) — or the caller's
+        rgs = list(row_groups) if row_groups is not None else prune_row_groups(reader, pred)
         stats.row_groups_scanned = len(rgs)
 
         need = plan.all_columns()
@@ -253,49 +445,11 @@ class DatapathEngine:
         per_rg_mask: List[jax.Array] = []
 
         for rg in rgs:
-            enc = reader.read_encoded(rg, need)
-            n = reader.row_group_meta(rg)["n"]
-            L = -(-n // PACK_BLOCK) * PACK_BLOCK
-            stats.encoded_bytes += sum(c.encoded_bytes() for c in enc.values())
-
-            fuse = None
-            if self.backend in ("ref", "pallas", "auto"):
-                fuse = self._fusable(pred, enc, proj)
-
-            cols: Dict[str, jax.Array] = {}
-            if fuse is not None:
-                stats.fused = True
-                lo, hi = fuse
-                fmask, _ = ops.fused_scan(
-                    jnp.asarray(enc[pred.column].buffers["packed"]),
-                    enc[pred.column].k,
-                    lo,
-                    hi,
-                    backend=self.backend,
-                )
-                fmask = fmask.reshape(-1)[:L]
-                for name in proj:
-                    arr, _ = self._decode_column(reader, rg, name, enc[name], L)
-                    cols[name] = arr
-                    stats.decoded_bytes += int(arr.nbytes)
-                mask = fmask
-            else:
-                for name in need:
-                    arr, _ = self._decode_column(reader, rg, name, enc[name], L)
-                    cols[name] = arr
-                    stats.decoded_bytes += int(arr.nbytes)
-                mask = (
-                    self._eval(pred, cols, blooms)
-                    if pred is not None
-                    else jnp.ones((L,), jnp.bool_)
-                )
-
-            mask = mask & (jnp.arange(L) < n)  # row validity
+            cols, mask = self.scan_row_group(
+                reader, rg, plan, pred, blooms, stats, pool=pool, offload=offload
+            )
             for name in need:
-                if name in cols:
-                    per_rg_cols[name].append(cols[name])
-                else:  # predicate-only column under fusion: keep placeholder
-                    per_rg_cols[name].append(None)
+                per_rg_cols[name].append(cols[name])
             per_rg_mask.append(mask)
 
         if not rgs:  # everything pruned
@@ -314,8 +468,8 @@ class DatapathEngine:
 
         result = ScanResult(out_cols, mask, count, stats)
         stats.rows_out = int(count)
-        if self.offload == "prefiltered":
-            self.cache.put(("scan", reader.path, plan.signature(), self.backend), result)
+        if offload == "prefiltered":
+            self.cache.put(self.plan_cache_key(reader, plan, blooms), result)
         return result
 
     # ------------------------------------------------------------------

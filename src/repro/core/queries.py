@@ -265,3 +265,19 @@ def q19(engine: DatapathEngine, readers: Dict) -> dict:
 QUERIES = {"q1": q1, "q6": q6, "q12": q12, "q14": q14, "q15": q15, "q19": q19}
 SCAN_HEAVY = ("q6", "q14", "q15")
 AGG_HEAVY = ("q1", "q12", "q19")
+
+
+# ---------------------------------------------------------------------------
+# Service-client path: run any query through the shared DatapathService
+# ---------------------------------------------------------------------------
+
+
+def run_via_service(service, name: str, readers: Dict, tenant: str = "default", **kwargs):
+    """Run one of the six queries through a repro.datapath.DatapathService.
+
+    The service client is engine-compatible (`.scan(reader, plan, blooms)`),
+    so every pushed-down scan in the query goes through admission control,
+    the tick scheduler and shared-scan coalescing instead of calling the
+    engine directly.  Results are bit-identical to the direct-engine path
+    (tests/test_datapath.py)."""
+    return QUERIES[name](service.client(tenant), readers, **kwargs)

@@ -56,3 +56,95 @@ def prune_row_groups(reader, predicate: Optional[Expr]) -> List[int]:
     cols = set(expr_columns(predicate))
     zonemaps = {c: reader.zonemaps(c) for c in cols}
     return [rg for rg in range(n) if _maybe_true(predicate, zonemaps, rg)]
+
+
+# ---------------------------------------------------------------------------
+# Selectivity estimation (metadata only) — the adaptive-offload-policy input
+# ---------------------------------------------------------------------------
+
+_BLOOM_SELECTIVITY = 0.5  # membership is not derivable from min/max
+_EQ_NARROW = 0.1  # eq on a sub-unit float range: cardinality unknown
+
+
+def _eq_frac(lo: float, hi: float, v: float, width: float) -> float:
+    if not (lo <= v <= hi):
+        return 0.0
+    # integers: ~width+1 distinct values; narrow float ranges (width < 1)
+    # would invert the estimate under 1/width, so use a fixed guess
+    return 1.0 / (width + 1.0) if width >= 1.0 else _EQ_NARROW
+
+
+def _frac_true(e: Expr, zonemaps: dict, rg: int) -> float:
+    """Estimated fraction of rows in row group `rg` satisfying e, assuming
+    values uniform over [min, max].  Cheap and rough by design — it only has
+    to rank requests for the offload policy, not be an optimizer."""
+    if isinstance(e, Cmp):
+        zm = zonemaps[e.column][rg]
+        lo, hi = float(zm["min"]), float(zm["max"])
+        width = hi - lo
+        v = e.value
+        if width <= 0:
+            return 1.0 if _maybe_true(e, zonemaps, rg) else 0.0
+        if e.op == "between":
+            a, b = float(v[0]), float(v[1])
+            return max(0.0, min(hi, b) - max(lo, a)) / width
+        v = float(v)
+        if e.op in ("lt", "le"):
+            return min(1.0, max(0.0, (v - lo) / width))
+        if e.op in ("gt", "ge"):
+            return min(1.0, max(0.0, (hi - v) / width))
+        if e.op == "eq":
+            return _eq_frac(lo, hi, v, width)
+        if e.op == "ne":
+            return 1.0 - _eq_frac(lo, hi, v, width)
+        raise ValueError(e.op)
+    if isinstance(e, InSet):
+        zm = zonemaps[e.column][rg]
+        lo, hi = float(zm["min"]), float(zm["max"])
+        width = hi - lo
+        if width <= 0:
+            return 1.0 if any(lo <= float(v) <= hi for v in e.values) else 0.0
+        return min(1.0, sum(_eq_frac(lo, hi, float(v), width) for v in e.values))
+    if isinstance(e, BloomProbe):
+        return _BLOOM_SELECTIVITY
+    if isinstance(e, And):
+        f = 1.0
+        for c in e.children:
+            f *= _frac_true(c, zonemaps, rg)
+        return f
+    if isinstance(e, Or):
+        f = 1.0
+        for c in e.children:
+            f *= 1.0 - _frac_true(c, zonemaps, rg)
+        return 1.0 - f
+    raise TypeError(e)
+
+
+def prune_and_estimate(reader, predicate: Optional[Expr]):
+    """One zone-map walk -> (surviving row-group ids, estimated selectivity).
+
+    The admission path needs both; computing them together halves the
+    per-request metadata cost vs prune_row_groups + estimate_selectivity."""
+    n_rg = reader.n_row_groups
+    if predicate is None:
+        return list(range(n_rg)), 1.0
+    from repro.core.plan import expr_columns
+
+    cols = set(expr_columns(predicate))
+    zonemaps = {c: reader.zonemaps(c) for c in cols}
+    rgs: List[int] = []
+    total = 0
+    surviving = 0.0
+    for rg in range(n_rg):
+        n = reader.row_group_meta(rg)["n"]
+        total += n
+        if _maybe_true(predicate, zonemaps, rg):
+            rgs.append(rg)
+            surviving += _frac_true(predicate, zonemaps, rg) * n
+    return rgs, surviving / max(total, 1)
+
+
+def estimate_selectivity(reader, predicate: Optional[Expr]) -> float:
+    """Estimated fraction of the table's rows surviving `predicate`,
+    row-count-weighted across row groups.  Pruned groups contribute 0."""
+    return prune_and_estimate(reader, predicate)[1]

@@ -1,0 +1,25 @@
+"""datapath — the SmartNIC as a shared, scheduled, multi-tenant service.
+
+service.py    DatapathService: bounded queue, admission control, quotas
+scheduler.py  per-tick batching + shared-scan coalescing (DecodePool)
+netsim.py     storage->NIC bandwidth/latency model, prefetch overlap
+policy.py     adaptive raw/preloaded/prefiltered choice per request
+telemetry.py  queue depth, decoded-bytes-saved, per-tenant p50/p99
+
+See DESIGN.md §8.  The synchronous per-caller path (core/engine.py)
+remains the substrate; the service schedules it.
+"""
+
+from repro.datapath.netsim import DecodeModel, LinkModel, PrefetchPipeline  # noqa: F401
+from repro.datapath.policy import AdaptiveOffloadPolicy, StaticPolicy  # noqa: F401
+from repro.datapath.scheduler import DecodePool, run_tick  # noqa: F401
+from repro.datapath.service import (  # noqa: F401
+    DatapathService,
+    QueueFull,
+    QuotaExceeded,
+    ScanRequest,
+    ServiceClient,
+    TenantQuota,
+    Ticket,
+)
+from repro.datapath.telemetry import Telemetry  # noqa: F401

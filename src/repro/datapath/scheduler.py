@@ -1,0 +1,134 @@
+"""Tick scheduler: batch queued scans and coalesce shared row groups.
+
+Coalescing is the service's core win (the paper's "one device serves many
+queries"): requests in one tick that touch the same table share a
+DecodePool keyed by (path, row group, column, backend), so each pair is
+decoded ONCE and every coalesced predicate is evaluated over the shared
+decoded columns.  Under concurrent TPC-H-style load the queries hit the
+same hot columns (l_shipdate, l_extendedprice, ...), so total decoded
+bytes drop superlinearly in tenant count — benchmarks/service_bench.py
+measures exactly that.
+
+The storage->NIC fetch for the tick's union of row groups is fed through
+netsim's double-buffered PrefetchPipeline, recording how much of the
+fetch time hides behind on-device decode.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+class DecodePool(dict):
+    """Tick-scoped shared decode pool with hit accounting and a byte budget.
+
+    The engine consults it before the BlockCache and before decoding
+    (engine._decode_column); `puts` therefore counts unique (row group,
+    column) decodes materialized this tick — the number a set of
+    perfectly-coalesced scans shares.  Once `max_bytes` of decoded output
+    is pinned, further inserts are refused (later scans simply decode for
+    themselves), so one oversized tick cannot bypass the BlockCache's
+    capacity accounting via the pool.
+    """
+
+    def __init__(self, max_bytes: int = 1 << 30):
+        super().__init__()
+        self.max_bytes = max_bytes
+        self.used_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+        self.rejected_puts = 0
+        self.hit_bytes = 0
+
+    def get(self, key, default=None):
+        if key in self:
+            self.hits += 1
+            val = dict.__getitem__(self, key)
+            self.hit_bytes += int(val.nbytes)
+            return val
+        self.misses += 1
+        return default
+
+    def __setitem__(self, key, value):
+        if key not in self:
+            nb = int(value.nbytes)
+            if self.used_bytes + nb > self.max_bytes:
+                self.rejected_puts += 1
+                return
+            self.puts += 1
+            self.used_bytes += nb
+        dict.__setitem__(self, key, value)
+
+
+def run_tick(service, batch: List) -> None:
+    """Execute one tick's batch: group by table, coalesce, scan, simulate
+    the fetch pipeline.  Results land on each request's ticket."""
+    groups: Dict[str, List] = {}
+    for req in batch:
+        groups.setdefault(req.reader.path, []).append(req)
+
+    tel = service.telemetry
+    for path, reqs in groups.items():
+        pool = DecodePool(max_bytes=service.pool_bytes)
+        if len(reqs) > 1:
+            tel.inc("coalesced_groups")
+            tel.inc("coalesced_requests", len(reqs))
+        for req in reqs:
+            try:
+                mode = service.policy.choose(
+                    service.engine, req.reader, req.plan, req.blooms,
+                    row_groups=req.row_groups,
+                    selectivity=req.est_rows / max(req.reader.n_rows, 1),
+                )
+                tel.inc(f"offload_{mode}")
+                res = service.engine.scan(
+                    req.reader, req.plan, blooms=req.blooms, offload=mode,
+                    pool=pool, row_groups=req.row_groups,
+                )
+            except Exception as e:  # noqa: BLE001 — isolate faulty requests
+                req.ticket.error = e
+                tel.inc("failed")
+                continue
+            req.ticket.result = res
+            tel.inc("decoded_bytes", res.stats.decoded_bytes)
+            tel.inc("decoded_bytes_fresh", res.stats.decoded_bytes_fresh)
+            tel.inc("encoded_bytes", res.stats.encoded_bytes)
+            tel.inc("rows_out", res.stats.rows_out)
+            if res.stats.cache_hit:
+                tel.inc("prefiltered_hits")
+        tel.inc("decoded_bytes_saved", pool.hit_bytes)
+        if pool.rejected_puts:
+            tel.inc("pool_rejected_puts", pool.rejected_puts)
+
+        _simulate_fetch(service, reqs)
+
+
+def _simulate_fetch(service, reqs: List) -> None:
+    """Model the tick's storage->NIC transfer for the union of row groups
+    actually read (cache-hit and failed requests fetch nothing),
+    double-buffered against on-device decode.  Row groups were pruned once
+    at admission (ScanRequest.row_groups) — no footer re-walk here."""
+    per_rg_cols: Dict[int, set] = {}
+    reader = reqs[0].reader
+    for req in reqs:
+        res = req.ticket.result
+        if res is None or res.stats.cache_hit or res.stats.encoded_bytes == 0:
+            continue  # failed / cache-served / fully resident: nothing fetched
+        for rg in req.row_groups:
+            per_rg_cols.setdefault(rg, set()).update(req.plan.all_columns())
+    if not per_rg_cols:
+        return
+    enc: List[int] = []
+    dec: List[int] = []
+    for rg in sorted(per_rg_cols):
+        meta = reader.row_group_meta(rg)
+        cols = meta["columns"]
+        names = [c for c in per_rg_cols[rg] if c in cols]
+        enc.append(sum(cols[c]["encoded_bytes"] for c in names))
+        dec.append(meta["n"] * 4 * len(names))  # int32/float32 output
+    sim = service.pipeline.simulate(enc, dec)
+    tel = service.telemetry
+    tel.inc("sim_fetch_serial_s", sim["serial_s"])
+    tel.inc("sim_fetch_overlapped_s", sim["overlapped_s"])
+    tel.inc("sim_fetch_saved_s", sim["saved_s"])

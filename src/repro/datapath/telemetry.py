@@ -1,0 +1,69 @@
+"""Service telemetry: queue depth, coalescing savings, per-tenant latency.
+
+The paper's SmartNIC is a shared appliance, so the numbers an operator
+needs are fleet numbers: how deep the queue runs, how many decoded bytes
+shared-scan coalescing saved, and what tick latency each tenant sees at
+p50/p99.  Everything here is plain Python (no jax) — it must stay cheap
+enough to record on every tick.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Dict, List
+
+
+def quantile(xs: List[float], q: float) -> float:
+    """Nearest-rank quantile of an unsorted list (0 <= q <= 1)."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    idx = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
+    return s[idx]
+
+
+class Telemetry:
+    def __init__(self, max_samples: int = 4096):
+        self.counters: Dict[str, float] = collections.defaultdict(float)
+        self.queue_depth: collections.deque = collections.deque(maxlen=max_samples)
+        self._tenant_latency: Dict[str, collections.deque] = {}
+        self._tick_seconds: collections.deque = collections.deque(maxlen=max_samples)
+        self._max_samples = max_samples
+
+    # -- recording ---------------------------------------------------------
+    def inc(self, name: str, value: float = 1.0) -> None:
+        self.counters[name] += value
+
+    def sample_queue_depth(self, depth: int) -> None:
+        self.queue_depth.append(depth)
+
+    def observe_tick(self, seconds: float) -> None:
+        self._tick_seconds.append(seconds)
+
+    def observe_latency(self, tenant: str, seconds: float) -> None:
+        """One request's submit->complete wall latency for `tenant`."""
+        dq = self._tenant_latency.setdefault(
+            tenant, collections.deque(maxlen=self._max_samples)
+        )
+        dq.append(seconds)
+
+    # -- reading -----------------------------------------------------------
+    def tenant_latency(self, tenant: str) -> Dict[str, float]:
+        xs = list(self._tenant_latency.get(tenant, ()))
+        return {
+            "n": len(xs),
+            "p50_s": quantile(xs, 0.50),
+            "p99_s": quantile(xs, 0.99),
+        }
+
+    def snapshot(self) -> dict:
+        depths = list(self.queue_depth)
+        ticks = list(self._tick_seconds)
+        return {
+            "counters": dict(self.counters),
+            "queue_depth_max": max(depths) if depths else 0,
+            "queue_depth_mean": sum(depths) / len(depths) if depths else 0.0,
+            "tick_p50_s": quantile(ticks, 0.50),
+            "tick_p99_s": quantile(ticks, 0.99),
+            "tenants": {t: self.tenant_latency(t) for t in self._tenant_latency},
+        }

@@ -1,0 +1,368 @@
+"""Multi-tenant datapath service: bit-identity vs direct engine scans,
+admission control / quotas, shared-scan coalescing, adaptive policy,
+netsim pipeline math, telemetry quantiles."""
+
+import numpy as np
+import pytest
+
+from repro.core import BlockCache, Cmp, DatapathEngine, InSet, ScanPlan, and_
+from repro.core import tpch
+from repro.core.queries import QUERIES, run_via_service
+from repro.datapath import (
+    AdaptiveOffloadPolicy,
+    DatapathService,
+    DecodePool,
+    LinkModel,
+    PrefetchPipeline,
+    QueueFull,
+    QuotaExceeded,
+    StaticPolicy,
+    Telemetry,
+    TenantQuota,
+)
+from repro.datapath.telemetry import quantile
+from repro.lakeformat.reader import LakeReader
+
+
+@pytest.fixture(scope="module")
+def small_tables(tmp_path_factory):
+    d = tmp_path_factory.mktemp("tpch_dp")
+    paths = tpch.write_tables(str(d), sf=0.05, seed=0, row_group_size=8192)
+    return paths
+
+
+@pytest.fixture(scope="module")
+def readers(small_tables):
+    return {k: LakeReader(p) for k, p in small_tables.items()}
+
+
+def _service(**kw):
+    kw.setdefault("engine", DatapathEngine(backend="ref", cache=BlockCache(1 << 30)))
+    return DatapathService(**kw)
+
+
+PLANS = [
+    ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+             Cmp("l_shipdate", "between", (365, 729))),  # fused fast path
+    ScanPlan("lineitem", ["l_quantity", "l_extendedprice"],
+             and_(Cmp("l_shipdate", "between", (365, 729)),
+                  Cmp("l_quantity", "lt", 25))),  # multi-column predicate
+    ScanPlan("lineitem", ["l_quantity"], InSet("l_shipmode", ("MAIL", "SHIP"))),
+    ScanPlan("lineitem", ["l_quantity"], Cmp("l_quantity", "le", 3), compact=True),
+    ScanPlan("part", ["p_partkey", "p_size"], Cmp("p_size", "le", 10)),
+]
+
+
+def _assert_identical(got, want):
+    assert int(got.count) == int(want.count)
+    assert np.array_equal(np.asarray(got.mask), np.asarray(want.mask))
+    assert set(got.columns) == set(want.columns)
+    for name in want.columns:
+        assert np.array_equal(
+            np.asarray(got.columns[name]), np.asarray(want.columns[name])
+        ), name
+
+
+@pytest.mark.parametrize("idx", range(len(PLANS)))
+def test_service_bit_identical_to_direct_scan(readers, idx):
+    """(a) service results == direct DatapathEngine.scan(), bit for bit,
+    with the adaptive policy free to pick any offload mode."""
+    plan = PLANS[idx]
+    direct = DatapathEngine(backend="ref").scan(readers[plan.table], plan)
+    svc = _service(policy=AdaptiveOffloadPolicy())
+    for _ in range(2):  # second pass may hit preloaded/prefiltered paths
+        ticket = svc.submit("t0", readers[plan.table], plan)
+        _assert_identical(svc.result(ticket), direct)
+
+
+def test_service_queries_match_direct(readers):
+    """All six queries through the service-client path == direct engine."""
+    eng = DatapathEngine(backend="ref")
+    svc = _service(batch_per_tick=8)
+    for name in QUERIES:
+        assert run_via_service(svc, name, readers, tenant=name) == QUERIES[name](eng, readers)
+
+
+def test_quota_rejects_over_budget_tenant(readers):
+    """(b) byte and row quotas both reject at admission; other tenants and
+    later windows are unaffected."""
+    svc = _service(
+        quotas={"small": TenantQuota(max_bytes=1000), "narrow": TenantQuota(max_rows=10)},
+        quota_window_ticks=4,
+    )
+    plan = PLANS[0]
+    with pytest.raises(QuotaExceeded):
+        svc.submit("small", readers["lineitem"], plan)
+    with pytest.raises(QuotaExceeded):
+        svc.submit("narrow", readers["lineitem"], plan)
+    # unconstrained tenant still admitted
+    t = svc.submit("big", readers["lineitem"], plan)
+    assert int(svc.result(t).count) > 0
+    assert svc.telemetry.counters["rejected_quota_bytes"] == 1
+    assert svc.telemetry.counters["rejected_quota_rows"] == 1
+
+
+def test_quota_window_refills(readers):
+    plan = ScanPlan("part", ["p_size"], Cmp("p_size", "le", 5))
+    est = DatapathEngine(backend="ref").estimate_scan_bytes(readers["part"], plan)
+    svc = _service(quotas={"t": TenantQuota(max_bytes=int(est * 1.5))},
+                   quota_window_ticks=2, batch_per_tick=1)
+    svc.submit("t", readers["part"], plan)
+    with pytest.raises(QuotaExceeded):  # same window, queue busy: rejected
+        svc.submit("t", readers["part"], plan)
+    svc.drain()  # tick 1
+    svc.tick()  # tick 2 = window boundary, usage refills
+    assert svc.submit("t", readers["part"], plan) is not None
+
+
+def test_quota_refills_on_idle_service(readers):
+    """An exhausted tenant must not be locked out forever once the queue is
+    empty — idle submits fast-forward the window instead of requiring the
+    caller to hand-crank tick()."""
+    plan = ScanPlan("part", ["p_size"], Cmp("p_size", "le", 5))
+    est = DatapathEngine(backend="ref").estimate_scan_bytes(readers["part"], plan)
+    svc = _service(quotas={"t": TenantQuota(max_bytes=int(est * 1.5))},
+                   quota_window_ticks=1000)
+    svc.result(svc.submit("t", readers["part"], plan))  # exhausts the window
+    # queue now empty: the next submit refills rather than raising
+    t2 = svc.submit("t", readers["part"], plan)
+    assert int(svc.result(t2).count) >= 0
+    # but a request that no fresh window could ever afford still rejects
+    with pytest.raises(QuotaExceeded):
+        _service(quotas={"t": TenantQuota(max_bytes=10)}).submit(
+            "t", readers["part"], plan
+        )
+
+
+def test_queue_depth_admission(readers):
+    svc = _service(max_queue_depth=2)
+    plan = PLANS[0]
+    svc.submit("a", readers["lineitem"], plan)
+    svc.submit("b", readers["lineitem"], plan)
+    with pytest.raises(QueueFull):
+        svc.submit("c", readers["lineitem"], plan)
+    svc.drain()
+    assert svc.submit("c", readers["lineitem"], plan) is not None
+
+
+def test_coalescing_decodes_each_group_once(readers):
+    """(c) two scans over the same row groups in one tick: every shared
+    (row group, column) pair is decoded exactly once."""
+    r = readers["lineitem"]
+    plan_a = ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+                      Cmp("l_shipdate", "between", (365, 729)))
+    plan_b = ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+                      Cmp("l_shipdate", "between", (400, 800)))
+    svc = _service(batch_per_tick=2, policy=StaticPolicy("raw"))
+    ta = svc.submit("a", r, plan_a)
+    tb = svc.submit("b", r, plan_b)
+
+    # drive one tick's batch by hand with an inspectable shared pool
+    batch, svc.queue = svc.queue[:2], svc.queue[2:]
+    pool = DecodePool()
+    for req in batch:
+        res = svc.engine.scan(req.reader, req.plan, blooms=req.blooms,
+                              offload="raw", pool=pool)
+        req.ticket.result = res
+        req.ticket.status = "done"
+
+    # both plans decode the same 2 projected columns over the same groups:
+    # unique decodes == pool entries == puts; second scan only pool-hits
+    assert pool.puts == len(pool)
+    assert pool.hits > 0
+    a, b = ta.result, tb.result
+    assert a.stats.decoded_bytes_fresh > 0
+    assert b.stats.decoded_bytes_fresh == 0  # fully served from the pool
+    assert b.stats.pool_hits == len(plan_b.columns) * a.stats.row_groups_scanned
+
+    # results still match independent direct scans
+    _assert_identical(a, DatapathEngine(backend="ref").scan(r, plan_a))
+    _assert_identical(b, DatapathEngine(backend="ref").scan(r, plan_b))
+
+
+def test_coalescing_saves_decoded_bytes_for_four_tenants(readers):
+    """Fresh decoded bytes through one coalesced tick << 4 independent scans."""
+    from benchmarks.service_bench import _run_independent, _run_service, tenant_plans
+
+    plans = tenant_plans(4)
+    ind = _run_independent(readers, plans)
+    svc = _run_service(readers, plans)
+    svc_fresh = int(svc.telemetry.counters["decoded_bytes_fresh"])
+    assert svc_fresh < ind
+    assert int(svc.telemetry.counters["decoded_bytes_saved"]) > 0
+
+
+def test_prefiltered_cache_keys_include_blooms(readers):
+    """Two tenants, identical plan, DIFFERENT bloom bits: the recurring-
+    signature promotion to 'prefiltered' must never serve one tenant's
+    semijoin result to the other."""
+    import jax.numpy as jnp
+
+    from repro.core.plan import BloomProbe
+    from repro.kernels import ops
+
+    r = readers["lineitem"]
+    plan = ScanPlan("lineitem", ["l_partkey"], BloomProbe("l_partkey", name="b"))
+    bloom_a = ops.bloom_build(jnp.arange(0, 30, dtype=jnp.int32), 1 << 14)
+    bloom_b = ops.bloom_build(jnp.arange(500, 530, dtype=jnp.int32), 1 << 14)
+    eng = DatapathEngine(backend="ref")
+    want_a = eng.scan(r, plan, blooms={"b": bloom_a})
+    want_b = eng.scan(r, plan, blooms={"b": bloom_b})
+    assert int(want_a.count) != int(want_b.count)  # distinct probe sets
+
+    svc = _service(policy=AdaptiveOffloadPolicy(repeat_k=2))
+    for _ in range(2):  # repeat to trigger prefiltered promotion
+        got_a = svc.result(svc.submit("a", r, plan, blooms={"b": bloom_a}))
+        got_b = svc.result(svc.submit("b", r, plan, blooms={"b": bloom_b}))
+        _assert_identical(got_a, want_a)
+        _assert_identical(got_b, want_b)
+
+
+def test_failed_request_does_not_wedge_the_batch(readers):
+    """A faulty request errors its own ticket; co-batched requests still
+    complete, and result() raises instead of spinning forever."""
+    svc = _service(batch_per_tick=2, policy=StaticPolicy("raw"))
+    bad_plan = ScanPlan("lineitem", ["no_such_column"])
+    good_plan = PLANS[0]
+    t_bad = svc.submit("a", readers["lineitem"], bad_plan)
+    t_good = svc.submit("b", readers["lineitem"], good_plan)
+    svc.drain()
+    assert t_bad.status == "error" and t_good.status == "done"
+    with pytest.raises(KeyError):
+        svc.result(t_bad)
+    assert int(svc.result(t_good).count) > 0
+    assert svc.telemetry.counters["failed"] == 1
+
+
+def test_decode_pool_budget_is_enforced(readers):
+    """A tiny pool budget refuses inserts instead of pinning unbounded
+    decoded bytes; scans still return correct results."""
+    r = readers["lineitem"]
+    plan = PLANS[0]
+    svc = _service(batch_per_tick=2, policy=StaticPolicy("raw"), pool_bytes=1024)
+    ta = svc.submit("a", r, plan)
+    tb = svc.submit("b", r, plan)
+    svc.drain()
+    assert svc.telemetry.counters["pool_rejected_puts"] > 0
+    assert svc.telemetry.counters["decoded_bytes_saved"] == 0  # nothing pooled
+    direct = DatapathEngine(backend="ref").scan(r, plan)
+    _assert_identical(ta.result, direct)
+    _assert_identical(tb.result, direct)
+
+
+def test_pool_hit_still_populates_preloaded_cache(readers):
+    """A 'preloaded' request served from the tick pool must still leave its
+    decoded columns in the persistent BlockCache for future ticks."""
+    r = readers["lineitem"]
+    plan = ScanPlan("lineitem", ["l_extendedprice"],
+                    Cmp("l_shipdate", "between", (365, 729)))
+    eng = DatapathEngine(backend="ref", cache=BlockCache(1 << 30))
+    pool = DecodePool()
+    eng.scan(r, plan, offload="raw", pool=pool)  # raw: pool filled, cache not
+    assert eng.cache.stats()["entries"] == 0
+    res = eng.scan(r, plan, offload="preloaded", pool=pool)
+    assert res.stats.pool_hits > 0 and res.stats.decoded_bytes_fresh == 0
+    assert eng.cache.stats()["entries"] > 0  # persisted despite pool hits
+
+
+def test_fully_pooled_scan_skips_encoded_fetch(readers):
+    """A coalesced scan whose needed columns are all pool-resident reads
+    zero encoded bytes — and still matches the direct scan bit for bit."""
+    r = readers["lineitem"]
+    # predicate column in the projection -> non-fused -> all columns pooled
+    plan_a = ScanPlan("lineitem", ["l_quantity", "l_extendedprice"],
+                      Cmp("l_quantity", "le", 10))
+    plan_b = ScanPlan("lineitem", ["l_quantity", "l_extendedprice"],
+                      Cmp("l_quantity", "le", 20))
+    eng = DatapathEngine(backend="ref")
+    pool = DecodePool()
+    res_a = eng.scan(r, plan_a, offload="raw", pool=pool)
+    res_b = eng.scan(r, plan_b, offload="raw", pool=pool)
+    assert res_a.stats.encoded_bytes > 0
+    assert res_b.stats.encoded_bytes == 0  # no fetch: fed entirely by the pool
+    assert res_b.stats.decoded_bytes_fresh == 0
+    _assert_identical(res_b, DatapathEngine(backend="ref").scan(r, plan_b))
+
+
+def test_cache_bills_prefiltered_results_by_real_size(readers):
+    """BlockCache must account a cached ScanResult at its array size (not a
+    64-byte placeholder) so the LRU budget actually bounds service memory."""
+    r = readers["lineitem"]
+    plan = ScanPlan("lineitem", ["l_extendedprice"], Cmp("l_shipdate", "le", 1000))
+    eng = DatapathEngine(backend="ref", offload="prefiltered", cache=BlockCache(1 << 30))
+    res = eng.scan(r, plan)
+    entry_bytes = eng.cache.used
+    arrays = sum(int(a.nbytes) for a in res.columns.values()) + int(res.mask.nbytes)
+    assert entry_bytes >= arrays  # plus the rg columns it preloaded
+
+
+def test_adaptive_policy_promotes_recurring_scans(readers):
+    svc = _service(policy=AdaptiveOffloadPolicy(repeat_k=2))
+    plan = PLANS[0]
+    for _ in range(3):
+        svc.result(svc.submit("t", readers["lineitem"], plan))
+    assert svc.policy.decisions.get("prefiltered", 0) >= 1
+    assert svc.telemetry.counters.get("prefiltered_hits", 0) >= 1
+
+
+def test_selectivity_estimates_rank_predicates(readers):
+    eng = DatapathEngine(backend="ref")
+    r = readers["lineitem"]
+    narrow = eng.estimate_selectivity(
+        r, ScanPlan("lineitem", ["l_quantity"], Cmp("l_shipdate", "between", (100, 120)))
+    )
+    broad = eng.estimate_selectivity(
+        r, ScanPlan("lineitem", ["l_quantity"], Cmp("l_shipdate", "between", (0, 2000)))
+    )
+    everything = eng.estimate_selectivity(r, ScanPlan("lineitem", ["l_quantity"]))
+    assert 0.0 <= narrow < broad <= 1.0
+    assert everything == 1.0
+    # eq/ne on a sub-unit float range (l_discount spans 0.0-0.1) must not
+    # invert: ne keeps nearly everything, eq keeps little
+    ne = eng.estimate_selectivity(
+        r, ScanPlan("lineitem", ["l_quantity"], Cmp("l_discount", "ne", 0.05))
+    )
+    eq = eng.estimate_selectivity(
+        r, ScanPlan("lineitem", ["l_quantity"], Cmp("l_discount", "eq", 0.05))
+    )
+    assert ne > 0.5 > eq
+
+
+def test_preloaded_cache_resident_scan_skips_encoded_fetch(readers):
+    """Steady-state preloaded mode: once decoded columns are BlockCache-
+    resident, repeat scans fetch zero encoded bytes (no tick pool needed)."""
+    r = readers["lineitem"]
+    plan = ScanPlan("lineitem", ["l_quantity", "l_extendedprice"],
+                    Cmp("l_quantity", "le", 10))
+    eng = DatapathEngine(backend="ref", cache=BlockCache(1 << 30))
+    first = eng.scan(r, plan, offload="preloaded")
+    again = eng.scan(r, plan, offload="preloaded")
+    assert first.stats.encoded_bytes > 0
+    assert again.stats.encoded_bytes == 0
+    _assert_identical(again, DatapathEngine(backend="ref").scan(r, plan))
+
+
+def test_netsim_overlap_math():
+    pipe = PrefetchPipeline(LinkModel(bandwidth_gbps=1.0, latency_us=0.0))
+    enc = [1 << 20] * 8
+    dec = [1 << 20] * 8
+    sim = pipe.simulate(enc, dec)
+    assert sim["overlapped_s"] < sim["serial_s"]
+    assert abs(sim["serial_s"] - (sim["overlapped_s"] + sim["saved_s"])) < 1e-12
+    # perfectly balanced stages hide all but the first fetch and last decode
+    fetch = pipe.link.fetch_seconds(1 << 20)
+    dec_t = pipe.decode.decode_seconds(1 << 20)
+    expect = fetch + 7 * max(fetch, dec_t) + dec_t
+    assert abs(sim["overlapped_s"] - expect) < 1e-12
+    assert pipe.simulate([], [])["serial_s"] == 0.0
+
+
+def test_telemetry_quantiles():
+    t = Telemetry()
+    for i in range(100):
+        t.observe_latency("a", float(i))
+    lat = t.tenant_latency("a")
+    assert lat["n"] == 100
+    assert abs(lat["p50_s"] - 50.0) <= 1.0
+    assert lat["p99_s"] >= 97.0
+    assert quantile([], 0.5) == 0.0

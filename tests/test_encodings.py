@@ -3,6 +3,8 @@ file writer/reader integrity."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.lakeformat import encodings as E
