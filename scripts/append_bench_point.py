@@ -1,0 +1,50 @@
+#!/usr/bin/env python
+"""Append one perf-trajectory point to the benchmark history file.
+
+    python scripts/append_bench_point.py <new_point.json> <history.json>
+
+The history is a JSON LIST of points, newest last, each stamped with the
+git revision that produced it.  PR 1 committed a bare single-point dict;
+that legacy shape is migrated to a one-element list on first append, so
+the trajectory keeps every point ever recorded.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+
+def git_rev(root: pathlib.Path) -> str:
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=root, capture_output=True, text=True, check=True,
+        ).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"],
+            cwd=root, capture_output=True, text=True, check=True,
+        ).stdout.strip()
+        return f"{rev}-dirty" if dirty else rev
+    except Exception:  # noqa: BLE001 — not in a checkout: still record the point
+        return "unknown"
+
+
+def main() -> int:
+    src, dst = pathlib.Path(sys.argv[1]), pathlib.Path(sys.argv[2])
+    point = json.loads(src.read_text())
+    history = []
+    if dst.exists():
+        prior = json.loads(dst.read_text())
+        history = prior if isinstance(prior, list) else [prior]  # legacy dict
+    point = {"git": git_rev(dst.resolve().parent), **point}
+    history.append(point)
+    dst.write_text(json.dumps(history, indent=1, default=float) + "\n")
+    print(f"bench: appended point {point['git']} -> {dst} ({len(history)} total)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,16 @@
 #!/usr/bin/env bash
-# Tier-1 tests + the service benchmark (the perf-trajectory point).
+# Tier-1 regression gate + the service benchmark (perf-trajectory point).
 #   scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -q
-python -m benchmarks.run --fast --only service --json BENCH_service.json
+# tier-1: fail only on failures NOT present in the seed baseline
+python scripts/check_tier1.py
+
+# service benchmark — includes the `fairness` sub-report (FIFO vs WFQ under
+# 1-elephant/3-mice, hold-window savings) — appended to the perf trajectory
+python -m benchmarks.run --fast --only service --json BENCH_point.json
+python scripts/append_bench_point.py BENCH_point.json BENCH_service.json
+rm -f BENCH_point.json

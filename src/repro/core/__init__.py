@@ -9,7 +9,12 @@ tpch.py      synthetic TPC-H-like data generator
 """
 
 from repro.core.cache import BlockCache  # noqa: F401
-from repro.core.engine import DatapathEngine, ScanResult, ScanStats  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    DatapathEngine,
+    ResumableScan,
+    ScanResult,
+    ScanStats,
+)
 from repro.core.plan import (  # noqa: F401
     And,
     BloomProbe,

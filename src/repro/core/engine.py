@@ -311,6 +311,19 @@ class DatapathEngine:
             total += sum(cols[c]["encoded_bytes"] for c in need if c in cols)
         return total
 
+    def estimate_decode_bytes(self, reader, plan: ScanPlan, row_groups) -> List[int]:
+        """Estimated decoded-output bytes PER ROW GROUP (int32/float32
+        output), metadata only.  This is the unit the service's fair
+        scheduler charges virtual time in: one entry per row group makes a
+        row group the scheduler's preemption quantum."""
+        need = plan.all_columns()
+        out = []
+        for rg in row_groups:
+            meta = reader.row_group_meta(rg)
+            cols = meta["columns"]
+            out.append(meta["n"] * 4 * sum(1 for c in need if c in cols))
+        return out
+
     # ------------------------------------------------------------------
     # scan
     # ------------------------------------------------------------------
@@ -420,57 +433,32 @@ class DatapathEngine:
         """Full pushed-down scan.  `offload` overrides the engine-wide mode
         for this call (the adaptive policy's per-request knob); `pool` is a
         tick-level decode pool shared across coalesced scans; `row_groups`
-        skips re-pruning when the caller already did it (service admission)."""
-        assert offload in (None, "raw", "preloaded", "prefiltered"), offload
-        offload = offload or self.offload
-        stats = ScanStats(row_groups_total=reader.n_row_groups, rows_total=reader.n_rows)
-        pred = bind_expr(plan.predicate, reader)
-        blooms = blooms or {}
+        skips re-pruning when the caller already did it (service admission).
 
-        if offload == "prefiltered":
-            key = self.plan_cache_key(reader, plan, blooms)
-            hit = self.cache.get(key)
-            if hit is not None:
-                stats.cache_hit = True
-                stats.rows_out = int(hit.count)
-                return ScanResult(hit.columns, hit.mask, hit.count, stats)
+        Implemented as a ResumableScan driven to completion in one shot, so
+        a scan the service slices across ticks is structurally guaranteed to
+        produce the same result as a direct call."""
+        rs = ResumableScan(
+            self, reader, plan, blooms=blooms, offload=offload, row_groups=row_groups
+        )
+        if rs.result is None:
+            rs.advance(tuple(rs.pending), pool=pool)
+        return rs.result
 
-        # 1) zone-map pruning (host, metadata only) — or the caller's
-        rgs = list(row_groups) if row_groups is not None else prune_row_groups(reader, pred)
-        stats.row_groups_scanned = len(rgs)
-
-        need = plan.all_columns()
-        proj = plan.columns
-        per_rg_cols: Dict[str, List[jax.Array]] = {c: [] for c in need}
-        per_rg_mask: List[jax.Array] = []
-
-        for rg in rgs:
-            cols, mask = self.scan_row_group(
-                reader, rg, plan, pred, blooms, stats, pool=pool, offload=offload
-            )
-            for name in need:
-                per_rg_cols[name].append(cols[name])
-            per_rg_mask.append(mask)
-
-        if not rgs:  # everything pruned
-            empty = {c: jnp.zeros((0,)) for c in proj}
-            z = jnp.zeros((0,), jnp.bool_)
-            return ScanResult(empty, z, jnp.int32(0), stats)
-
-        out_cols = {
-            c: jnp.concatenate(v) for c, v in per_rg_cols.items() if v[0] is not None and c in proj
-        }
-        mask = jnp.concatenate(per_rg_mask)
-        count = jnp.sum(mask.astype(jnp.int32))
-
-        if plan.compact:
-            out_cols, mask, count = self._compact(out_cols, mask)
-
-        result = ScanResult(out_cols, mask, count, stats)
-        stats.rows_out = int(count)
-        if offload == "prefiltered":
-            self.cache.put(self.plan_cache_key(reader, plan, blooms), result)
-        return result
+    # ------------------------------------------------------------------
+    def resumable_scan(
+        self,
+        reader,
+        plan: ScanPlan,
+        blooms: Optional[Dict[str, jax.Array]] = None,
+        offload: Optional[str] = None,
+        row_groups=None,
+    ) -> "ResumableScan":
+        """A scan that can be advanced a few row groups at a time — the
+        service scheduler's preemption point (DESIGN.md §9)."""
+        return ResumableScan(
+            self, reader, plan, blooms=blooms, offload=offload, row_groups=row_groups
+        )
 
     # ------------------------------------------------------------------
     def _compact(self, cols: Dict[str, jax.Array], mask: jax.Array):
@@ -495,3 +483,110 @@ class DatapathEngine:
         total = jnp.sum(counts)
         new_mask = jnp.arange(L) < total
         return out, new_mask, total
+
+
+class ResumableScan:
+    """One pushed-down scan, resumable at row-group granularity.
+
+    The service's fair scheduler slices big scans across ticks: each tick it
+    calls `advance(next_few_row_groups, pool=tick_pool)` and, once the last
+    group lands, `result` holds the assembled ScanResult.  The per-row-group
+    work and the final assembly (concatenate → count → optional compaction →
+    prefiltered-cache put) are the exact code path `DatapathEngine.scan`
+    runs, so sliced results are bit-identical to single-shot scans no matter
+    where the preemption points fall.
+
+    `result` is non-None immediately after construction when no row-group
+    work is needed: a prefiltered-cache hit, or every group pruned.
+    """
+
+    def __init__(
+        self,
+        engine: DatapathEngine,
+        reader,
+        plan: ScanPlan,
+        blooms: Optional[Dict[str, jax.Array]] = None,
+        offload: Optional[str] = None,
+        row_groups=None,
+    ):
+        assert offload in (None, "raw", "preloaded", "prefiltered"), offload
+        self.engine = engine
+        self.reader = reader
+        self.plan = plan
+        self.offload = offload or engine.offload
+        self.blooms = blooms or {}
+        self.stats = ScanStats(row_groups_total=reader.n_row_groups, rows_total=reader.n_rows)
+        self.result: Optional[ScanResult] = None
+
+        if self.offload == "prefiltered":
+            key = engine.plan_cache_key(reader, plan, self.blooms)
+            hit = engine.cache.get(key)
+            if hit is not None:
+                self.stats.cache_hit = True
+                self.stats.rows_out = int(hit.count)
+                self._pending: List[int] = []
+                self.result = ScanResult(hit.columns, hit.mask, hit.count, self.stats)
+                return
+
+        self.pred = bind_expr(plan.predicate, reader)
+        rgs = list(row_groups) if row_groups is not None else prune_row_groups(reader, self.pred)
+        self.stats.row_groups_scanned = len(rgs)
+        self._rgs = rgs
+        self._pending = list(rgs)
+        self._need = plan.all_columns()
+        self._per_rg_cols: Dict[str, List[Optional[jax.Array]]] = {c: [] for c in self._need}
+        self._per_rg_mask: List[jax.Array] = []
+        if not self._pending:  # everything pruned: assemble the empty result
+            self._finish()
+
+    @property
+    def pending(self) -> tuple:
+        """Row groups not yet scanned, in scan order."""
+        return tuple(self._pending)
+
+    def advance(self, row_groups, pool: Optional[Dict] = None) -> Optional[ScanResult]:
+        """Scan the given row groups (must be the next groups in order) and
+        fold them into the accumulated partial result.  `pool` is the
+        current tick's shared DecodePool.  Returns the final ScanResult once
+        the last group is folded in, else None."""
+        assert self.result is None, "scan already complete"
+        for rg in row_groups:
+            assert self._pending and rg == self._pending[0], (
+                f"row group {rg} dispatched out of order (next is "
+                f"{self._pending[0] if self._pending else None})"
+            )
+            self._pending.pop(0)
+            cols, mask = self.engine.scan_row_group(
+                self.reader, rg, self.plan, self.pred, self.blooms, self.stats,
+                pool=pool, offload=self.offload,
+            )
+            for name in self._need:
+                self._per_rg_cols[name].append(cols[name])
+            self._per_rg_mask.append(mask)
+        if not self._pending:
+            self._finish()
+        return self.result
+
+    def _finish(self) -> None:
+        proj = self.plan.columns
+        if not self._rgs:  # everything pruned — never cached (nothing scanned)
+            empty = {c: jnp.zeros((0,)) for c in proj}
+            z = jnp.zeros((0,), jnp.bool_)
+            self.result = ScanResult(empty, z, jnp.int32(0), self.stats)
+            return
+        out_cols = {
+            c: jnp.concatenate(v)
+            for c, v in self._per_rg_cols.items()
+            if v[0] is not None and c in proj
+        }
+        mask = jnp.concatenate(self._per_rg_mask)
+        count = jnp.sum(mask.astype(jnp.int32))
+        if self.plan.compact:
+            out_cols, mask, count = self.engine._compact(out_cols, mask)
+        result = ScanResult(out_cols, mask, count, self.stats)
+        self.stats.rows_out = int(count)
+        if self.offload == "prefiltered":
+            self.engine.cache.put(
+                self.engine.plan_cache_key(self.reader, self.plan, self.blooms), result
+            )
+        self.result = result

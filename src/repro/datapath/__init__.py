@@ -1,18 +1,28 @@
 """datapath — the SmartNIC as a shared, scheduled, multi-tenant service.
 
-service.py    DatapathService: bounded queue, admission control, quotas
-scheduler.py  per-tick batching + shared-scan coalescing (DecodePool)
+service.py    DatapathService: bounded queue, admission control, quotas,
+              per-tenant WFQ virtual time
+scheduler.py  fair-share batch formation (wfq/fifo, row-group preemption,
+              cross-tick coalescing holds) + shared-scan DecodePool
 netsim.py     storage->NIC bandwidth/latency model, prefetch overlap
-policy.py     adaptive raw/preloaded/prefiltered choice per request
-telemetry.py  queue depth, decoded-bytes-saved, per-tenant p50/p99
+policy.py     adaptive raw/preloaded/prefiltered choice per request,
+              hold-window footprint compatibility
+telemetry.py  queue depth, decoded-bytes-saved, per-tenant p50/p99,
+              fair-share metrics (Jain index, held-request latency)
 
-See DESIGN.md §8.  The synchronous per-caller path (core/engine.py)
-remains the substrate; the service schedules it.
+See DESIGN.md §8–§9.  The synchronous per-caller path (core/engine.py)
+remains the substrate; the service schedules it — at row-group
+granularity, so no scan occupies the device longer than one preemption
+quantum.
 """
 
 from repro.datapath.netsim import DecodeModel, LinkModel, PrefetchPipeline  # noqa: F401
-from repro.datapath.policy import AdaptiveOffloadPolicy, StaticPolicy  # noqa: F401
-from repro.datapath.scheduler import DecodePool, run_tick  # noqa: F401
+from repro.datapath.policy import (  # noqa: F401
+    AdaptiveOffloadPolicy,
+    StaticPolicy,
+    coalesce_compatible,
+)
+from repro.datapath.scheduler import DecodePool, form_batch, run_tick  # noqa: F401
 from repro.datapath.service import (  # noqa: F401
     DatapathService,
     QueueFull,
@@ -22,4 +32,4 @@ from repro.datapath.service import (  # noqa: F401
     TenantQuota,
     Ticket,
 )
-from repro.datapath.telemetry import Telemetry  # noqa: F401
+from repro.datapath.telemetry import Telemetry, jain_index, quantile  # noqa: F401

@@ -29,6 +29,20 @@ from repro.core.zonemap import prune_row_groups
 from repro.lakeformat.reader import LakeReader
 
 
+def coalesce_compatible(a, b) -> bool:
+    """Hold-window compatibility: would scheduling `a` and `b` in the SAME
+    tick let them share DecodePool entries?  True iff they read the same
+    file and their (row group, column) footprints intersect — the pool is
+    keyed by (path, row group, column, backend), so any intersection means
+    at least one decode is shared.  Both arguments are service ScanRequests
+    (duck-typed: .reader.path, .rg_set, .col_set)."""
+    return (
+        a.reader.path == b.reader.path
+        and bool(a.rg_set & b.rg_set)
+        and bool(a.col_set & b.col_set)
+    )
+
+
 class AdaptiveOffloadPolicy:
     def __init__(
         self,
@@ -66,18 +80,18 @@ class AdaptiveOffloadPolicy:
         """`row_groups`/`selectivity` let the service reuse its admission-time
         metadata walk; without them the policy recomputes from zone maps."""
         sig = plan.signature()
-        self._note(sig)
-        mode = self._choose(engine, reader, plan, sig, blooms, row_groups, selectivity)
+        seen = self._note(sig)
+        mode = self._choose(engine, reader, plan, seen, blooms, row_groups, selectivity)
         self.decisions[mode] += 1
         return mode
 
-    def _choose(self, engine, reader, plan, sig, blooms, row_groups, selectivity) -> str:
+    def _choose(self, engine, reader, plan, seen, blooms, row_groups, selectivity) -> str:
         # 1) whole-scan reuse: cached result, or a recurring signature worth
         #    caching (the key folds in bloom digests, so per-caller semijoin
         #    state can never serve another caller's probe)
         scan_key = engine.plan_cache_key(reader, plan, blooms)
         cached, _ = engine.cache.plan_fetch([scan_key])
-        if cached or self.seen[sig] >= self.repeat_k:
+        if cached or seen >= self.repeat_k:
             return "prefiltered"
 
         # 2) row-group reuse: are this scan's decoded columns already resident?

@@ -1,22 +1,37 @@
-"""Tick scheduler: batch queued scans and coalesce shared row groups.
+"""Tick scheduler: fair-share batch formation + shared-scan coalescing.
 
-Coalescing is the service's core win (the paper's "one device serves many
-queries"): requests in one tick that touch the same table share a
-DecodePool keyed by (path, row group, column, backend), so each pair is
-decoded ONCE and every coalesced predicate is evaluated over the shared
-decoded columns.  Under concurrent TPC-H-style load the queries hit the
-same hot columns (l_shipdate, l_extendedprice, ...), so total decoded
-bytes drop superlinearly in tenant count — benchmarks/service_bench.py
-measures exactly that.
+Two layers per tick (DESIGN.md §9):
 
-The storage->NIC fetch for the tick's union of row groups is fed through
-netsim's double-buffered PrefetchPipeline, recording how much of the
-fetch time hides behind on-device decode.
+  form_batch  decides WHAT runs — weighted fair queueing ("wfq", default)
+              by per-tenant virtual time measured in estimated decoded
+              bytes over tenant weight, dispatching at ROW-GROUP
+              granularity so a giant scan is preempted between row groups
+              and small scans slip through every tick; or strict arrival
+              order ("fifo", the seed behavior, kept for A/B comparison
+              in benchmarks/service_bench.py).
+  run_tick    decides HOW it runs — requests grouped by table around a
+              budgeted DecodePool so each (path, row group, column,
+              backend) pair is decoded ONCE per tick and every coalesced
+              predicate is evaluated over the shared decoded columns.
+
+Cross-tick coalescing window: a fresh request with no compatible partner
+(policy.coalesce_compatible) in the queue may be held up to
+service.hold_ticks ticks; the moment a partner dispatches it is released
+into the SAME tick and shares that tick's DecodePool, and if no partner
+ever arrives it force-dispatches at its deadline — a held request is
+never late by more than hold_ticks.
+
+The storage->NIC fetch for each tick's row groups is fed through netsim's
+double-buffered PrefetchPipeline, recording how much of the fetch time
+hides behind on-device decode.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Tuple
+
+from repro.core.engine import ResumableScan
+from repro.datapath.policy import coalesce_compatible
 
 
 class DecodePool(dict):
@@ -29,6 +44,11 @@ class DecodePool(dict):
     is pinned, further inserts are refused (later scans simply decode for
     themselves), so one oversized tick cannot bypass the BlockCache's
     capacity accounting via the pool.
+
+    Accounting invariant (property-tested in tests/test_decode_pool_props.py):
+    `used_bytes` always equals the summed nbytes of the kept entries —
+    re-inserting an existing key bills only the size delta, and a
+    rejected put leaves `used_bytes` untouched.
     """
 
     def __init__(self, max_bytes: int = 1 << 30):
@@ -51,80 +71,275 @@ class DecodePool(dict):
         return default
 
     def __setitem__(self, key, value):
+        nb = int(value.nbytes)
         if key not in self:
-            nb = int(value.nbytes)
             if self.used_bytes + nb > self.max_bytes:
                 self.rejected_puts += 1
                 return
             self.puts += 1
             self.used_bytes += nb
+        else:
+            old = int(dict.__getitem__(self, key).nbytes)
+            if self.used_bytes - old + nb > self.max_bytes:
+                self.rejected_puts += 1
+                return
+            self.used_bytes += nb - old
         dict.__setitem__(self, key, value)
 
 
-def run_tick(service, batch: List) -> None:
-    """Execute one tick's batch: group by table, coalesce, scan, simulate
-    the fetch pipeline.  Results land on each request's ticket."""
-    groups: Dict[str, List] = {}
-    for req in batch:
-        groups.setdefault(req.reader.path, []).append(req)
+# ---------------------------------------------------------------------------
+# batch formation (WHAT runs this tick)
+# ---------------------------------------------------------------------------
+
+def form_batch(service) -> List[Tuple[object, List[int]]]:
+    """Select this tick's dispatch units — ordered (request, row_groups)
+    pairs — honoring the scheduling discipline, the per-tick decoded-byte
+    budget (`service.tick_bytes`, None = unbounded), the distinct-request
+    cap (`service.batch_per_tick`) and the cross-tick hold window.
+
+    Mutates scheduler state: request cursors, per-tenant virtual time,
+    hold counters.  Costs are the admission-time metadata estimates
+    (`ScanRequest.rg_costs`), so forming a batch moves no data bytes.
+    """
+    tel = service.telemetry
+    active = [r for r in service.queue if r.ticket.status == "queued"]
+    if not active:
+        return []
+    budget = float("inf") if service.tick_bytes is None else float(service.tick_bytes)
+    cap = max(1, service.batch_per_tick)
+
+    # -- hold window: fresh requests with no coalescing partner wait -------
+    eligible: List = []
+    held: List = []
+    for req in active:
+        if (
+            req.started
+            or service.hold_ticks <= 0
+            or not req.row_groups  # nothing to coalesce: holding never pays
+            or req.held_ticks >= service.hold_ticks  # deadline reached
+            # a prefiltered-cache-resident answer decodes nothing — waiting
+            # for a decode partner cannot pay (non-mutating presence check)
+            or service.engine.plan_cache_key(req.reader, req.plan, req.blooms)
+            in service.engine.cache
+            or any(o is not req and coalesce_compatible(req, o) for o in active)
+        ):
+            eligible.append(req)
+        else:
+            held.append(req)
+
+    units: Dict[int, Tuple[object, List[int]]] = {}
+    order: List[int] = []
+    spent = 0.0
+
+    def open_unit(req) -> bool:
+        """Ensure req appears in this tick's batch; False on first open."""
+        if req.req_id in units:
+            return True
+        units[req.req_id] = (req, [])
+        order.append(req.req_id)
+        req.started = True
+        if req.first_tick == 0:
+            req.first_tick = service._tick
+        return False
+
+    def take_rg(req) -> float:
+        """Advance req's cursor one row group; charge its tenant's vtime."""
+        rg = req.row_groups[req.cursor]
+        cost = float(req.rg_costs[req.cursor])
+        req.cursor += 1
+        units[req.req_id][1].append(rg)
+        service._vcharge(req.tenant, cost)
+        return cost
+
+    def exhausted(req) -> bool:
+        return req.cursor >= len(req.row_groups)
+
+    # -- deadline expiry: a held request always dispatches by its deadline,
+    #    budget and request cap notwithstanding
+    if service.hold_ticks > 0:
+        for req in eligible:
+            if req.held_ticks >= service.hold_ticks and not req.started:
+                open_unit(req)
+                if not exhausted(req):
+                    spent += take_rg(req)
+                tel.inc("hold_deadline_dispatch")
+
+    if service.scheduler == "fifo":
+        # Seed behavior: strict arrival order, head-of-line — a request
+        # must fully dispatch before the next one starts, so a huge scan
+        # occupies tick after tick (the contrast WFQ exists to fix).
+        for req in sorted(eligible, key=lambda r: r.req_id):
+            if (spent >= budget and spent > 0) or (
+                req.req_id not in units and len(units) >= cap
+            ):
+                break
+            open_unit(req)
+            while not exhausted(req):
+                spent += take_rg(req)
+                if spent >= budget:
+                    break
+            if not exhausted(req):
+                break  # head-of-line: the unfinished request blocks
+    else:  # wfq
+        candidates = [r for r in eligible if not exhausted(r) or r.req_id not in units]
+        # `spent == 0` guarantees one dispatch per tick even when tick_bytes
+        # is zero or pathologically small — same progress rule as FIFO
+        while candidates and (spent < budget or spent == 0.0):
+            avail = [r for r in candidates if r.req_id in units or len(units) < cap]
+            if not avail:
+                break
+            tenant = min(
+                {r.tenant for r in avail},
+                key=lambda t: (service._vtime.get(t, 0.0), t),
+            )
+            req = min((r for r in avail if r.tenant == tenant), key=lambda r: r.req_id)
+            open_unit(req)
+            if not exhausted(req):
+                spent += take_rg(req)
+            if exhausted(req):
+                candidates.remove(req)
+
+    # -- coalescing sweep: the hold window's payoff.  A request that waited
+    #    (or whose partner waited) rides in the SAME tick as its partner so
+    #    the shared row groups decode once in this tick's pool.  Only the
+    #    groups ALREADY dispatched this tick ride free (their decodes are
+    #    pool hits, not fresh work); any fresh group still charges the tick
+    #    budget, so a big pulled-in partner cannot smuggle a whole scan past
+    #    WFQ preemption — its unshared tail waits for normal scheduling.
+    if service.hold_ticks > 0:
+        for req in eligible:
+            if req.req_id in units or req.started:
+                continue
+            partners = [
+                u for u, _ in list(units.values())
+                if u is not req and coalesce_compatible(req, u)
+            ]
+            if not partners or not (
+                req.held_ticks > 0 or any(p.held_ticks > 0 for p in partners)
+            ):
+                continue
+            shared = {
+                rg
+                for u, rgs in list(units.values())
+                if u is not req and u.reader.path == req.reader.path
+                for rg in rgs
+            }
+            while not exhausted(req):
+                free = req.row_groups[req.cursor] in shared
+                if not free and spent >= budget:
+                    break  # fresh decode work: back to budgeted scheduling
+                if req.req_id not in units:
+                    open_unit(req)
+                cost = take_rg(req)
+                if not free:
+                    spent += cost
+        for req, _ in list(units.values()):
+            if (
+                req.held_ticks > 0
+                and not req.release_counted
+                and any(
+                    u is not req and coalesce_compatible(req, u)
+                    for u, _ in units.values()
+                )
+            ):
+                req.release_counted = True
+                tel.inc("hold_released")
+
+    # -- whoever is still held has waited one more tick toward the deadline
+    for req in held:
+        req.held_ticks += 1
+        if req.held_ticks == 1:
+            tel.inc("held_requests")
+        tel.inc("held_ticks")
+
+    return [units[rid] for rid in order]
+
+
+# ---------------------------------------------------------------------------
+# tick execution (HOW the batch runs)
+# ---------------------------------------------------------------------------
+
+def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
+    """Execute one tick's dispatch units: group by table, coalesce through
+    a shared DecodePool, advance each request's resumable scan, simulate
+    the storage->NIC fetch.  Completed results land on each ticket."""
+    groups: Dict[str, List[Tuple[object, List[int]]]] = {}
+    for req, rgs in batch:
+        groups.setdefault(req.reader.path, []).append((req, rgs))
 
     tel = service.telemetry
-    for path, reqs in groups.items():
+    for _path, group in groups.items():
         pool = DecodePool(max_bytes=service.pool_bytes)
-        if len(reqs) > 1:
+        if len(group) > 1:
             tel.inc("coalesced_groups")
-            tel.inc("coalesced_requests", len(reqs))
-        for req in reqs:
+            tel.inc("coalesced_requests", len(group))
+        fetches: List[Tuple[object, List[int], List[str]]] = []
+        for req, rgs in group:
             try:
-                mode = service.policy.choose(
-                    service.engine, req.reader, req.plan, req.blooms,
-                    row_groups=req.row_groups,
-                    selectivity=req.est_rows / max(req.reader.n_rows, 1),
-                )
-                tel.inc(f"offload_{mode}")
-                res = service.engine.scan(
-                    req.reader, req.plan, blooms=req.blooms, offload=mode,
-                    pool=pool, row_groups=req.row_groups,
-                )
+                if req.rs is None:  # first dispatch: pin the offload mode
+                    mode = service.policy.choose(
+                        service.engine, req.reader, req.plan, req.blooms,
+                        row_groups=req.row_groups,
+                        selectivity=req.est_rows / max(req.reader.n_rows, 1),
+                    )
+                    tel.inc(f"offload_{mode}")
+                    req.mode = mode
+                    req.rs = ResumableScan(
+                        service.engine, req.reader, req.plan, blooms=req.blooms,
+                        offload=mode, row_groups=req.row_groups,
+                    )
+                rs = req.rs
+                if rs.result is None and rgs:
+                    enc0, dec0 = rs.stats.encoded_bytes, rs.stats.decoded_bytes
+                    rs.advance(rgs, pool=pool)
+                    tel.observe_tenant_bytes(req.tenant, rs.stats.decoded_bytes - dec0)
+                    if rs.stats.encoded_bytes > enc0:  # this slice fetched
+                        fetches.append((req.reader, rgs, req.plan.all_columns()))
             except Exception as e:  # noqa: BLE001 — isolate faulty requests
                 req.ticket.error = e
                 tel.inc("failed")
                 continue
-            req.ticket.result = res
-            tel.inc("decoded_bytes", res.stats.decoded_bytes)
-            tel.inc("decoded_bytes_fresh", res.stats.decoded_bytes_fresh)
-            tel.inc("encoded_bytes", res.stats.encoded_bytes)
-            tel.inc("rows_out", res.stats.rows_out)
-            if res.stats.cache_hit:
-                tel.inc("prefiltered_hits")
+            if rs.result is not None:
+                res = rs.result
+                req.ticket.result = res
+                tel.inc("decoded_bytes", res.stats.decoded_bytes)
+                tel.inc("decoded_bytes_fresh", res.stats.decoded_bytes_fresh)
+                tel.inc("encoded_bytes", res.stats.encoded_bytes)
+                tel.inc("rows_out", res.stats.rows_out)
+                if res.stats.cache_hit:
+                    tel.inc("prefiltered_hits")
         tel.inc("decoded_bytes_saved", pool.hit_bytes)
         if pool.rejected_puts:
             tel.inc("pool_rejected_puts", pool.rejected_puts)
 
-        _simulate_fetch(service, reqs)
+        _simulate_fetch(service, fetches)
 
 
-def _simulate_fetch(service, reqs: List) -> None:
+def _simulate_fetch(service, fetches: List[Tuple[object, List[int], List[str]]]) -> None:
     """Model the tick's storage->NIC transfer for the union of row groups
-    actually read (cache-hit and failed requests fetch nothing),
-    double-buffered against on-device decode.  Row groups were pruned once
-    at admission (ScanRequest.row_groups) — no footer re-walk here."""
-    per_rg_cols: Dict[int, set] = {}
-    reader = reqs[0].reader
-    for req in reqs:
-        res = req.ticket.result
-        if res is None or res.stats.cache_hit or res.stats.encoded_bytes == 0:
-            continue  # failed / cache-served / fully resident: nothing fetched
-        for rg in req.row_groups:
-            per_rg_cols.setdefault(rg, set()).update(req.plan.all_columns())
-    if not per_rg_cols:
+    actually read this tick (cache-hit / pool-fed / failed slices fetch
+    nothing), double-buffered against on-device decode.
+
+    Each row group's metadata comes from a reader that actually scanned it
+    — NOT from whichever request happened to be first in the group.  Two
+    reader objects may share a path while disagreeing on metadata (e.g. a
+    re-opened file); keying on the contributing reader keeps the simulated
+    byte counts honest (regression-tested in tests/test_scheduler.py).
+    """
+    per_rg: Dict[int, Tuple[object, set]] = {}
+    for reader, rgs, cols in fetches:
+        for rg in rgs:
+            slot = per_rg.setdefault(rg, (reader, set()))
+            slot[1].update(cols)
+    if not per_rg:
         return
     enc: List[int] = []
     dec: List[int] = []
-    for rg in sorted(per_rg_cols):
+    for rg in sorted(per_rg):
+        reader, want = per_rg[rg]
         meta = reader.row_group_meta(rg)
         cols = meta["columns"]
-        names = [c for c in per_rg_cols[rg] if c in cols]
+        names = [c for c in want if c in cols]
         enc.append(sum(cols[c]["encoded_bytes"] for c in names))
         dec.append(meta["n"] * 4 * len(names))  # int32/float32 output
     sim = service.pipeline.simulate(enc, dec)

@@ -7,16 +7,19 @@ queries at once.  This module is that service layer:
   submit()  bounded-queue admission with per-tenant byte/row quotas,
             estimated from footer metadata only (zone maps + encoded
             sizes) — nothing is fetched or decoded to say "no"
-  tick()    the scheduler drains one batch, coalescing scans that touch
-            the same row groups (scheduler.py) so each (row group,
-            column) pair is decoded once per tick
+  tick()    the scheduler forms one fair-share batch (weighted fair
+            queueing over estimated decoded bytes, row-group preemption
+            points, cross-tick coalescing holds — scheduler.py) and runs
+            it around a shared DecodePool so each (row group, column)
+            pair is decoded once per tick
   client()  an engine-compatible adapter (`.scan(reader, plan)`) so the
             whole query suite in core/queries.py runs through the
             service unchanged
 
 Everything is deterministically single-threaded: "concurrency" is queue
 depth per tick, which keeps service results bit-identical to direct
-engine scans (tests/test_datapath.py asserts this).
+engine scans (tests/test_datapath.py and tests/test_scheduler.py assert
+this, including for scans sliced across ticks).
 """
 
 from __future__ import annotations
@@ -32,7 +35,7 @@ from repro.core.plan import ScanPlan, bind_expr
 from repro.core.zonemap import prune_and_estimate
 from repro.datapath.netsim import PrefetchPipeline
 from repro.datapath.policy import AdaptiveOffloadPolicy
-from repro.datapath.scheduler import run_tick
+from repro.datapath.scheduler import form_batch, run_tick
 from repro.datapath.telemetry import Telemetry
 
 
@@ -46,12 +49,15 @@ class QuotaExceeded(RuntimeError):
 
 @dataclasses.dataclass
 class TenantQuota:
-    """Per-quota-window budgets.  Bytes are *encoded* bytes pulled over the
-    storage->NIC hop (what the appliance actually meters); rows are
-    estimated output rows."""
+    """Per-quota-window budgets plus the tenant's fair-share weight.  Bytes
+    are *encoded* bytes pulled over the storage->NIC hop (what the
+    appliance actually meters); rows are estimated output rows; `weight`
+    scales the tenant's share of each tick's decode capacity under the WFQ
+    scheduler (virtual time advances by charged bytes / weight)."""
 
     max_bytes: int = 1 << 40
     max_rows: int = 1 << 40
+    weight: float = 1.0
 
 
 @dataclasses.dataclass
@@ -73,6 +79,8 @@ class Ticket:
     error: Optional[BaseException] = None
     submitted_s: float = 0.0
     done_s: float = 0.0
+    submitted_tick: int = 0  # service tick counter at admission
+    done_tick: int = 0  # tick on which the request reached a terminal state
 
 
 @dataclasses.dataclass
@@ -89,6 +97,17 @@ class ScanRequest:
     # reused by the scheduler's fetch simulation (no repeat footer walks)
     pred: object = None
     row_groups: tuple = ()
+    # -- scheduler state (datapath/scheduler.py) -----------------------------
+    rg_costs: tuple = ()  # estimated decoded bytes per row group (WFQ charge)
+    rg_set: frozenset = frozenset()  # hold-window footprint: row groups
+    col_set: frozenset = frozenset()  # hold-window footprint: columns
+    cursor: int = 0  # next row-group index to dispatch
+    started: bool = False  # first slice has been dispatched
+    held_ticks: int = 0  # ticks spent waiting for a coalescing partner
+    release_counted: bool = False  # hold_released already recorded
+    first_tick: int = 0  # tick of the first dispatched slice
+    mode: Optional[str] = None  # offload mode pinned at first dispatch
+    rs: object = None  # ResumableScan, created at first dispatch
 
 
 class DatapathService:
@@ -104,7 +123,11 @@ class DatapathService:
         pipeline: Optional[PrefetchPipeline] = None,
         telemetry: Optional[Telemetry] = None,
         pool_bytes: int = 1 << 30,  # per-tick DecodePool budget
+        scheduler: str = "wfq",  # "wfq" | "fifo" (seed behavior, for A/B)
+        tick_bytes: Optional[int] = None,  # per-tick decoded-byte budget
+        hold_ticks: int = 0,  # cross-tick coalescing window (0 = off)
     ):
+        assert scheduler in ("wfq", "fifo"), scheduler
         self.engine = engine or DatapathEngine(backend="ref", cache=BlockCache())
         self.max_queue_depth = max_queue_depth
         self.batch_per_tick = batch_per_tick
@@ -114,9 +137,13 @@ class DatapathService:
         self.policy = policy if policy is not None else AdaptiveOffloadPolicy()
         self.pipeline = pipeline or PrefetchPipeline()
         self.pool_bytes = pool_bytes
+        self.scheduler = scheduler
+        self.tick_bytes = tick_bytes
+        self.hold_ticks = hold_ticks
         self.telemetry = telemetry or Telemetry()
         self.queue: List[ScanRequest] = []
         self._tenants: Dict[str, _TenantState] = {}
+        self._vtime: Dict[str, float] = {}  # WFQ virtual time, bytes/weight
         self._ids = itertools.count()
         self._tick = 0
 
@@ -128,6 +155,15 @@ class DatapathService:
 
     def _state(self, tenant: str) -> _TenantState:
         return self._tenants.setdefault(tenant, _TenantState())
+
+    def _weight(self, tenant: str) -> float:
+        return max(self._quota(tenant).weight, 1e-9)
+
+    def _vcharge(self, tenant: str, cost: float) -> None:
+        """Advance `tenant`'s virtual time by a dispatched slice's estimated
+        decoded bytes over its weight (the WFQ clock)."""
+        self._vtime[tenant] = self._vtime.get(tenant, 0.0) + cost / self._weight(tenant)
+        self.telemetry.observe_sched_bytes(tenant, cost)
 
     def submit(self, tenant: str, reader, plan: ScanPlan, blooms: Optional[Dict] = None) -> Ticket:
         """Admit one scan request or raise (QueueFull / QuotaExceeded).
@@ -172,11 +208,26 @@ class DatapathService:
         state.used_bytes += est_bytes
         state.used_rows += est_rows
 
-        ticket = Ticket(next(self._ids), tenant, submitted_s=time.perf_counter())
+        # WFQ bookkeeping: an idle service starts a fresh round; a tenant
+        # joining a busy service starts at the backlog's virtual clock so it
+        # cannot cash in credit hoarded while idle.
+        if not self.queue:
+            self._vtime.clear()
+        else:
+            vclock = min(self._vtime.get(r.tenant, 0.0) for r in self.queue)
+            self._vtime[tenant] = max(self._vtime.get(tenant, 0.0), vclock)
+
+        ticket = Ticket(next(self._ids), tenant, submitted_s=time.perf_counter(),
+                        submitted_tick=self._tick)
         self.queue.append(
             ScanRequest(ticket.req_id, tenant, reader, plan, blooms, ticket,
                         est_bytes=est_bytes, est_rows=est_rows,
-                        pred=pred, row_groups=rgs)
+                        pred=pred, row_groups=rgs,
+                        rg_costs=tuple(
+                            self.engine.estimate_decode_bytes(reader, plan, rgs)
+                        ),
+                        rg_set=frozenset(rgs),
+                        col_set=frozenset(plan.all_columns()))
         )
         self.telemetry.inc("admitted")
         return ticket
@@ -185,8 +236,10 @@ class DatapathService:
     # execution
     # ------------------------------------------------------------------
     def tick(self) -> int:
-        """Process one scheduler tick (up to batch_per_tick requests,
-        coalesced).  Returns the number of requests completed."""
+        """Process one scheduler tick: form a fair-share batch of row-group
+        slices (scheduler.form_batch) and execute it coalesced.  A request
+        completes the tick its last row group lands; a large scan may span
+        many ticks (preemption points).  Returns requests completed."""
         self._tick += 1
         if self._tick % self.quota_window_ticks == 0:  # window boundary: refill
             for state in self._tenants.values():
@@ -194,20 +247,25 @@ class DatapathService:
         self.telemetry.sample_queue_depth(len(self.queue))
         if not self.queue:
             return 0
-        batch, self.queue = (
-            self.queue[: self.batch_per_tick],
-            self.queue[self.batch_per_tick:],
-        )
+        batch = form_batch(self)
         t0 = time.perf_counter()
-        run_tick(self, batch)
+        if batch:
+            run_tick(self, batch)
         now = time.perf_counter()
         self.telemetry.observe_tick(now - t0)
+        done: List[ScanRequest] = []
         failed = 0
-        for req in batch:  # every ticket reaches a terminal state this tick
+        for req in self.queue:
+            if req.ticket.error is None and (req.rs is None or req.rs.result is None):
+                continue  # still in flight (or held) — stays queued
+            done.append(req)
             req.ticket.status = "error" if req.ticket.error is not None else "done"
             req.ticket.done_s = now
+            req.ticket.done_tick = self._tick
             self.telemetry.observe_latency(req.tenant, now - req.ticket.submitted_s)
             failed += req.ticket.status == "error"
+            if self._tick > req.first_tick > 0:
+                self.telemetry.inc("split_scans")  # preempted across ticks
             res = req.ticket.result
             if res is not None:
                 # reconcile the admission estimate against bytes actually
@@ -220,8 +278,11 @@ class DatapathService:
                 over_r = req.est_rows - res.stats.rows_out
                 if over_r > 0:
                     state.used_rows = max(0, state.used_rows - over_r)
-        self.telemetry.inc("completed", len(batch) - failed)
-        return len(batch)
+        if done:
+            done_ids = {r.req_id for r in done}
+            self.queue = [r for r in self.queue if r.req_id not in done_ids]
+        self.telemetry.inc("completed", len(done) - failed)
+        return len(done)
 
     def drain(self) -> int:
         """Tick until the queue is empty; returns requests completed."""

@@ -1,25 +1,47 @@
-"""Service telemetry: queue depth, coalescing savings, per-tenant latency.
+"""Service telemetry: queue depth, coalescing savings, per-tenant latency,
+and fair-share metrics.
 
 The paper's SmartNIC is a shared appliance, so the numbers an operator
 needs are fleet numbers: how deep the queue runs, how many decoded bytes
-shared-scan coalescing saved, and what tick latency each tenant sees at
-p50/p99.  Everything here is plain Python (no jax) — it must stay cheap
-enough to record on every tick.
+shared-scan coalescing saved, what tick latency each tenant sees at
+p50/p99 — and, with the WFQ scheduler (DESIGN.md §9), whether decode
+capacity is actually being split by weight: per-tenant decoded-byte
+shares, a Jain fairness index, and how much latency the cross-tick
+coalescing hold window added.  Everything here is plain Python (no jax)
+— it must stay cheap enough to record on every tick.
 """
 
 from __future__ import annotations
 
 import collections
-from typing import Dict, List
+import math
+from typing import Dict, List, Optional
 
 
 def quantile(xs: List[float], q: float) -> float:
-    """Nearest-rank quantile of an unsorted list (0 <= q <= 1)."""
+    """Nearest-rank quantile of an unsorted list.  `q` is clamped to
+    [0, 1]; q=0 is the minimum, q=1 the maximum, and the half-way rank
+    rounds UP (half-up, not banker's), so two-sample p50 is the larger
+    sample on every platform — deterministic run-to-run."""
     if not xs:
         return 0.0
+    q = min(1.0, max(0.0, q))
     s = sorted(xs)
-    idx = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
-    return s[idx]
+    idx = int(math.floor(q * (len(s) - 1) + 0.5))
+    return s[min(len(s) - 1, max(0, idx))]
+
+
+def jain_index(shares: List[float]) -> float:
+    """Jain's fairness index over non-negative allocations: 1.0 when all
+    equal, 1/n when one allocation takes everything.  Empty or all-zero
+    input reads as perfectly fair (nothing was allocated unevenly)."""
+    if not shares:
+        return 1.0
+    total = float(sum(shares))
+    sq = float(sum(x * x for x in shares))
+    if sq <= 0.0:
+        return 1.0
+    return (total * total) / (len(shares) * sq)
 
 
 class Telemetry:
@@ -29,6 +51,10 @@ class Telemetry:
         self._tenant_latency: Dict[str, collections.deque] = {}
         self._tick_seconds: collections.deque = collections.deque(maxlen=max_samples)
         self._max_samples = max_samples
+        # fair-share accounting: actually-decoded bytes vs scheduler-charged
+        # (estimated) bytes, per tenant
+        self.tenant_decoded_bytes: Dict[str, float] = collections.defaultdict(float)
+        self.tenant_sched_bytes: Dict[str, float] = collections.defaultdict(float)
 
     # -- recording ---------------------------------------------------------
     def inc(self, name: str, value: float = 1.0) -> None:
@@ -47,6 +73,15 @@ class Telemetry:
         )
         dq.append(seconds)
 
+    def observe_tenant_bytes(self, tenant: str, nbytes: float) -> None:
+        """Decoded bytes materialized for `tenant` by one dispatched slice."""
+        self.tenant_decoded_bytes[tenant] += nbytes
+
+    def observe_sched_bytes(self, tenant: str, nbytes: float) -> None:
+        """Estimated decoded bytes the scheduler charged `tenant` for one
+        dispatched row group (the WFQ virtual-time currency)."""
+        self.tenant_sched_bytes[tenant] += nbytes
+
     # -- reading -----------------------------------------------------------
     def tenant_latency(self, tenant: str) -> Dict[str, float]:
         xs = list(self._tenant_latency.get(tenant, ()))
@@ -56,14 +91,39 @@ class Telemetry:
             "p99_s": quantile(xs, 0.99),
         }
 
+    def fairness(self, weights: Optional[Dict[str, float]] = None) -> dict:
+        """Fair-share report: each tenant's share of decoded bytes, the
+        Jain index over weight-normalized allocations (1.0 = perfectly
+        weighted-fair), and what the coalescing hold window cost."""
+        weights = weights or {}
+        decoded = dict(sorted(self.tenant_decoded_bytes.items()))
+        total = float(sum(decoded.values()))
+        shares = {t: (v / total if total > 0 else 0.0) for t, v in decoded.items()}
+        normalized = [v / max(weights.get(t, 1.0), 1e-9) for t, v in decoded.items()]
+        return {
+            "tenant_decoded_bytes": decoded,
+            "tenant_sched_bytes": dict(sorted(self.tenant_sched_bytes.items())),
+            "tenant_share": shares,
+            "jain_index": jain_index(normalized),
+            "min_share": min(shares.values()) if shares else 0.0,
+            "max_share": max(shares.values()) if shares else 0.0,
+            "held_requests": self.counters.get("held_requests", 0.0),
+            "held_ticks": self.counters.get("held_ticks", 0.0),
+        }
+
     def snapshot(self) -> dict:
+        """Deterministic summary: every dict is key-sorted and empty deques
+        collapse to fixed zeros, so benchmark JSON is stable run-to-run."""
         depths = list(self.queue_depth)
         ticks = list(self._tick_seconds)
         return {
-            "counters": dict(self.counters),
+            "counters": dict(sorted(self.counters.items())),
             "queue_depth_max": max(depths) if depths else 0,
             "queue_depth_mean": sum(depths) / len(depths) if depths else 0.0,
             "tick_p50_s": quantile(ticks, 0.50),
             "tick_p99_s": quantile(ticks, 0.99),
-            "tenants": {t: self.tenant_latency(t) for t in self._tenant_latency},
+            "tenants": {
+                t: self.tenant_latency(t) for t in sorted(self._tenant_latency)
+            },
+            "fairness": self.fairness(),
         }

@@ -366,3 +366,48 @@ def test_telemetry_quantiles():
     assert abs(lat["p50_s"] - 50.0) <= 1.0
     assert lat["p99_s"] >= 97.0
     assert quantile([], 0.5) == 0.0
+
+
+def test_quantile_small_sample_and_boundary_edges():
+    """Nearest-rank edges: single/two-sample lists, q=0/q=1 boundaries, and
+    half-up rounding (NOT banker's) so two-sample p50 is deterministic."""
+    # single sample: every q returns the sample
+    for q in (0.0, 0.25, 0.5, 0.99, 1.0):
+        assert quantile([7.0], q) == 7.0
+    # two samples: q=0 -> min, q=1 -> max, p50 rounds UP to the larger
+    assert quantile([2.0, 1.0], 0.0) == 1.0
+    assert quantile([2.0, 1.0], 1.0) == 2.0
+    assert quantile([2.0, 1.0], 0.5) == 2.0
+    # consistent half-up at every odd midpoint, regardless of list length
+    assert quantile([1.0, 2.0, 3.0, 4.0], 0.5) == 3.0
+    # out-of-range q clamps instead of indexing out of bounds
+    assert quantile([1.0, 2.0], -0.5) == 1.0
+    assert quantile([1.0, 2.0], 1.5) == 2.0
+
+
+def test_snapshot_deterministic_for_empty_and_populated_telemetry():
+    """Benchmark JSON must be stable run-to-run: empty deques collapse to
+    fixed zeros and every dict is key-sorted regardless of insertion order."""
+    import json
+
+    empty_a, empty_b = Telemetry().snapshot(), Telemetry().snapshot()
+    assert empty_a == empty_b
+    assert json.dumps(empty_a) == json.dumps(empty_b)
+    assert empty_a["tick_p50_s"] == empty_a["tick_p99_s"] == 0.0
+    assert empty_a["queue_depth_max"] == 0 and empty_a["queue_depth_mean"] == 0.0
+    assert empty_a["fairness"]["jain_index"] == 1.0
+
+    # same observations in different orders serialize identically
+    ta, tb = Telemetry(), Telemetry()
+    for t in (ta, tb):
+        t.observe_tick(0.25)
+    ta.inc("x"); ta.inc("y", 2.0)
+    tb.inc("y", 2.0); tb.inc("x")
+    ta.observe_latency("t0", 1.0); ta.observe_latency("t1", 2.0)
+    tb.observe_latency("t1", 2.0); tb.observe_latency("t0", 1.0)
+    ta.observe_tenant_bytes("t0", 10.0); ta.observe_tenant_bytes("t1", 30.0)
+    tb.observe_tenant_bytes("t1", 30.0); tb.observe_tenant_bytes("t0", 10.0)
+    assert json.dumps(ta.snapshot()) == json.dumps(tb.snapshot())
+    fair = ta.snapshot()["fairness"]
+    assert fair["tenant_share"] == {"t0": 0.25, "t1": 0.75}
+    assert 0.0 < fair["jain_index"] < 1.0

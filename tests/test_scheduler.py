@@ -1,0 +1,357 @@
+"""Fair-share tick scheduling: WFQ weight-share invariants, elephant-vs-
+mice starvation bounds, split-scan bit-identity, cross-tick coalescing
+hold windows, and the fetch-simulation reader-identity regression."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import BlockCache, Cmp, DatapathEngine, ResumableScan, ScanPlan, tpch
+from repro.datapath import DatapathService, StaticPolicy, TenantQuota
+from repro.lakeformat.reader import LakeReader
+
+RG_ROWS = 8192  # row-group size: sorted l_shipdate => narrow scans hit 1-2 groups
+
+
+@pytest.fixture(scope="module")
+def lineitem(tmp_path_factory):
+    d = tmp_path_factory.mktemp("tpch_sched")
+    paths = tpch.write_tables(str(d), sf=0.1, seed=0, sorted_data=True,
+                              row_group_size=RG_ROWS)
+    return LakeReader(paths["lineitem"])
+
+
+def _service(**kw):
+    kw.setdefault("engine", DatapathEngine(backend="ref", cache=BlockCache(1 << 30)))
+    kw.setdefault("policy", StaticPolicy("raw"))
+    return DatapathService(**kw)
+
+
+def _elephant(cols=("l_extendedprice", "l_quantity")):
+    """Whole-table scan: every row group, no pruning."""
+    return ScanPlan("lineitem", list(cols))
+
+
+def _mouse(day, width=200):
+    """Narrow window on the sort column: 1-2 row groups after pruning."""
+    return ScanPlan("lineitem", ["l_extendedprice"],
+                    Cmp("l_shipdate", "between", (day, day + width)))
+
+
+def _assert_identical(got, want):
+    assert int(got.count) == int(want.count)
+    assert np.array_equal(np.asarray(got.mask), np.asarray(want.mask))
+    assert set(got.columns) == set(want.columns)
+    for name in want.columns:
+        assert np.array_equal(
+            np.asarray(got.columns[name]), np.asarray(want.columns[name])
+        ), name
+
+
+RG_COST = RG_ROWS * 4 * 2  # decoded bytes per row group for a 2-column scan
+
+
+# ---------------------------------------------------------------------------
+# WFQ invariants
+# ---------------------------------------------------------------------------
+
+def test_wfq_equal_weights_share_bound(lineitem):
+    """While two equal-weight tenants are both backlogged, their scheduled
+    decoded bytes never diverge by more than one row group's cost."""
+    svc = _service(tick_bytes=int(RG_COST * 1.5))
+    # disjoint column sets: no cross-tenant pool sharing muddying the charge
+    svc.submit("a", lineitem, _elephant(("l_extendedprice", "l_quantity")))
+    svc.submit("b", lineitem, _elephant(("l_discount", "l_tax")))
+    while svc.queue:
+        svc.tick()
+        still = {t: any(r.tenant == t and r.cursor < len(r.row_groups)
+                        for r in svc.queue) for t in ("a", "b")}
+        if still["a"] and still["b"]:
+            sched = svc.telemetry.tenant_sched_bytes
+            assert abs(sched["a"] - sched["b"]) <= RG_COST, sched
+    # both ran to completion with identical totals (last row group is short,
+    # so the total is rows x 4 bytes x 2 columns, not n_row_groups x RG_COST)
+    sched = svc.telemetry.tenant_sched_bytes
+    assert sched["a"] == sched["b"] == lineitem.n_rows * 4 * 2
+
+
+def test_wfq_weighted_share_bound(lineitem):
+    """A weight-2 tenant gets twice the decoded bytes of a weight-1 tenant,
+    within one row group, for as long as both are backlogged."""
+    svc = _service(
+        tick_bytes=int(RG_COST * 1.5),
+        quotas={"heavy": TenantQuota(weight=2.0), "light": TenantQuota(weight=1.0)},
+    )
+    svc.submit("heavy", lineitem, _elephant(("l_extendedprice", "l_quantity")))
+    svc.submit("light", lineitem, _elephant(("l_discount", "l_tax")))
+    checked = 0
+    while svc.queue:
+        svc.tick()
+        still = {t: any(r.tenant == t and r.cursor < len(r.row_groups)
+                        for r in svc.queue) for t in ("heavy", "light")}
+        if still["heavy"] and still["light"]:
+            sched = svc.telemetry.tenant_sched_bytes
+            assert abs(sched["heavy"] / 2.0 - sched["light"]) <= RG_COST, sched
+            checked += 1
+    assert checked > 0  # the invariant was actually exercised
+
+
+def test_wfq_mice_not_starved_by_elephant(lineitem):
+    """Starvation bound: with a pinned elephant, mice p99 ticks-to-complete
+    under WFQ stays within 2x their solo (no-elephant) value; FIFO, which
+    runs the elephant head-of-line to completion, is strictly worse."""
+    mice_days = (300, 900, 1500)
+
+    def run(scheduler, with_elephant):
+        svc = _service(scheduler=scheduler, tick_bytes=int(RG_COST * 1.5))
+        if with_elephant:
+            svc.submit("elephant", lineitem, _elephant())
+        mice = [svc.submit(f"mouse{i}", lineitem, _mouse(d))
+                for i, d in enumerate(mice_days)]
+        svc.drain()
+        ticks = [t.done_tick - t.submitted_tick for t in mice]
+        return max(ticks)  # p99 over 3 mice == max
+
+    solo = run("wfq", with_elephant=False)
+    wfq = run("wfq", with_elephant=True)
+    fifo = run("fifo", with_elephant=True)
+    assert wfq <= 2 * solo, (solo, wfq, fifo)
+    assert fifo > wfq, (solo, wfq, fifo)
+
+
+def test_split_elephant_completes(lineitem):
+    """Preemption must not starve the preempted: the sliced elephant itself
+    reaches a terminal state and its split is recorded."""
+    svc = _service(tick_bytes=RG_COST)
+    t = svc.submit("elephant", lineitem, _elephant())
+    for _ in range(3):
+        svc.submit("mouse", lineitem, _mouse(600))
+    svc.drain()
+    assert t.status == "done"
+    assert svc.telemetry.counters["split_scans"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# split-scan bit-identity
+# ---------------------------------------------------------------------------
+
+SPLIT_PLANS = [
+    ScanPlan("lineitem", ["l_extendedprice", "l_quantity"]),  # full scan
+    ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+             Cmp("l_shipdate", "between", (365, 1460))),  # fused fast path
+    ScanPlan("lineitem", ["l_quantity"], Cmp("l_quantity", "le", 3),
+             compact=True),  # compaction crosses slice boundaries
+]
+
+
+@pytest.mark.parametrize("idx", range(len(SPLIT_PLANS)))
+def test_split_scan_bit_identical_to_direct(lineitem, idx):
+    """A scan sliced across many ticks equals the single-shot engine scan
+    bit for bit — for plain, fused, and compacting plans."""
+    plan = SPLIT_PLANS[idx]
+    direct = DatapathEngine(backend="ref").scan(lineitem, plan)
+    svc = _service(tick_bytes=RG_ROWS * 4)  # ~1 column-group per tick
+    ticket = svc.submit("t", lineitem, plan)
+    svc.drain()
+    assert svc.telemetry.counters.get("split_scans", 0) >= 1  # really sliced
+    _assert_identical(ticket.result, direct)
+
+
+def test_resumable_scan_matches_single_shot(lineitem):
+    """Engine-level: advancing one row group at a time assembles the same
+    result as scan(), and pending() shrinks in dispatch order."""
+    plan = ScanPlan("lineitem", ["l_extendedprice", "l_quantity"],
+                    Cmp("l_quantity", "lt", 25))
+    eng = DatapathEngine(backend="ref")
+    rs = ResumableScan(eng, lineitem, plan)
+    seen = []
+    while rs.result is None:
+        nxt = rs.pending[0]
+        rs.advance([nxt])
+        seen.append(nxt)
+    assert seen == sorted(seen)
+    _assert_identical(rs.result, DatapathEngine(backend="ref").scan(lineitem, plan))
+
+
+def test_resumable_scan_rejects_out_of_order_slices(lineitem):
+    eng = DatapathEngine(backend="ref")
+    rs = ResumableScan(eng, lineitem, _elephant())
+    with pytest.raises(AssertionError):
+        rs.advance([rs.pending[-1]])
+
+
+# ---------------------------------------------------------------------------
+# cross-tick coalescing window
+# ---------------------------------------------------------------------------
+
+PLAN_A = ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+                  Cmp("l_shipdate", "between", (300, 700)))
+PLAN_B = ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+                  Cmp("l_shipdate", "between", (350, 750)))
+
+
+def test_hold_window_coalesces_across_ticks(lineitem):
+    """Compatible requests arriving a tick apart share a DecodePool when a
+    hold window is open, and decode independently when it is not."""
+    def run(hold):
+        svc = _service(hold_ticks=hold)
+        a = svc.submit("t0", lineitem, PLAN_A)
+        svc.tick()  # without a hold, t0 decodes alone here
+        b = svc.submit("t1", lineitem, PLAN_B)
+        svc.drain()
+        return svc, a, b
+
+    svc0, _, _ = run(0)
+    assert svc0.telemetry.counters.get("decoded_bytes_saved", 0) == 0
+
+    svc2, a, b = run(2)
+    assert svc2.telemetry.counters["decoded_bytes_saved"] > 0
+    assert a.done_tick == b.done_tick  # released into the partner's tick
+    assert svc2.telemetry.counters["hold_released"] >= 1
+    assert svc2.telemetry.counters["held_ticks"] == 1  # one tick of added latency
+    # results unaffected by the detour through the shared pool
+    _assert_identical(a.result, DatapathEngine(backend="ref").scan(lineitem, PLAN_A))
+    _assert_identical(b.result, DatapathEngine(backend="ref").scan(lineitem, PLAN_B))
+
+
+def test_hold_window_deadline_always_dispatches(lineitem):
+    """A held request with no partner force-dispatches once its deadline
+    (hold_ticks) expires — holds add bounded latency, never starvation."""
+    svc = _service(hold_ticks=3)
+    t = svc.submit("t0", lineitem, PLAN_A)
+    for expected_held in (1, 2, 3):
+        svc.tick()
+        assert t.status == "queued"
+        assert svc.telemetry.counters["held_ticks"] == expected_held
+    svc.tick()  # deadline: dispatches regardless of partners
+    assert t.status == "done"
+    assert t.done_tick == 4
+    assert svc.telemetry.counters["hold_deadline_dispatch"] == 1
+    assert svc.telemetry.counters["held_requests"] == 1
+
+
+def test_hold_window_result_api_still_blocks_correctly(lineitem):
+    """result() on a held ticket must spin through held ticks and return."""
+    svc = _service(hold_ticks=5)
+    t = svc.submit("t0", lineitem, PLAN_A)
+    res = svc.result(t)
+    assert int(res.count) > 0
+
+
+def test_zero_tick_budget_still_progresses(lineitem):
+    """A degenerate tick_bytes (0) must not livelock drain(): every tick
+    dispatches at least one row group, like FIFO's head-of-line rule."""
+    svc = _service(tick_bytes=0)
+    t = svc.submit("t", lineitem, _mouse(600))
+    ticks = 0
+    while svc.queue:
+        svc.tick()
+        ticks += 1
+        assert ticks <= 4 * lineitem.n_row_groups, "no per-tick progress"
+    assert t.status == "done"
+
+
+def test_fully_pruned_request_is_not_held(lineitem):
+    """A scan whose predicate prunes every row group has nothing to
+    coalesce — holding it can never pay, so it completes on tick 1."""
+    impossible = ScanPlan("lineitem", ["l_extendedprice"],
+                          Cmp("l_shipdate", "between", (-20, -10)))
+    svc = _service(hold_ticks=3)
+    t = svc.submit("t0", lineitem, impossible)
+    svc.tick()
+    assert t.status == "done" and t.done_tick == 1
+    assert int(t.result.count) == 0
+    assert svc.telemetry.counters.get("held_requests", 0) == 0
+
+
+def test_incompatible_requests_are_not_held(lineitem):
+    """A second request with a disjoint footprint is no coalescing partner:
+    both are held to their own deadlines, not released together."""
+    svc = _service(hold_ticks=2)
+    svc.submit("t0", lineitem, _mouse(200))  # low shipdate rows
+    svc.submit("t1", lineitem, _mouse(2200))  # high shipdate rows — disjoint
+    svc.tick()
+    assert svc.telemetry.counters["held_requests"] == 2
+    svc.drain()
+    assert svc.telemetry.counters.get("hold_released", 0) == 0
+
+
+def test_pulled_in_partner_cannot_bypass_tick_budget(lineitem):
+    """A fresh elephant compatible with a held mouse must NOT be dumped
+    whole into one tick by the coalescing sweep: only row groups already
+    dispatched this tick ride free; fresh groups stay budget-bound."""
+    svc = _service(hold_ticks=2, tick_bytes=RG_COST)
+    mouse = svc.submit("m", lineitem, _mouse(600))
+    svc.tick()  # mouse held, waiting for a partner
+    el = svc.submit("e", lineitem, _elephant(("l_extendedprice", "l_quantity")))
+    svc.drain()
+    assert mouse.status == "done" and el.status == "done"
+    # with ~1 row group of budget per tick, the elephant must span many
+    # ticks (the old sweep dispatched all 8 groups the tick after the hold)
+    assert el.done_tick - el.submitted_tick >= lineitem.n_row_groups // 2, (
+        el.submitted_tick, el.done_tick)
+
+
+def test_prefiltered_cache_hit_is_never_held(lineitem):
+    """A request the prefiltered cache can answer decodes nothing, so the
+    hold window must not delay it waiting for a decode partner."""
+    from repro.datapath import AdaptiveOffloadPolicy
+
+    svc = _service(policy=AdaptiveOffloadPolicy(repeat_k=2), hold_ticks=3)
+    plan = PLAN_A
+    svc.result(svc.submit("t", lineitem, plan))  # seen=1: raw-ish, held+deadline
+    svc.result(svc.submit("t", lineitem, plan))  # seen=2: prefiltered, caches
+    t3 = svc.submit("t", lineitem, plan)
+    svc.tick()
+    assert t3.status == "done"  # cache-resident: dispatched immediately
+    assert t3.done_tick - t3.submitted_tick == 1
+    assert t3.result.stats.cache_hit
+
+
+# ---------------------------------------------------------------------------
+# fetch-simulation reader identity (regression)
+# ---------------------------------------------------------------------------
+
+class _InflatedMetaReader(LakeReader):
+    """Same path as the real file but reports 1000x encoded_bytes — stands
+    in for a reader whose metadata disagrees with another open handle."""
+
+    FACTOR = 1000
+
+    def row_group_meta(self, rg):
+        meta = copy.deepcopy(super().row_group_meta(rg))
+        for c in meta["columns"].values():
+            c["encoded_bytes"] *= self.FACTOR
+        return meta
+
+
+def test_simulate_fetch_uses_contributing_readers_metadata(lineitem):
+    """Two reader OBJECTS for one path in one coalesced tick group: the
+    fetch simulation must price each row group with the reader that scanned
+    it, not whichever request was first in the group (the old code read
+    reqs[0].reader for every group member)."""
+    low, high = _mouse(200), _mouse(2200)  # disjoint row groups
+
+    def run(second_reader):
+        svc = _service(batch_per_tick=2)
+        svc.submit("a", lineitem, low)
+        svc.submit("b", second_reader, high)
+        svc.drain()
+        return svc.telemetry.counters["sim_fetch_serial_s"]
+
+    honest = run(LakeReader(lineitem.path))
+    inflated = run(_InflatedMetaReader(lineitem.path))
+    # the doctored reader's groups must be priced with ITS metadata: the
+    # simulated serial fetch grows by orders of magnitude, not noise
+    assert inflated > honest * 10, (honest, inflated)
+
+
+def test_disjoint_footprints_precondition(lineitem):
+    """The regression test above needs the two mice to touch different row
+    groups; pin that property of the dataset."""
+    from repro.core.plan import bind_expr
+    from repro.core.zonemap import prune_row_groups
+    lo = prune_row_groups(lineitem, bind_expr(_mouse(200).predicate, lineitem))
+    hi = prune_row_groups(lineitem, bind_expr(_mouse(2200).predicate, lineitem))
+    assert lo and hi and not (set(lo) & set(hi))
