@@ -68,6 +68,18 @@ def run() -> dict:
     t = timed(lambda: ops.filter_compact(vals, mask, backend="ref"))
     out["filter_compact"] = {"GBps": nf * 4 / t / 1e9}
     row("kernels.filter_compact", t, f"GB/s={nf*4/t/1e9:.2f}")
+
+    # per-encoding calibration table — the SAME measurement the datapath
+    # service's cost model runs (repro.datapath.costmodel), reported here so
+    # the kernel roofline and the WFQ currency are visibly one number
+    from repro.datapath.costmodel import CostModel
+
+    cm = CostModel.calibrate(backend="ref", n=1 << 18, repeats=1)
+    out["costmodel"] = {"rates_GBps": dict(sorted(cm.rates.items())),
+                        "source": cm.source}
+    row("kernels.costmodel", 0.0,
+        ";".join(f"{k}={v:.2f}" for k, v in sorted(cm.rates.items()))
+        + f";source={cm.source}")
     return out
 
 

@@ -17,6 +17,14 @@ and measures the cross-tick coalescing hold window (decoded_bytes_saved
 with hold_ticks=2 vs tick-scoped coalescing) on compatible requests that
 arrive a tick apart.
 
+The `costmodel` sub-report calibrates the per-encoding decode-rate table
+(fast smoke sizes; nominal fallback) and runs the adversarial honesty
+bench: an elephant whose requests under-estimate decode cost 4x competes
+with an honest elephant under WFQ.  With actual-cost reconciliation on,
+the cheat's decoded-byte share while both are backlogged must stay
+within 10% of the honest baseline; with it off, the cheat pays off —
+that delta is the reconciliation mechanism's measured value.
+
 Reported rows:
     service.independent    N direct DatapathEngine.scan() calls
     service.coalesced      same scans through one DatapathService tick
@@ -24,6 +32,7 @@ Reported rows:
     service.adaptive       repeated query mix under the adaptive policy
     service.fairness.*     solo / fifo / wfq mice latency + Jain index
     service.holdwindow     cross-tick vs tick-scoped coalescing savings
+    service.costmodel.*    calibrated rates + 4x-under-estimator shares
 """
 
 from __future__ import annotations
@@ -33,7 +42,12 @@ import os
 from repro.core import BlockCache, DatapathEngine, tpch
 from repro.core.plan import Cmp, ScanPlan
 from repro.core.queries import QUERIES, run_via_service
-from repro.datapath import AdaptiveOffloadPolicy, DatapathService, StaticPolicy
+from repro.datapath import (
+    AdaptiveOffloadPolicy,
+    CostModel,
+    DatapathService,
+    StaticPolicy,
+)
 from repro.lakeformat.reader import LakeReader
 
 from benchmarks.breakdown import setup
@@ -187,6 +201,71 @@ def run_fairness(sf: float = 0.1) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# costmodel sub-report: calibration + the 4x-under-estimator honesty bench
+# ---------------------------------------------------------------------------
+
+def _run_adversarial(reader, cost_model, cheat: bool, reconcile: bool) -> dict:
+    """Two whole-table elephants, one doctored to under-estimate its decode
+    cost 4x.  Shares are measured while BOTH tenants stay backlogged (the
+    only regime where scheduling decides anything)."""
+    svc = DatapathService(
+        engine=DatapathEngine(backend="ref", cache=BlockCache(4 << 30)),
+        policy=StaticPolicy("raw"), scheduler="wfq",
+        tick_bytes=int(FAIR_RG_ROWS * 4 * 2 * 1.5),
+        cost_model=cost_model, reconcile=reconcile,
+    )
+    svc.submit("cheat", reader, ScanPlan("lineitem", ["l_extendedprice", "l_quantity"]))
+    svc.submit("honest", reader, ScanPlan("lineitem", ["l_discount", "l_tax"]))
+    if cheat:
+        req = next(q for q in svc.queue if q.tenant == "cheat")
+        req.rg_costs = tuple(c / 4 for c in req.rg_costs)
+    while all(any(q.tenant == t and q.cursor < len(q.row_groups) for q in svc.queue)
+              for t in ("cheat", "honest")):
+        svc.tick()
+    dec = svc.telemetry.tenant_decoded_bytes
+    total = sum(dec.values())
+    return {
+        "cheat_share": dec.get("cheat", 0.0) / total if total else 0.0,
+        "cost": svc.telemetry.cost_report(),
+    }
+
+
+def run_costmodel(sf: float = 0.1) -> dict:
+    import time as _time
+
+    reader = fairness_setup(sf)
+    t0 = _time.perf_counter()
+    cm = CostModel.calibrate(backend="ref", n=1 << 16, repeats=1)
+    t_cal = _time.perf_counter() - t0
+    rates = {k: round(v, 3) for k, v in sorted(cm.rates.items())}
+    row("service.costmodel.calibration", t_cal,
+        f"source={cm.source};rates_GBps={rates}")
+
+    base = _run_adversarial(reader, cm, cheat=False, reconcile=True)
+    recon_on = _run_adversarial(reader, cm, cheat=True, reconcile=True)
+    recon_off = _run_adversarial(reader, cm, cheat=True, reconcile=False)
+    gain_on = recon_on["cheat_share"] / max(base["cheat_share"], 1e-9)
+    gain_off = recon_off["cheat_share"] / max(base["cheat_share"], 1e-9)
+    cheat_err = recon_on["cost"]["cheat"]["rel_err"]
+    row("service.costmodel.adversarial", 0.0,
+        f"honest_share={base['cheat_share']:.3f};"
+        f"cheat_share_recon={recon_on['cheat_share']:.3f} ({gain_on:.2f}x);"
+        f"cheat_share_norecon={recon_off['cheat_share']:.3f} ({gain_off:.2f}x);"
+        f"cheat_rel_err={cheat_err:.2f}")
+    return {
+        "rates_gbps": {k: cm.rates[k] for k in sorted(cm.rates)},
+        "source": cm.source,
+        "calibration_s": t_cal,
+        "honest_share": base["cheat_share"],
+        "cheat_share_reconcile_on": recon_on["cheat_share"],
+        "cheat_share_reconcile_off": recon_off["cheat_share"],
+        "cheat_gain_reconcile_on": gain_on,
+        "cheat_gain_reconcile_off": gain_off,
+        "cheat_rel_err_reconcile_on": cheat_err,
+    }
+
+
 def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
     readers = setup(sf)
     plans = tenant_plans(n_tenants)
@@ -234,9 +313,11 @@ def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
         f"fetch_overlapped_s={counters['sim_fetch_overlapped_s']:.4f}")
 
     fairness = run_fairness(sf)
+    costmodel = run_costmodel(sf)
 
     return {
         "fairness": fairness,
+        "costmodel": costmodel,
         "n_tenants": n_tenants,
         "independent_fresh_decoded_bytes": ind_fresh,
         "service_fresh_decoded_bytes": svc_fresh,

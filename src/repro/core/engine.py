@@ -39,7 +39,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import BlockCache
-from repro.core.plan import And, BloomProbe, Cmp, Expr, InSet, Or, ScanPlan, bind_expr
+from repro.core.plan import (
+    And,
+    BloomProbe,
+    Cmp,
+    Expr,
+    InSet,
+    Or,
+    ScanPlan,
+    bind_expr,
+    pred_int_bounds,
+)
 from repro.core.zonemap import estimate_selectivity, prune_row_groups
 from repro.kernels import ops
 from repro.lakeformat.encodings import (
@@ -48,10 +58,8 @@ from repro.lakeformat.encodings import (
     EncodedColumn,
     Encoding,
     decode_column_host,
+    padded_rows,
 )
-
-INT32_MAX = 2**31 - 1
-INT32_MIN = -(2**31)
 
 
 @dataclasses.dataclass
@@ -61,6 +69,13 @@ class ScanStats:
     encoded_bytes: int = 0
     decoded_bytes: int = 0  # decode output materialized for this scan
     decoded_bytes_fresh: int = 0  # subset actually decoded now (no pool/cache hit)
+    # Fresh decode WORK by encoding, in output bytes — ground truth for the
+    # service's cost reconciliation.  Keyed by the encoding of the buffers
+    # actually read (not footer claims), it covers materializing decodes
+    # AND the fused predicate column (processed at L*4 virtual output bytes
+    # but never materialized); pool/cache hits do no decode work and are
+    # excluded.
+    decode_work: Dict[str, int] = dataclasses.field(default_factory=dict)
     pool_hits: int = 0  # (rg, column) decodes served by a shared decode pool
     pool_hit_bytes: int = 0
     rows_total: int = 0
@@ -177,6 +192,8 @@ class DatapathEngine:
         if stats is not None:
             stats.decoded_bytes += int(arr.nbytes)
             stats.decoded_bytes_fresh += int(arr.nbytes)
+            e = col.encoding.value
+            stats.decode_work[e] = stats.decode_work.get(e, 0) + int(arr.nbytes)
         return arr, False
 
     # ------------------------------------------------------------------
@@ -248,21 +265,10 @@ class DatapathEngine:
             return None
         if col.encoding == Encoding.DICT and col.buffers["dictionary"].dtype.kind not in "iu":
             return None
-        if pred.op == "between":
-            lo, hi = pred.value
-        elif pred.op in ("ge", "gt"):
-            lo = pred.value + (pred.op == "gt")
-            hi = INT32_MAX
-        elif pred.op in ("le", "lt"):
-            lo = INT32_MIN
-            hi = pred.value - (pred.op == "lt")
-        elif pred.op == "eq":
-            lo = hi = pred.value
-        else:
+        bounds = pred_int_bounds(pred)
+        if bounds is None:
             return None
-        if not (isinstance(lo, (int, np.integer)) and isinstance(hi, (int, np.integer))):
-            return None
-        lo, hi = int(lo), int(hi)
+        lo, hi = bounds
         if col.encoding == Encoding.DICT:
             d = col.buffers["dictionary"]
             lo = int(np.searchsorted(d, lo, side="left"))
@@ -311,17 +317,63 @@ class DatapathEngine:
             total += sum(cols[c]["encoded_bytes"] for c in need if c in cols)
         return total
 
-    def estimate_decode_bytes(self, reader, plan: ScanPlan, row_groups) -> List[int]:
-        """Estimated decoded-output bytes PER ROW GROUP (int32/float32
-        output), metadata only.  This is the unit the service's fair
-        scheduler charges virtual time in: one entry per row group makes a
-        row group the scheduler's preemption quantum."""
+    def fused_column_meta(self, pred: Optional[Expr], meta_cols: Dict, projected) -> Optional[str]:
+        """Predict, from footer metadata alone, the predicate column the
+        fused decode+filter fast path would skip materializing — or None
+        when the scan will not fuse.  Mirrors `_fusable` (which needs the
+        encoded buffers) column for column: single integer Cmp on a
+        BITPACK/int-DICT column outside the projection, device backends
+        only.  `pred` must already be bound (string constants folded)."""
+        if self.backend not in ("ref", "pallas", "auto"):
+            return None
+        if not isinstance(pred, Cmp) or pred.column in projected:
+            return None
+        cm = meta_cols.get(pred.column)
+        if cm is None or cm.get("encoding") not in ("bitpack", "dict"):
+            return None
+        if cm["encoding"] == "dict" and np.dtype(cm["dtype"]).kind not in "iu":
+            return None
+        if pred_int_bounds(pred) is None:
+            return None
+        return pred.column
+
+    def decode_footprint(self, reader, plan: ScanPlan, row_groups, pred=None) -> List[dict]:
+        """Honest per-row-group decode footprint, metadata only: what the
+        engine will MATERIALIZE (PACK_BLOCK-padded rows, true dtype widths,
+        fused predicate column skipped) and what it will merely process.
+
+        Returns one dict per row group:
+            {"rg", "n", "rows": L, "columns": {name: {
+                "nbytes": L * itemsize,   # decoded output if materialized
+                "encoded_bytes": int,     # storage->NIC fetch size
+                "encoding": str,          # footer encoding (cost-model key)
+                "materialized": bool,     # False for the fused pred column
+            }}}
+        The datapath cost model (datapath/costmodel.py) prices this in
+        decode-seconds; the scheduler's fetch simulation sizes transfers
+        with it.  No data bytes move."""
+        if pred is None:
+            pred = bind_expr(plan.predicate, reader)
         need = plan.all_columns()
+        proj = plan.columns
         out = []
         for rg in row_groups:
             meta = reader.row_group_meta(rg)
             cols = meta["columns"]
-            out.append(meta["n"] * 4 * sum(1 for c in need if c in cols))
+            L = padded_rows(meta["n"])
+            fused_col = self.fused_column_meta(pred, cols, proj)
+            fp = {}
+            for c in need:
+                if c not in cols:
+                    continue
+                cm = cols[c]
+                fp[c] = {
+                    "nbytes": L * np.dtype(cm["dtype"]).itemsize,
+                    "encoded_bytes": cm.get("encoded_bytes", 0),
+                    "encoding": cm.get("encoding", "plain"),
+                    "materialized": c != fused_col,
+                }
+            out.append({"rg": rg, "n": meta["n"], "rows": L, "columns": fp})
         return out
 
     # ------------------------------------------------------------------
@@ -349,7 +401,7 @@ class DatapathEngine:
         need = plan.all_columns()
         proj = plan.columns
         n = reader.row_group_meta(rg)["n"]
-        L = -(-n // PACK_BLOCK) * PACK_BLOCK
+        L = padded_rows(n)
 
         # Fully resident shortcut: every needed column already decoded in
         # the tick pool (coalescing) or, under preloaded/prefiltered, in the
@@ -390,6 +442,8 @@ class DatapathEngine:
         if fuse is not None:
             stats.fused = True
             lo, hi = fuse
+            fe = enc[pred.column].encoding.value
+            stats.decode_work[fe] = stats.decode_work.get(fe, 0) + L * 4
             fmask, _ = ops.fused_scan(
                 jnp.asarray(enc[pred.column].buffers["packed"]),
                 enc[pred.column].k,
@@ -570,7 +624,11 @@ class ResumableScan:
     def _finish(self) -> None:
         proj = self.plan.columns
         if not self._rgs:  # everything pruned — never cached (nothing scanned)
-            empty = {c: jnp.zeros((0,)) for c in proj}
+            # Empty columns must keep the schema's decoded dtypes (float32
+            # stays float32, ints/string codes stay int32): a jnp.zeros((0,))
+            # default would force float32 and break the sliced ≡ single-shot
+            # contract's dtype half for all-pruned scans.
+            empty = {c: jnp.zeros((0,), self.reader.decoded_dtype(c)) for c in proj}
             z = jnp.zeros((0,), jnp.bool_)
             self.result = ScanResult(empty, z, jnp.int32(0), self.stats)
             return

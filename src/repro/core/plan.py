@@ -18,7 +18,12 @@ import hashlib
 import json
 from typing import List, Optional, Sequence, Tuple, Union
 
+import numpy as np
+
 Value = Union[int, float, str]
+
+INT32_MAX = 2**31 - 1
+INT32_MIN = -(2**31)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +121,31 @@ def _expr_repr(e: Optional[Expr]):
         return ["bloom", e.column, e.n_bits, e.n_hashes, e.name]
     tag = "and" if isinstance(e, And) else "or"
     return [tag] + [_expr_repr(c) for c in e.children]
+
+
+def pred_int_bounds(e: Optional[Expr]) -> Optional[Tuple[int, int]]:
+    """Closed integer interval [lo, hi] equivalent to a single comparison,
+    or None when the predicate is not a bounds-expressible integer Cmp.
+    This is the predicate half of the engine's fused decode+filter
+    eligibility test, shared with the metadata-only cost estimator
+    (datapath/costmodel.py) so both agree on what will fuse."""
+    if not isinstance(e, Cmp):
+        return None
+    if e.op == "between":
+        lo, hi = e.value
+    elif e.op in ("ge", "gt"):
+        lo = e.value + (e.op == "gt")
+        hi = INT32_MAX
+    elif e.op in ("le", "lt"):
+        lo = INT32_MIN
+        hi = e.value - (e.op == "lt")
+    elif e.op == "eq":
+        lo = hi = e.value
+    else:
+        return None
+    if not (isinstance(lo, (int, np.integer)) and isinstance(hi, (int, np.integer))):
+        return None
+    return int(lo), int(hi)
 
 
 def bind_expr(e: Optional[Expr], reader) -> Optional[Expr]:

@@ -1,14 +1,19 @@
 """datapath — the SmartNIC as a shared, scheduled, multi-tenant service.
 
 service.py    DatapathService: bounded queue, admission control, quotas,
-              per-tenant WFQ virtual time
+              per-tenant WFQ virtual time + actual-cost reconciliation
 scheduler.py  fair-share batch formation (wfq/fifo, row-group preemption,
               cross-tick coalescing holds) + shared-scan DecodePool
+costmodel.py  calibrated per-encoding decode rates (GB/s table with a
+              nominal fallback), decode-seconds estimates from footer
+              metadata — the WFQ virtual-time currency
 netsim.py     storage->NIC bandwidth/latency model, prefetch overlap
+              (decode priced by the same calibrated table)
 policy.py     adaptive raw/preloaded/prefiltered choice per request,
               hold-window footprint compatibility
 telemetry.py  queue depth, decoded-bytes-saved, per-tenant p50/p99,
-              fair-share metrics (Jain index, held-request latency)
+              fair-share metrics (Jain index, held-request latency),
+              estimated-vs-actual decode-cost ledger
 
 See DESIGN.md §8–§9.  The synchronous per-caller path (core/engine.py)
 remains the substrate; the service schedules it — at row-group
@@ -16,6 +21,12 @@ granularity, so no scan occupies the device longer than one preemption
 quantum.
 """
 
+from repro.datapath.costmodel import (  # noqa: F401
+    NOMINAL_RATES_GBPS,
+    CostModel,
+    RowGroupCost,
+    measure_rates,
+)
 from repro.datapath.netsim import DecodeModel, LinkModel, PrefetchPipeline  # noqa: F401
 from repro.datapath.policy import (  # noqa: F401
     AdaptiveOffloadPolicy,

@@ -16,7 +16,7 @@ container still reproduce the paper's "fetch hides behind decode" claim.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 
 @dataclasses.dataclass
@@ -32,12 +32,24 @@ class LinkModel:
 
 @dataclasses.dataclass
 class DecodeModel:
-    """On-device decode rate in decoded-output gigabytes/s."""
+    """On-device decode rate in decoded-output gigabytes/s.
+
+    `rates` is an optional per-encoding table (plain/bitpack/dict/delta/
+    rle -> GB/s) — the calibrated table from datapath/costmodel.py — so
+    the prefetch simulation prices an RLE row group differently from
+    PLAIN.  Encodings absent from the table (and encoding=None callers)
+    fall back to the scalar `decode_gbps`."""
 
     decode_gbps: float = 20.0
+    rates: Optional[Dict[str, float]] = None
 
-    def decode_seconds(self, nbytes: int) -> float:
-        return nbytes / (self.decode_gbps * 1e9)
+    def rate_gbps(self, encoding: Optional[str] = None) -> float:
+        if encoding is not None and self.rates:
+            return self.rates.get(encoding, self.decode_gbps)
+        return self.decode_gbps
+
+    def decode_seconds(self, nbytes: int, encoding: Optional[str] = None) -> float:
+        return nbytes / (self.rate_gbps(encoding) * 1e9)
 
 
 class PrefetchPipeline:
@@ -52,13 +64,26 @@ class PrefetchPipeline:
         self.decode = decode or DecodeModel()
 
     def simulate(
-        self, encoded_bytes: Sequence[int], decoded_bytes: Sequence[int]
+        self,
+        encoded_bytes: Sequence[int],
+        decoded_bytes: Sequence[int],
+        decode_seconds: Optional[Sequence[float]] = None,
     ) -> Dict[str, float]:
+        """`decode_seconds` (one entry per row group) overrides the scalar
+        decode-rate model — the scheduler passes per-group times computed
+        by the encoding-aware cost model, so the overlap simulation and the
+        WFQ charge come from one table."""
         assert len(encoded_bytes) == len(decoded_bytes)
+        if decode_seconds is not None:
+            assert len(decode_seconds) == len(encoded_bytes)
         if not encoded_bytes:
             return {"serial_s": 0.0, "overlapped_s": 0.0, "saved_s": 0.0, "overlap_pct": 0.0}
         fetch: List[float] = [self.link.fetch_seconds(b) for b in encoded_bytes]
-        dec: List[float] = [self.decode.decode_seconds(b) for b in decoded_bytes]
+        dec: List[float] = (
+            [float(s) for s in decode_seconds]
+            if decode_seconds is not None
+            else [self.decode.decode_seconds(b) for b in decoded_bytes]
+        )
         serial = sum(fetch) + sum(dec)
         overlapped = fetch[0]
         for i in range(len(fetch) - 1):

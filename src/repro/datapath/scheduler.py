@@ -3,12 +3,16 @@
 Two layers per tick (DESIGN.md §9):
 
   form_batch  decides WHAT runs — weighted fair queueing ("wfq", default)
-              by per-tenant virtual time measured in estimated decoded
-              bytes over tenant weight, dispatching at ROW-GROUP
-              granularity so a giant scan is preempted between row groups
-              and small scans slip through every tick; or strict arrival
-              order ("fifo", the seed behavior, kept for A/B comparison
-              in benchmarks/service_bench.py).
+              by per-tenant virtual time measured in estimated decode-
+              SECONDS (the calibrated encoding-aware cost model's price)
+              over tenant weight, dispatching at ROW-GROUP granularity so
+              a giant scan is preempted between row groups and small
+              scans slip through every tick; or strict arrival order
+              ("fifo", the seed behavior, kept for A/B comparison in
+              benchmarks/service_bench.py).  At slice completion the
+              charge is reconciled against what the engine ACTUALLY
+              materialized (service._vreconcile), so a tenant whose scans
+              under-estimate cannot buy extra share.
   run_tick    decides HOW it runs — requests grouped by table around a
               budgeted DecodePool so each (path, row group, column,
               backend) pair is decoded ONCE per tick and every coalesced
@@ -143,13 +147,18 @@ def form_batch(service) -> List[Tuple[object, List[int]]]:
         return False
 
     def take_rg(req) -> float:
-        """Advance req's cursor one row group; charge its tenant's vtime."""
+        """Advance req's cursor one row group; charge its tenant's vtime
+        in estimated decode-seconds.  Returns the row group's estimated
+        decoded BYTES — the tick budget (`tick_bytes`) stays byte-
+        denominated even though the fairness clock runs on device time."""
         rg = req.row_groups[req.cursor]
-        cost = float(req.rg_costs[req.cursor])
+        cost_s = float(req.rg_costs[req.cursor])
+        cost_b = float(req.rg_bytes[req.cursor])
         req.cursor += 1
         units[req.req_id][1].append(rg)
-        service._vcharge(req.tenant, cost)
-        return cost
+        req.charged_s += service._vcharge(req.tenant, cost_s, cost_b)
+        req.charged_raw_s += cost_s
+        return cost_b
 
     def exhausted(req) -> bool:
         return req.cursor >= len(req.row_groups)
@@ -273,7 +282,7 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
         if len(group) > 1:
             tel.inc("coalesced_groups")
             tel.inc("coalesced_requests", len(group))
-        fetches: List[Tuple[object, List[int], List[str]]] = []
+        fetches: List[Tuple[object, List[int]]] = []
         for req, rgs in group:
             try:
                 if req.rs is None:  # first dispatch: pin the offload mode
@@ -289,12 +298,25 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
                         offload=mode, row_groups=req.row_groups,
                     )
                 rs = req.rs
+                work0 = dict(rs.stats.decode_work)
                 if rs.result is None and rgs:
                     enc0, dec0 = rs.stats.encoded_bytes, rs.stats.decoded_bytes
                     rs.advance(rgs, pool=pool)
                     tel.observe_tenant_bytes(req.tenant, rs.stats.decoded_bytes - dec0)
                     if rs.stats.encoded_bytes > enc0:  # this slice fetched
-                        fetches.append((req.reader, rgs, req.plan.all_columns()))
+                        fetches.append((req, rgs))
+                if rgs:
+                    # retroactive honesty: the estimate was charged at
+                    # dispatch; re-bill by the decode work the slice REALLY
+                    # did (ScanStats.decode_work — keyed by the encodings
+                    # actually read, immune to mis-estimated requests).  A
+                    # cache/pool-resident slice did no work — refunded.
+                    work = {
+                        e: b - work0.get(e, 0)
+                        for e, b in rs.stats.decode_work.items()
+                        if b - work0.get(e, 0)
+                    }
+                    _reconcile_slice(service, req, work)
             except Exception as e:  # noqa: BLE001 — isolate faulty requests
                 req.ticket.error = e
                 tel.inc("failed")
@@ -315,35 +337,79 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
         _simulate_fetch(service, fetches)
 
 
-def _simulate_fetch(service, fetches: List[Tuple[object, List[int], List[str]]]) -> None:
+def _reconcile_slice(service, req, work: Dict[str, int]) -> None:
+    """Close the loop on one completed slice: compare the decode-seconds
+    charged at dispatch against the slice's actual cost and re-bill the
+    tenant's virtual time (service._vreconcile).
+
+    Actual cost is priced from the decode work the engine REALLY did
+    (`work`: fresh output bytes by the encoding of the buffers actually
+    read — ground truth from the scan, independent of the request's own
+    estimate), through the service's cost model.  An honest solo raw scan
+    reconciles to exactly zero; a 4x under-estimating request is re-billed
+    4x in the same tick it decoded (and its tenant's future dispatches are
+    re-priced); a pool/cache-fed slice is refunded."""
+    charged_s, raw_s = req.charged_s, req.charged_raw_s
+    req.charged_s = req.charged_raw_s = 0.0
+    actual_s = sum(
+        service.cost_model.decode_seconds(nbytes, encoding)
+        for encoding, nbytes in work.items()
+    )
+    service._vreconcile(req.tenant, charged_s, raw_s, actual_s)
+
+
+def _simulate_fetch(service, fetches: List[Tuple[object, List[int]]]) -> None:
     """Model the tick's storage->NIC transfer for the union of row groups
     actually read this tick (cache-hit / pool-fed / failed slices fetch
     nothing), double-buffered against on-device decode.
 
+    Decode is sized exactly like the engine's (engine.decode_footprint):
+    PACK_BLOCK-padded rows, true dtype widths, and a fused scan's
+    predicate column is processed (it contributes decode time at its
+    encoding's rate) but never materialized (it contributes no decoded
+    bytes).  Per-group decode times come from the service's calibrated
+    cost model, so netsim and the WFQ charge read one table.
+
     Each row group's metadata comes from a reader that actually scanned it
     — NOT from whichever request happened to be first in the group.  Two
     reader objects may share a path while disagreeing on metadata (e.g. a
-    re-opened file); keying on the contributing reader keeps the simulated
-    byte counts honest (regression-tested in tests/test_scheduler.py).
+    re-opened file); pricing each request's footprint with its own reader
+    keeps the simulated byte counts honest (regression-tested in
+    tests/test_scheduler.py).
     """
-    per_rg: Dict[int, Tuple[object, set]] = {}
-    for reader, rgs, cols in fetches:
-        for rg in rgs:
-            slot = per_rg.setdefault(rg, (reader, set()))
-            slot[1].update(cols)
+    # rg -> merged column footprints.  engine.decode_footprint is the ONE
+    # source of truth for what a scan materializes vs merely processes
+    # (padded rows, dtype widths, per-row-group fusability — auto-encoded
+    # files can flip a predicate column's encoding between groups), so the
+    # transfer model cannot drift from the WFQ charge.  Each request's
+    # columns are priced with its OWN reader's metadata; on overlap the
+    # first contributor wins (and materialization is an OR).
+    per_rg: Dict[int, Dict[str, dict]] = {}
+    for req, rgs in fetches:
+        for fp in service.engine.decode_footprint(req.reader, req.plan, rgs,
+                                                  pred=req.pred):
+            cols = per_rg.setdefault(fp["rg"], {})
+            for name, col in fp["columns"].items():
+                prev = cols.get(name)
+                if prev is None:
+                    cols[name] = dict(col)
+                elif col["materialized"] and not prev["materialized"]:
+                    prev["materialized"] = True
     if not per_rg:
         return
+    cm = service.cost_model
     enc: List[int] = []
     dec: List[int] = []
+    dec_s: List[float] = []
     for rg in sorted(per_rg):
-        reader, want = per_rg[rg]
-        meta = reader.row_group_meta(rg)
-        cols = meta["columns"]
-        names = [c for c in want if c in cols]
-        enc.append(sum(cols[c]["encoded_bytes"] for c in names))
-        dec.append(meta["n"] * 4 * len(names))  # int32/float32 output
-    sim = service.pipeline.simulate(enc, dec)
+        cols = per_rg[rg].values()
+        enc.append(sum(c["encoded_bytes"] for c in cols))
+        dec.append(sum(c["nbytes"] for c in cols if c["materialized"]))
+        dec_s.append(sum(cm.decode_seconds(c["nbytes"], c["encoding"]) for c in cols))
+    sim = service.pipeline.simulate(enc, dec, decode_seconds=dec_s)
     tel = service.telemetry
+    tel.inc("sim_fetch_encoded_bytes", sum(enc))
+    tel.inc("sim_fetch_decoded_bytes", sum(dec))
     tel.inc("sim_fetch_serial_s", sim["serial_s"])
     tel.inc("sim_fetch_overlapped_s", sim["overlapped_s"])
     tel.inc("sim_fetch_saved_s", sim["saved_s"])

@@ -8,10 +8,12 @@ queries at once.  This module is that service layer:
             estimated from footer metadata only (zone maps + encoded
             sizes) — nothing is fetched or decoded to say "no"
   tick()    the scheduler forms one fair-share batch (weighted fair
-            queueing over estimated decoded bytes, row-group preemption
-            points, cross-tick coalescing holds — scheduler.py) and runs
-            it around a shared DecodePool so each (row group, column)
-            pair is decoded once per tick
+            queueing over estimated decode-SECONDS from the calibrated
+            encoding-aware cost model, reconciled against actual decode
+            cost at slice completion, row-group preemption points,
+            cross-tick coalescing holds — scheduler.py) and runs it
+            around a shared DecodePool so each (row group, column) pair
+            is decoded once per tick
   client()  an engine-compatible adapter (`.scan(reader, plan)`) so the
             whole query suite in core/queries.py runs through the
             service unchanged
@@ -33,6 +35,7 @@ from repro.core.cache import BlockCache
 from repro.core.engine import DatapathEngine, ScanResult
 from repro.core.plan import ScanPlan, bind_expr
 from repro.core.zonemap import prune_and_estimate
+from repro.datapath.costmodel import CostModel
 from repro.datapath.netsim import PrefetchPipeline
 from repro.datapath.policy import AdaptiveOffloadPolicy
 from repro.datapath.scheduler import form_batch, run_tick
@@ -53,7 +56,8 @@ class TenantQuota:
     are *encoded* bytes pulled over the storage->NIC hop (what the
     appliance actually meters); rows are estimated output rows; `weight`
     scales the tenant's share of each tick's decode capacity under the WFQ
-    scheduler (virtual time advances by charged bytes / weight)."""
+    scheduler (virtual time advances by estimated decode-seconds / weight,
+    reconciled against actual decode cost at slice completion)."""
 
     max_bytes: int = 1 << 40
     max_rows: int = 1 << 40
@@ -98,10 +102,13 @@ class ScanRequest:
     pred: object = None
     row_groups: tuple = ()
     # -- scheduler state (datapath/scheduler.py) -----------------------------
-    rg_costs: tuple = ()  # estimated decoded bytes per row group (WFQ charge)
+    rg_costs: tuple = ()  # estimated decode-SECONDS per row group (WFQ charge)
+    rg_bytes: tuple = ()  # estimated decoded bytes per row group (tick budget)
     rg_set: frozenset = frozenset()  # hold-window footprint: row groups
     col_set: frozenset = frozenset()  # hold-window footprint: columns
     cursor: int = 0  # next row-group index to dispatch
+    charged_s: float = 0.0  # decode-seconds charged for not-yet-reconciled slices
+    charged_raw_s: float = 0.0  # same charges before the adaptive scale
     started: bool = False  # first slice has been dispatched
     held_ticks: int = 0  # ticks spent waiting for a coalescing partner
     release_counted: bool = False  # hold_released already recorded
@@ -126,6 +133,8 @@ class DatapathService:
         scheduler: str = "wfq",  # "wfq" | "fifo" (seed behavior, for A/B)
         tick_bytes: Optional[int] = None,  # per-tick decoded-byte budget
         hold_ticks: int = 0,  # cross-tick coalescing window (0 = off)
+        cost_model: Optional[CostModel] = None,  # encoding-aware decode pricing
+        reconcile: bool = True,  # re-bill vtime by actual decode cost
     ):
         assert scheduler in ("wfq", "fifo"), scheduler
         self.engine = engine or DatapathEngine(backend="ref", cache=BlockCache())
@@ -135,7 +144,11 @@ class DatapathService:
         self.quotas = dict(quotas or {})
         self.default_quota = default_quota or TenantQuota()
         self.policy = policy if policy is not None else AdaptiveOffloadPolicy()
-        self.pipeline = pipeline or PrefetchPipeline()
+        self.cost_model = cost_model or CostModel()
+        self.reconcile = reconcile
+        # scheduler and netsim share one calibrated table unless the caller
+        # injects a bespoke pipeline
+        self.pipeline = pipeline or self.cost_model.pipeline()
         self.pool_bytes = pool_bytes
         self.scheduler = scheduler
         self.tick_bytes = tick_bytes
@@ -143,9 +156,17 @@ class DatapathService:
         self.telemetry = telemetry or Telemetry()
         self.queue: List[ScanRequest] = []
         self._tenants: Dict[str, _TenantState] = {}
-        self._vtime: Dict[str, float] = {}  # WFQ virtual time, bytes/weight
+        self._vtime: Dict[str, float] = {}  # WFQ virtual time, decode-s/weight
+        # EWMA of actual/estimated decode cost per tenant, applied at charge
+        # time: a tenant whose scans systematically under-estimate is re-
+        # priced at dispatch (not only retroactively), closing the within-
+        # tick window where a stale estimate could still buy extra slots.
+        self._est_scale: Dict[str, float] = {}
         self._ids = itertools.count()
         self._tick = 0
+
+    EST_SCALE_ALPHA = 0.5  # EWMA weight of the newest slice's observed error
+    EST_SCALE_CLAMP = 64.0  # bound on the adaptive dispatch-time scale
 
     # ------------------------------------------------------------------
     # admission
@@ -159,11 +180,52 @@ class DatapathService:
     def _weight(self, tenant: str) -> float:
         return max(self._quota(tenant).weight, 1e-9)
 
-    def _vcharge(self, tenant: str, cost: float) -> None:
-        """Advance `tenant`'s virtual time by a dispatched slice's estimated
-        decoded bytes over its weight (the WFQ clock)."""
-        self._vtime[tenant] = self._vtime.get(tenant, 0.0) + cost / self._weight(tenant)
-        self.telemetry.observe_sched_bytes(tenant, cost)
+    def _vcharge(self, tenant: str, seconds: float, nbytes: float) -> float:
+        """Advance `tenant`'s virtual time by a dispatched row group's
+        estimated decode-SECONDS over its weight (the WFQ clock is device
+        time, not nominal bytes — an RLE group is cheaper than PLAIN).
+        The estimate is re-priced by the tenant's observed estimate-error
+        scale before charging; returns the seconds actually charged."""
+        charged = seconds * self._est_scale.get(tenant, 1.0)
+        self._vtime[tenant] = self._vtime.get(tenant, 0.0) + charged / self._weight(tenant)
+        self.telemetry.observe_sched(tenant, charged, nbytes)
+        return charged
+
+    def _vreconcile(self, tenant: str, charged_s: float, raw_s: float,
+                    actual_seconds: float) -> None:
+        """Re-bill `tenant`'s virtual time by a completed slice's ACTUAL
+        decode cost: `charged_s` was charged at dispatch, so apply only
+        the difference (positive for under-estimates — a tenant whose
+        scans under-price cannot buy extra share; negative refunds
+        over-estimates, e.g. cache-resident slices that decoded nothing).
+        Same estimate-then-correct pattern the quota path uses for encoded
+        bytes.  The clamp keeps virtual time non-negative under any
+        correction ordering.
+
+        `raw_s` is the slice's pre-scale estimate; actual/raw drives the
+        EWMA dispatch-time scale so a SYSTEMATIC mis-estimate stops paying
+        off after its first reconciled slice, instead of re-buying a
+        within-tick advantage every tick."""
+        self.telemetry.observe_actual_cost(tenant, actual_seconds)
+        if not self.reconcile:
+            return
+        correction = actual_seconds - charged_s
+        if correction != 0.0:
+            self._vtime[tenant] = max(
+                0.0, self._vtime.get(tenant, 0.0) + correction / self._weight(tenant)
+            )
+            self.telemetry.observe_recon(tenant, correction)
+        # Only slices that did real decode work train the scale: a cache/
+        # pool-resident slice (actual == 0) is a scheduling outcome, not an
+        # estimate error — folding it in would drive the scale to the floor
+        # and let the tenant's next FRESH scan monopolize ticks at a
+        # near-zero dispatch price.
+        if raw_s > 0.0 and actual_seconds > 0.0:
+            target = min(max(actual_seconds / raw_s, 1.0 / self.EST_SCALE_CLAMP),
+                         self.EST_SCALE_CLAMP)
+            prev = self._est_scale.get(tenant, 1.0)
+            a = self.EST_SCALE_ALPHA
+            self._est_scale[tenant] = (1.0 - a) * prev + a * target
 
     def submit(self, tenant: str, reader, plan: ScanPlan, blooms: Optional[Dict] = None) -> Ticket:
         """Admit one scan request or raise (QueueFull / QuotaExceeded).
@@ -219,13 +281,15 @@ class DatapathService:
 
         ticket = Ticket(next(self._ids), tenant, submitted_s=time.perf_counter(),
                         submitted_tick=self._tick)
+        rg_costs = self.cost_model.estimate_row_groups(
+            self.engine, reader, plan, rgs, pred=pred
+        )
         self.queue.append(
             ScanRequest(ticket.req_id, tenant, reader, plan, blooms, ticket,
                         est_bytes=est_bytes, est_rows=est_rows,
                         pred=pred, row_groups=rgs,
-                        rg_costs=tuple(
-                            self.engine.estimate_decode_bytes(reader, plan, rgs)
-                        ),
+                        rg_costs=tuple(c.seconds for c in rg_costs),
+                        rg_bytes=tuple(c.nbytes for c in rg_costs),
                         rg_set=frozenset(rgs),
                         col_set=frozenset(plan.all_columns()))
         )

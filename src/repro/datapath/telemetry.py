@@ -55,6 +55,14 @@ class Telemetry:
         # (estimated) bytes, per tenant
         self.tenant_decoded_bytes: Dict[str, float] = collections.defaultdict(float)
         self.tenant_sched_bytes: Dict[str, float] = collections.defaultdict(float)
+        # time-domain WFQ currency: estimated decode-seconds charged at
+        # dispatch, actual decode-seconds observed at slice completion, and
+        # the reconciliation corrections applied to virtual time.  With
+        # reconciliation on, sched + recon == actual per tenant (property-
+        # tested in tests/test_recon_props.py).
+        self.tenant_sched_seconds: Dict[str, float] = collections.defaultdict(float)
+        self.tenant_actual_seconds: Dict[str, float] = collections.defaultdict(float)
+        self.tenant_recon_seconds: Dict[str, float] = collections.defaultdict(float)
 
     # -- recording ---------------------------------------------------------
     def inc(self, name: str, value: float = 1.0) -> None:
@@ -77,10 +85,25 @@ class Telemetry:
         """Decoded bytes materialized for `tenant` by one dispatched slice."""
         self.tenant_decoded_bytes[tenant] += nbytes
 
-    def observe_sched_bytes(self, tenant: str, nbytes: float) -> None:
-        """Estimated decoded bytes the scheduler charged `tenant` for one
-        dispatched row group (the WFQ virtual-time currency)."""
+    def observe_sched(self, tenant: str, seconds: float, nbytes: float) -> None:
+        """One dispatched row group's scheduler charge: estimated decode-
+        seconds (the WFQ virtual-time currency) plus the estimated decoded
+        bytes it corresponds to (the tick-budget currency)."""
+        self.tenant_sched_seconds[tenant] += seconds
         self.tenant_sched_bytes[tenant] += nbytes
+
+    def observe_actual_cost(self, tenant: str, seconds: float) -> None:
+        """Actual decode cost of one completed slice (modeled from the
+        bytes the engine really materialized) — recorded whether or not
+        reconciliation is on, so estimate error is always reportable."""
+        self.tenant_actual_seconds[tenant] += seconds
+
+    def observe_recon(self, tenant: str, correction_s: float) -> None:
+        """Virtual-time correction applied at slice completion (positive:
+        the tenant under-estimated and is re-billed; negative: refund)."""
+        self.tenant_recon_seconds[tenant] += correction_s
+        self.inc("recon_slices")
+        self.inc("recon_abs_seconds", abs(correction_s))
 
     # -- reading -----------------------------------------------------------
     def tenant_latency(self, tenant: str) -> Dict[str, float]:
@@ -91,18 +114,52 @@ class Telemetry:
             "p99_s": quantile(xs, 0.99),
         }
 
+    def known_tenants(self) -> List[str]:
+        """Every tenant the scheduler has seen — decoded bytes, scheduler
+        charges, OR latency samples.  Fairness must range over all of
+        them: a fully-starved tenant decodes zero bytes and would
+        otherwise vanish from the report, RAISING the Jain index exactly
+        when it should tank."""
+        return sorted(
+            set(self.tenant_decoded_bytes)
+            | set(self.tenant_sched_bytes)
+            | set(self.tenant_sched_seconds)
+            | set(self._tenant_latency)
+        )
+
+    def cost_report(self) -> dict:
+        """Estimated-vs-actual decode cost per tenant: the honesty ledger.
+        `rel_err` is (estimate - actual) / actual (negative: the tenant's
+        scans under-estimated); `recon_s` is the virtual-time correction
+        reconciliation applied to close the gap."""
+        out = {}
+        for t in self.known_tenants():
+            est = self.tenant_sched_seconds.get(t, 0.0)
+            act = self.tenant_actual_seconds.get(t, 0.0)
+            out[t] = {
+                "est_s": est,
+                "actual_s": act,
+                "recon_s": self.tenant_recon_seconds.get(t, 0.0),
+                "rel_err": (est - act) / act if act > 0 else 0.0,
+            }
+        return out
+
     def fairness(self, weights: Optional[Dict[str, float]] = None) -> dict:
         """Fair-share report: each tenant's share of decoded bytes, the
         Jain index over weight-normalized allocations (1.0 = perfectly
-        weighted-fair), and what the coalescing hold window cost."""
+        weighted-fair), and what the coalescing hold window cost.  Shares
+        cover every tenant known to the scheduler, so a starved tenant
+        shows up as a zero share and drags the index down."""
         weights = weights or {}
-        decoded = dict(sorted(self.tenant_decoded_bytes.items()))
+        decoded = {t: self.tenant_decoded_bytes.get(t, 0.0)
+                   for t in self.known_tenants()}
         total = float(sum(decoded.values()))
         shares = {t: (v / total if total > 0 else 0.0) for t, v in decoded.items()}
         normalized = [v / max(weights.get(t, 1.0), 1e-9) for t, v in decoded.items()]
         return {
             "tenant_decoded_bytes": decoded,
             "tenant_sched_bytes": dict(sorted(self.tenant_sched_bytes.items())),
+            "tenant_sched_seconds": dict(sorted(self.tenant_sched_seconds.items())),
             "tenant_share": shares,
             "jain_index": jain_index(normalized),
             "min_share": min(shares.values()) if shares else 0.0,
@@ -126,4 +183,5 @@ class Telemetry:
                 t: self.tenant_latency(t) for t in sorted(self._tenant_latency)
             },
             "fairness": self.fairness(),
+            "cost": self.cost_report(),
         }

@@ -89,6 +89,13 @@ class EncodedColumn:
         return self.n * 4
 
 
+def padded_rows(n: int) -> int:
+    """Rows the engine actually materializes for an n-row row group: decode
+    output is padded to the PACK_BLOCK boundary (kernel block shape), so
+    honest decoded-byte accounting must size L, not n."""
+    return -(-n // PACK_BLOCK) * PACK_BLOCK
+
+
 def bits_needed(max_value: int) -> int:
     """Bits to represent values in [0, max_value]."""
     if max_value <= 0:

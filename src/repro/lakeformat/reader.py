@@ -41,6 +41,15 @@ class LakeReader:
     def row_group_meta(self, rg: int) -> dict:
         return self.footer["row_groups"][rg]
 
+    def decoded_dtype(self, column: str) -> np.dtype:
+        """Dtype of the DECODED device column: float32 columns decode to
+        float32, everything else (ints, string codes) to int32.  Lets the
+        engine build schema-correct empty results without decoding."""
+        for c in self.footer["schema"]["columns"]:
+            if c["name"] == column:
+                return np.dtype("float32" if c["dtype"] == "float32" else "int32")
+        raise KeyError(column)
+
     def string_code(self, column: str, value: str) -> int:
         """Host-side constant folding: a string predicate constant -> code."""
         try:

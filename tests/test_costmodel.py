@@ -1,0 +1,215 @@
+"""Calibrated encoding-aware cost model: pricing, persistence, calibration
+fallback, honest per-row-group estimates (estimate == engine actuals, bit
+for bit in the bytes domain), and the scheduler/netsim single-table
+contract."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import BlockCache, Cmp, DatapathEngine, ScanPlan, tpch
+from repro.core.plan import bind_expr
+from repro.core.zonemap import prune_row_groups
+from repro.datapath import (
+    NOMINAL_RATES_GBPS,
+    CostModel,
+    DatapathService,
+    DecodeModel,
+    LinkModel,
+    PrefetchPipeline,
+    StaticPolicy,
+)
+from repro.lakeformat.encodings import padded_rows
+from repro.lakeformat.reader import LakeReader
+
+
+@pytest.fixture(scope="module")
+def lineitem(tmp_path_factory):
+    d = tmp_path_factory.mktemp("tpch_cm")
+    paths = tpch.write_tables(str(d), sf=0.05, seed=0, sorted_data=True,
+                              row_group_size=8192)
+    return LakeReader(paths["lineitem"])
+
+
+# ---------------------------------------------------------------------------
+# pricing + persistence
+# ---------------------------------------------------------------------------
+
+def test_nominal_pricing_and_unknown_encoding_fallback():
+    cm = CostModel()
+    assert cm.source == "nominal"
+    for enc, rate in NOMINAL_RATES_GBPS.items():
+        assert cm.decode_seconds(1 << 30, enc) == pytest.approx((1 << 30) / (rate * 1e9))
+    # unknown encodings price at the plain rate instead of crashing
+    assert cm.decode_seconds(1000, "zstd_frame") == cm.decode_seconds(1000, "plain")
+    # seconds scale linearly in bytes
+    assert cm.decode_seconds(2000, "rle") == pytest.approx(2 * cm.decode_seconds(1000, "rle"))
+
+
+def test_save_load_round_trip(tmp_path):
+    cm = CostModel(rates={"plain": 33.0, "rle": 44.0}, source="calibrated",
+                   backend="ref", link_bandwidth_gbps=5.0, link_latency_us=3.0)
+    path = cm.save(str(tmp_path / "cal.json"))
+    back = CostModel.load(path)
+    assert back.rates == cm.rates
+    assert back.source == "calibrated"
+    assert back.link_model().bandwidth_gbps == 5.0
+    assert back.link_model().latency_us == 3.0
+    # the persisted file is plain JSON with sorted keys (diffable in CI)
+    d = json.loads(open(path).read())
+    assert list(d["rates_gbps"]) == sorted(d["rates_gbps"])
+
+
+def test_load_or_nominal_degrades_gracefully(tmp_path):
+    assert CostModel.load_or_nominal(None).source == "nominal"
+    assert CostModel.load_or_nominal(str(tmp_path / "missing.json")).source == "nominal"
+    bad = tmp_path / "corrupt.json"
+    bad.write_text("{not json")
+    assert CostModel.load_or_nominal(str(bad)).source == "nominal"
+
+
+def test_nonpositive_rates_are_rejected():
+    """A zero/negative measured rate (broken timer) must not poison the
+    table — the nominal entry survives."""
+    cm = CostModel(rates={"plain": 0.0, "rle": -3.0, "dict": 5.0})
+    assert cm.rate_gbps("plain") == NOMINAL_RATES_GBPS["plain"]
+    assert cm.rate_gbps("rle") == NOMINAL_RATES_GBPS["rle"]
+    assert cm.rate_gbps("dict") == 5.0
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+def test_calibrate_smoke_measures_every_encoding():
+    cm = CostModel.calibrate(backend="ref", n=1 << 14, repeats=1)
+    assert cm.source == "calibrated"
+    assert set(cm.rates) >= set(NOMINAL_RATES_GBPS)
+    for enc in NOMINAL_RATES_GBPS:
+        assert cm.rates[enc] > 0, enc
+
+
+def test_calibrate_falls_back_to_nominal_on_failure():
+    cm = CostModel.calibrate(backend="ref", n=-5)  # invalid size -> kernel error
+    assert cm.source == "nominal-fallback"
+    assert cm.rates == NOMINAL_RATES_GBPS
+
+
+# ---------------------------------------------------------------------------
+# estimates: honest vs engine actuals
+# ---------------------------------------------------------------------------
+
+ESTIMATE_PLANS = [
+    ScanPlan("lineitem", ["l_extendedprice", "l_quantity"]),  # full scan
+    ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+             Cmp("l_shipdate", "between", (300, 900))),  # pruned, not fused
+    ScanPlan("lineitem", ["l_extendedprice"], Cmp("l_quantity", "le", 10)),  # fused
+]
+
+
+@pytest.mark.parametrize("idx", range(len(ESTIMATE_PLANS)))
+def test_estimated_bytes_equal_engine_actuals(lineitem, idx):
+    """The bytes half of every RowGroupCost equals ScanStats.decoded_bytes
+    for a direct raw scan — padded rows, true dtype widths, fused predicate
+    column excluded.  Estimate == actual is what makes reconciliation a
+    no-op for honest tenants."""
+    plan = ESTIMATE_PLANS[idx]
+    eng = DatapathEngine(backend="ref", cache=BlockCache(1 << 30))
+    pred = bind_expr(plan.predicate, lineitem)
+    rgs = prune_row_groups(lineitem, pred)
+    costs = CostModel().estimate_row_groups(eng, lineitem, plan, rgs, pred=pred)
+    res = DatapathEngine(backend="ref").scan(lineitem, plan, row_groups=rgs)
+    assert sum(c.nbytes for c in costs) == res.stats.decoded_bytes
+    assert all(c.seconds > 0 for c in costs)
+
+
+def test_estimated_seconds_match_actual_decode_work(lineitem):
+    """The seconds half prices the same work the engine records in
+    ScanStats.decode_work (including the fused predicate column, which is
+    processed but never materialized), through the same table."""
+    cm = CostModel()
+    eng = DatapathEngine(backend="ref", cache=BlockCache(1 << 30))
+    for plan in ESTIMATE_PLANS:
+        pred = bind_expr(plan.predicate, lineitem)
+        rgs = prune_row_groups(lineitem, pred)
+        est_s = sum(c.seconds for c in
+                    cm.estimate_row_groups(eng, lineitem, plan, rgs, pred=pred))
+        res = DatapathEngine(backend="ref").scan(lineitem, plan, row_groups=rgs)
+        actual_s = sum(cm.decode_seconds(b, e) for e, b in res.stats.decode_work.items())
+        assert est_s == pytest.approx(actual_s)
+
+
+def test_fused_predicate_column_priced_but_not_materialized(lineitem):
+    """A fused plan's estimate must carry decode-time for the predicate
+    column while its byte estimate excludes it."""
+    cm = CostModel()
+    eng = DatapathEngine(backend="ref")
+    fused = ScanPlan("lineitem", ["l_extendedprice"], Cmp("l_quantity", "le", 10))
+    nofuse = ScanPlan("lineitem", ["l_extendedprice", "l_quantity"],
+                      Cmp("l_quantity", "le", 10))  # pred col projected
+    rgs = list(range(lineitem.n_row_groups))
+    c_f = cm.estimate_row_groups(eng, lineitem, fused, rgs)
+    c_n = cm.estimate_row_groups(eng, lineitem, nofuse, rgs)
+    assert sum(c.nbytes for c in c_f) < sum(c.nbytes for c in c_n)  # one col vs two
+    assert sum(c.seconds for c in c_f) == pytest.approx(
+        sum(c.seconds for c in c_n))  # same decode work either way
+
+
+def test_estimates_use_padded_rows(lineitem):
+    """The short last row group still bills a full PACK_BLOCK of output."""
+    last = lineitem.n_row_groups - 1
+    n = lineitem.row_group_meta(last)["n"]
+    assert 0 < n < padded_rows(n)  # precondition: genuinely short
+    plan = ScanPlan("lineitem", ["l_extendedprice"])
+    (cost,) = CostModel().estimate_row_groups(
+        DatapathEngine(backend="ref"), lineitem, plan, [last])
+    assert cost.nbytes == padded_rows(n) * 4
+
+
+# ---------------------------------------------------------------------------
+# netsim unification
+# ---------------------------------------------------------------------------
+
+def test_decode_model_is_encoding_aware():
+    dm = DecodeModel(decode_gbps=10.0, rates={"rle": 40.0})
+    assert dm.decode_seconds(1 << 20, "rle") == pytest.approx(
+        dm.decode_seconds(1 << 20) / 4)
+    assert dm.decode_seconds(1 << 20, "bitpack") == dm.decode_seconds(1 << 20)
+
+
+def test_pipeline_decode_seconds_override():
+    pipe = PrefetchPipeline(LinkModel(bandwidth_gbps=1.0, latency_us=0.0))
+    enc = [1 << 20] * 4
+    dec = [1 << 20] * 4
+    slow = pipe.simulate(enc, dec, decode_seconds=[1.0] * 4)
+    fast = pipe.simulate(enc, dec, decode_seconds=[1e-6] * 4)
+    assert slow["serial_s"] > fast["serial_s"]
+    # identity still holds under the override
+    assert abs(slow["serial_s"] - (slow["overlapped_s"] + slow["saved_s"])) < 1e-9
+
+
+def test_service_and_netsim_share_one_table(lineitem):
+    """DatapathService built with a calibrated table must hand the SAME
+    per-encoding rates to its prefetch pipeline — scheduler and netsim
+    agree on one model."""
+    cm = CostModel(rates={"plain": 7.0, "rle": 9.0}, source="calibrated")
+    svc = DatapathService(
+        engine=DatapathEngine(backend="ref", cache=BlockCache(1 << 30)),
+        policy=StaticPolicy("raw"), cost_model=cm)
+    assert svc.pipeline.decode.rates == cm.rates
+    assert svc.pipeline.link.bandwidth_gbps == cm.link_bandwidth_gbps
+    # and the simulation actually runs through it end to end
+    t = svc.submit("t", lineitem, ScanPlan("lineitem", ["l_extendedprice"]))
+    svc.drain()
+    assert t.status == "done"
+    assert svc.telemetry.counters["sim_fetch_decoded_bytes"] > 0
+
+
+def test_cli_smoke(tmp_path, capsys):
+    from repro.datapath import costmodel
+
+    out = tmp_path / "cal.json"
+    assert costmodel.main(["--nominal", "--out", str(out)]) == 0
+    assert CostModel.load(str(out)).rates == NOMINAL_RATES_GBPS
+    assert "costmodel.plain" in capsys.readouterr().out

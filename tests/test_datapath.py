@@ -385,6 +385,49 @@ def test_quantile_small_sample_and_boundary_edges():
     assert quantile([1.0, 2.0], 1.5) == 2.0
 
 
+def test_fairness_counts_starved_tenants():
+    """Regression: a tenant with zero decoded bytes used to be absent from
+    the fairness report, so a fully-starved tenant RAISED the Jain index.
+    Shares must range over every tenant the scheduler knows (sched charges
+    or latency samples), with the starved tenant at share 0 dragging the
+    index down."""
+    t = Telemetry()
+    t.observe_tenant_bytes("fed", 1000.0)
+    t.observe_sched("starved", 0.0, 0.0)  # scheduler knows it; it never ran
+    fair = t.fairness()
+    assert fair["tenant_share"]["starved"] == 0.0
+    assert fair["tenant_share"]["fed"] == 1.0
+    assert fair["min_share"] == 0.0
+    assert fair["jain_index"] == pytest.approx(0.5)  # 1/n for total starvation
+    # a latency-only tenant (e.g. all its requests errored) also shows up
+    t2 = Telemetry()
+    t2.observe_tenant_bytes("fed", 1000.0)
+    t2.observe_latency("unlucky", 0.1)
+    assert t2.fairness()["tenant_share"]["unlucky"] == 0.0
+    assert t2.fairness()["jain_index"] == pytest.approx(0.5)
+
+
+def test_cost_report_tracks_estimate_error():
+    """The honesty ledger: rel_err is signed (negative = under-estimate)
+    and recon_s records the corrections applied."""
+    t = Telemetry()
+    t.observe_sched("u", 1.0, 100.0)
+    t.observe_actual_cost("u", 4.0)
+    t.observe_recon("u", 3.0)
+    t.observe_sched("o", 2.0, 100.0)
+    t.observe_actual_cost("o", 1.0)
+    t.observe_recon("o", -1.0)
+    rep = t.cost_report()
+    assert rep["u"]["rel_err"] == pytest.approx(-0.75)
+    assert rep["u"]["recon_s"] == 3.0
+    assert rep["o"]["rel_err"] == pytest.approx(1.0)
+    assert t.counters["recon_slices"] == 2
+    assert t.counters["recon_abs_seconds"] == pytest.approx(4.0)
+    # never-completed tenants divide by zero nowhere
+    t.observe_sched("pending", 1.0, 10.0)
+    assert t.cost_report()["pending"]["rel_err"] == 0.0
+
+
 def test_snapshot_deterministic_for_empty_and_populated_telemetry():
     """Benchmark JSON must be stable run-to-run: empty deques collapse to
     fixed zeros and every dict is key-sorted regardless of insertion order."""

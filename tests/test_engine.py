@@ -116,6 +116,26 @@ def test_offload_modes_agree_and_cache(small_tables):
     assert len(set(results.values())) == 1
 
 
+def test_all_pruned_scan_keeps_schema_dtypes(small_tables):
+    """Regression: the all-pruned empty result used jnp.zeros((0,)), which
+    forces float32 for every column regardless of schema — breaking the
+    dtype half of the sliced ≡ single-shot bit-identity contract.  Empty
+    columns must match the dtypes a one-group scan produces."""
+    paths, _ = small_tables
+    r = _reader(paths)
+    cols = ["l_extendedprice", "l_quantity", "l_shipmode"]  # f32, i32, str->i32
+    impossible = ScanPlan("lineitem", cols, Cmp("l_shipdate", "between", (-20, -10)))
+    eng = DatapathEngine(backend="ref")
+    pruned = eng.scan(r, impossible)
+    assert int(pruned.count) == 0
+    assert all(a.shape[0] == 0 for a in pruned.columns.values())
+    one_group = DatapathEngine(backend="ref").scan(
+        r, ScanPlan("lineitem", cols), row_groups=[0])
+    assert {c: a.dtype for c, a in pruned.columns.items()} == {
+        c: a.dtype for c, a in one_group.columns.items()}
+    assert pruned.mask.dtype == one_group.mask.dtype == jnp.bool_
+
+
 def test_backend_parity(small_tables):
     paths, _ = small_tables
     plan = ScanPlan(

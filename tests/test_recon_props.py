@@ -1,0 +1,191 @@
+"""Reconciliation invariants for the honest cost model.
+
+After `drain()` every tenant's cumulative virtual-time charge must equal
+its actual decode cost (estimate + correction), virtual time must never
+go negative at any tick boundary, and FIFO mode — which never reads the
+virtual clocks — must produce identical schedules with reconciliation on
+or off.
+
+The invariants live in plain checker functions exercised both by fixed
+regression cases (always run) and by a hypothesis property sweep over
+service configurations and estimate-doctoring factors (skipped without
+`hypothesis`, same policy as tests/test_decode_pool_props.py).
+"""
+
+import functools
+import tempfile
+
+import pytest
+
+from repro.core import BlockCache, Cmp, DatapathEngine, ScanPlan, tpch
+from repro.datapath import DatapathService, StaticPolicy, TenantQuota
+from repro.lakeformat.reader import LakeReader
+
+RG_ROWS = 8192
+RG_COST = RG_ROWS * 4 * 2
+
+
+@functools.lru_cache(maxsize=1)
+def _lineitem() -> LakeReader:
+    d = tempfile.mkdtemp(prefix="tpch_recon_")
+    paths = tpch.write_tables(d, sf=0.05, seed=0, sorted_data=True,
+                              row_group_size=RG_ROWS)
+    return LakeReader(paths["lineitem"])
+
+
+PLANS = [
+    ScanPlan("lineitem", ["l_extendedprice", "l_quantity"]),  # elephant
+    ScanPlan("lineitem", ["l_discount", "l_tax"]),  # disjoint elephant
+    ScanPlan("lineitem", ["l_extendedprice"],
+             Cmp("l_shipdate", "between", (300, 700))),  # mouse
+    ScanPlan("lineitem", ["l_extendedprice"], Cmp("l_quantity", "le", 10)),  # fused
+]
+
+
+def _service(scheduler="wfq", tick_bytes=None, hold_ticks=0, reconcile=True,
+             weights=()):
+    quotas = {t: TenantQuota(weight=w) for t, w in weights}
+    return DatapathService(
+        engine=DatapathEngine(backend="ref", cache=BlockCache(1 << 30)),
+        policy=StaticPolicy("raw"), scheduler=scheduler, tick_bytes=tick_bytes,
+        hold_ticks=hold_ticks, reconcile=reconcile, quotas=quotas,
+    )
+
+
+def _run_workload(svc, plan_idxs, cheat_factor=1.0):
+    """Submit one tenant per plan (tenant i cheats by `cheat_factor` on its
+    estimates), then drain while checking vtime non-negativity every tick.
+    Returns the per-tenant tickets."""
+    reader = _lineitem()
+    tickets = {}
+    for i, pi in enumerate(plan_idxs):
+        tenant = f"t{i}"
+        tickets[tenant] = svc.submit(tenant, reader, PLANS[pi])
+        if i == 0 and cheat_factor != 1.0:
+            req = next(q for q in svc.queue if q.tenant == tenant)
+            req.rg_costs = tuple(c * cheat_factor for c in req.rg_costs)
+    guard = 0
+    while svc.queue:
+        svc.tick()
+        guard += 1
+        assert guard < 10_000, "drain did not converge"
+        assert all(v >= 0.0 for v in svc._vtime.values()), svc._vtime
+    return tickets
+
+
+def check_charge_equals_actual(plan_idxs, scheduler="wfq", tick_bytes=None,
+                               hold_ticks=0, cheat_factor=1.0, weights=()):
+    """With reconciliation on, sched + recon == actual per tenant, every
+    ticket completes, and vtime never went negative."""
+    svc = _service(scheduler=scheduler, tick_bytes=tick_bytes,
+                   hold_ticks=hold_ticks, reconcile=True, weights=weights)
+    tickets = _run_workload(svc, plan_idxs, cheat_factor=cheat_factor)
+    assert all(t.status == "done" for t in tickets.values())
+    tel = svc.telemetry
+    for tenant in tickets:
+        est = tel.tenant_sched_seconds.get(tenant, 0.0)
+        recon = tel.tenant_recon_seconds.get(tenant, 0.0)
+        actual = tel.tenant_actual_seconds.get(tenant, 0.0)
+        assert est + recon == pytest.approx(actual, rel=1e-9, abs=1e-15), (
+            tenant, est, recon, actual)
+        assert actual >= 0.0
+
+
+def check_fifo_unaffected_by_reconcile(plan_idxs, tick_bytes=None,
+                                       cheat_factor=1.0):
+    """FIFO never consults virtual time, so reconciliation must not change
+    WHAT runs WHEN: done ticks and results match with it on and off."""
+    def run(reconcile):
+        svc = _service(scheduler="fifo", tick_bytes=tick_bytes,
+                       reconcile=reconcile)
+        tickets = _run_workload(svc, plan_idxs, cheat_factor=cheat_factor)
+        return {t: (tk.done_tick, int(tk.result.count)) for t, tk in tickets.items()}
+
+    assert run(True) == run(False)
+
+
+# ---------------------------------------------------------------------------
+# fixed regression cases (always run)
+# ---------------------------------------------------------------------------
+
+FIXED_CASES = [
+    dict(plan_idxs=(0, 1)),  # two honest elephants, unbounded ticks
+    dict(plan_idxs=(0, 1), tick_bytes=RG_COST, cheat_factor=0.25),  # 4x cheat
+    dict(plan_idxs=(0, 1, 2, 3), tick_bytes=RG_COST * 2, hold_ticks=2),  # holds
+    dict(plan_idxs=(3, 2), cheat_factor=4.0,  # over-estimator gets refunds
+         weights=(("t0", 2.0), ("t1", 0.5))),
+]
+
+
+@pytest.mark.parametrize("case", FIXED_CASES)
+def test_charge_equals_actual_fixed(case):
+    check_charge_equals_actual(**case)
+
+
+@pytest.mark.parametrize("tick_bytes", [None, RG_COST])
+@pytest.mark.parametrize("cheat_factor", [1.0, 0.25])
+def test_fifo_unaffected_fixed(tick_bytes, cheat_factor):
+    check_fifo_unaffected_by_reconcile((0, 2), tick_bytes=tick_bytes,
+                                       cheat_factor=cheat_factor)
+
+
+def test_reconcile_off_still_reports_actuals():
+    """The honesty ledger works even when corrections are disabled."""
+    svc = _service(reconcile=False)
+    _run_workload(svc, (0,), cheat_factor=0.5)
+    tel = svc.telemetry
+    assert tel.tenant_actual_seconds["t0"] > 0
+    assert tel.tenant_recon_seconds.get("t0", 0.0) == 0.0
+    assert tel.cost_report()["t0"]["rel_err"] < -0.4  # the 2x lie is visible
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (these two skip without hypothesis; the fixed cases
+# above always run, so the invariants are never fully unguarded)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=15)
+    @given(
+        plan_idxs=st.lists(st.integers(0, len(PLANS) - 1), min_size=1, max_size=4),
+        scheduler=st.sampled_from(["wfq", "fifo"]),
+        tick_bytes=st.sampled_from([None, 0, RG_COST, RG_COST * 3]),
+        hold_ticks=st.integers(0, 2),
+        cheat_factor=st.sampled_from([0.25, 0.5, 1.0, 4.0]),
+        w0=st.sampled_from([0.5, 1.0, 3.0]),
+    )
+    def test_charge_equals_actual_property(plan_idxs, scheduler, tick_bytes,
+                                           hold_ticks, cheat_factor, w0):
+        check_charge_equals_actual(
+            tuple(plan_idxs), scheduler=scheduler, tick_bytes=tick_bytes,
+            hold_ticks=hold_ticks, cheat_factor=cheat_factor,
+            weights=(("t0", w0),),
+        )
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        plan_idxs=st.lists(st.integers(0, len(PLANS) - 1), min_size=1, max_size=3),
+        tick_bytes=st.sampled_from([None, RG_COST]),
+        cheat_factor=st.sampled_from([0.25, 1.0, 4.0]),
+    )
+    def test_fifo_unaffected_property(plan_idxs, tick_bytes, cheat_factor):
+        check_fifo_unaffected_by_reconcile(tuple(plan_idxs), tick_bytes=tick_bytes,
+                                           cheat_factor=cheat_factor)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_charge_equals_actual_property():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_fifo_unaffected_property():
+        pass
