@@ -25,6 +25,15 @@ the cheat's decoded-byte share while both are backlogged must stay
 within 10% of the honest baseline; with it off, the cheat pays off —
 that delta is the reconciliation mechanism's measured value.
 
+The `blockstore` sub-report exercises the unified tiered store: a LATE
+partner arriving hold_ticks after a compatible scan dispatched serves
+its overlapping row groups from the window-retained decoded tier
+(re-decode seconds saved > 0 vs the old tick-scoped pool, which saves
+exactly zero in the same scenario), and a capacity-pressured preloaded
+workload shows the cost-ranked eviction keeping encoded pages (repeat
+scans re-decode but never re-fetch) — per-tier hit/eviction rates come
+from the store's ledger.
+
 Reported rows:
     service.independent    N direct DatapathEngine.scan() calls
     service.coalesced      same scans through one DatapathService tick
@@ -33,6 +42,7 @@ Reported rows:
     service.fairness.*     solo / fifo / wfq mice latency + Jain index
     service.holdwindow     cross-tick vs tick-scoped coalescing savings
     service.costmodel.*    calibrated rates + 4x-under-estimator shares
+    service.blockstore.*   late-partner retained reuse + tier ledger
 """
 
 from __future__ import annotations
@@ -266,6 +276,85 @@ def run_costmodel(sf: float = 0.1) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# blockstore sub-report: retained-window reuse + tier ledger under pressure
+# ---------------------------------------------------------------------------
+
+def _run_late_partner(reader, hold_ticks: int) -> dict:
+    """A scan dispatches alone (at its hold deadline); a compatible partner
+    arrives AFTER it completed, within the hold window.  With the unified
+    store the partner reuses the window-retained decodes; with the old
+    tick-scoped pool (hold_ticks=0 control) it re-decodes everything."""
+    svc = DatapathService(
+        engine=DatapathEngine(backend="ref", cache=BlockCache(4 << 30)),
+        policy=StaticPolicy("raw"), hold_ticks=hold_ticks,
+    )
+    plan_a = ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+                      Cmp("l_shipdate", "between", (300, 700)))
+    plan_b = ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+                      Cmp("l_shipdate", "between", (350, 750)))
+    early = svc.submit("early", reader, plan_a)
+    while early.status == "queued":
+        svc.tick()
+    late = svc.submit("late", reader, plan_b)
+    svc.drain()
+    c = svc.telemetry.counters
+    return {
+        "reuse_bytes": int(c.get("retained_reuse_bytes", 0)),
+        "redecode_saved_s": float(c.get("retained_redecode_saved_s", 0.0)),
+        "late_fresh_bytes": int(late.result.stats.decoded_bytes_fresh),
+        "late_pool_hits": int(late.result.stats.pool_hits),
+        "retained_charge_s": float(c.get("retained_charge_seconds", 0.0)),
+    }
+
+
+def _run_tier_pressure(reader) -> dict:
+    """Preloaded repeats through a store sized well under the decoded
+    footprint: cost-ranked eviction churns PLAIN decodes but keeps encoded
+    pages, so the repeat pass re-decodes without re-fetching."""
+    plan = ScanPlan("lineitem", ["l_extendedprice", "l_discount"])
+    enc_total = sum(
+        reader.row_group_meta(rg)["columns"][c]["encoded_bytes"]
+        for rg in range(reader.n_row_groups)
+        for c in ("l_extendedprice", "l_discount")
+    )
+    eng = DatapathEngine(backend="ref",
+                         cache=BlockCache(enc_total + FAIR_RG_ROWS * 4 * 3))
+    first = eng.scan(reader, plan, offload="preloaded")
+    second = eng.scan(reader, plan, offload="preloaded")
+    tiers = eng.cache.stats()["tiers"]
+    return {
+        "first_fetch_bytes": int(first.stats.encoded_bytes),
+        "repeat_fetch_bytes": int(second.stats.encoded_bytes),
+        "repeat_page_hits": int(second.stats.page_hits),
+        "decoded_evictions": int(tiers["decoded"]["evictions"]),
+        "encoded_hits": int(tiers["encoded"]["hits"]),
+        "decoded_hits": int(tiers["decoded"]["hits"]),
+    }
+
+
+def run_blockstore(sf: float = 0.1) -> dict:
+    reader = fairness_setup(sf)
+    scoped = _run_late_partner(reader, hold_ticks=0)  # old tick-scoped pool
+    window = _run_late_partner(reader, hold_ticks=2)
+    pressure = _run_tier_pressure(reader)
+    row("service.blockstore.latepartner", 0.0,
+        f"reuse_bytes={window['reuse_bytes']};"
+        f"redecode_saved_s={window['redecode_saved_s']:.6f};"
+        f"tick_scoped_saved_s={scoped['redecode_saved_s']:.6f};"
+        f"retained_charge_s={window['retained_charge_s']:.6f}")
+    row("service.blockstore.tiers", 0.0,
+        f"repeat_fetch_bytes={pressure['repeat_fetch_bytes']}"
+        f"/{pressure['first_fetch_bytes']};"
+        f"page_hits={pressure['repeat_page_hits']};"
+        f"decoded_evictions={pressure['decoded_evictions']}")
+    return {
+        "late_partner_window": window,
+        "late_partner_tick_scoped": scoped,
+        "tier_pressure": pressure,
+    }
+
+
 def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
     readers = setup(sf)
     plans = tenant_plans(n_tenants)
@@ -314,10 +403,12 @@ def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
 
     fairness = run_fairness(sf)
     costmodel = run_costmodel(sf)
+    blockstore = run_blockstore(sf)
 
     return {
         "fairness": fairness,
         "costmodel": costmodel,
+        "blockstore": blockstore,
         "n_tenants": n_tenants,
         "independent_fresh_decoded_bytes": ind_fresh,
         "service_fresh_decoded_bytes": svc_fresh,

@@ -16,9 +16,11 @@ TIER1_RATCHET=1 python scripts/check_tier1.py
 python -c "from repro.datapath.costmodel import main; import sys; sys.exit(main(['--n', '65536', '--repeats', '1', '--out', '/tmp/costmodel_ci.json']))"
 
 # service benchmark — includes the `fairness` sub-report (FIFO vs WFQ under
-# 1-elephant/3-mice, hold-window savings) and the `costmodel` sub-report
-# (calibrated rates + 4x-under-estimator reconciliation A/B) — appended to
-# the perf trajectory
+# 1-elephant/3-mice, hold-window savings), the `costmodel` sub-report
+# (calibrated rates + 4x-under-estimator reconciliation A/B), and the
+# `blockstore` sub-report (late-partner retained-decode reuse vs the old
+# tick-scoped pool + per-tier hit/eviction ledger under capacity pressure)
+# — appended to the perf trajectory
 python -m benchmarks.run --fast --only service --json BENCH_point.json
 python scripts/append_bench_point.py BENCH_point.json BENCH_service.json
 rm -f BENCH_point.json

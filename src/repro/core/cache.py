@@ -1,91 +1,133 @@
 """BlockCache — the paper's "SSD table cache", host-memory edition.
 
-Caches (a) decoded row-group columns ("pre-loaded" configuration) and
-(b) whole pre-filtered scan results keyed by plan signature ("pre-filtered"
-configuration), with LRU eviction under a byte budget.  On a real
-deployment the same interface fronts host NVMe; here entries are jax
-arrays in host/device memory (one CPU device — identical address space).
+Since the unified tiered block store (repro.datapath.blockstore) this is
+a thin compatibility facade: every entry — encoded pages, decoded
+row-group columns, whole pre-filtered ScanResults — lives in ONE
+BlockStore with a single byte ledger and cost-aware eviction (victim =
+lowest estimated re-creation seconds per byte, LRU tie-break), instead
+of the old flat LRU dict.  The engine's key tuples carry the tier tag:
 
-Metadata and orchestration (which row groups are cached vs must be fetched
-and decoded) is exactly the open challenge the paper flags for the SSD
-cache; `plan_fetch()` returns the cached/missing split the engine uses to
-route work.
+    ("page", path, rg, column)          -> encoded tier
+    ("rg",   path, rg, column, backend) -> decoded tier
+    ("scan", path, signature, ...)      -> prefiltered tier
+
+Metadata and orchestration (which row groups are cached vs must be
+fetched and decoded) is exactly the open challenge the paper flags for
+the SSD cache; `plan_fetch()` returns the cached/missing split the
+engine and the adaptive policy use to route work, now tier-scoped.
+
+The import of the store is lazy: core must stay importable before
+repro.datapath finishes initializing (datapath.service imports this
+module back).
 """
 
 from __future__ import annotations
 
-import collections
-import dataclasses
 from typing import Any, Dict, Hashable, List, Optional, Tuple
+
+_TIER_BY_TAG = {"scan": "prefiltered", "page": "encoded"}
 
 
 def _nbytes(obj) -> int:
-    if hasattr(obj, "nbytes"):
-        return int(obj.nbytes)
-    if isinstance(obj, dict):
-        return sum(_nbytes(v) for v in obj.values())
-    if isinstance(obj, (list, tuple)):
-        return sum(_nbytes(v) for v in obj)
-    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
-        # e.g. a whole prefiltered ScanResult: bill its column arrays + mask,
-        # otherwise the LRU budget never sees them and the cache grows unbounded
-        return sum(_nbytes(getattr(obj, f.name)) for f in dataclasses.fields(obj))
-    return 64
+    """Kept for compatibility; the store owns the billing rules."""
+    from repro.datapath.blockstore import _nbytes as impl
+
+    return impl(obj)
 
 
 class BlockCache:
-    def __init__(self, capacity_bytes: int = 2 << 30):
-        self.capacity = capacity_bytes
-        self._store: "collections.OrderedDict[Hashable, Any]" = collections.OrderedDict()
-        self._bytes: Dict[Hashable, int] = {}
-        self.used = 0
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+    def __init__(self, capacity_bytes: int = 2 << 30, store=None):
+        if store is None:
+            from repro.datapath.blockstore import BlockStore
 
+            store = BlockStore(capacity_bytes=capacity_bytes)
+        self.store = store
+
+    @staticmethod
+    def _tier(key: Hashable) -> str:
+        tag = key[0] if isinstance(key, tuple) and key else None
+        return _TIER_BY_TAG.get(tag, "decoded")
+
+    # -- legacy scalar surface (tests and callers read these) --------------
+    @property
+    def capacity(self) -> int:
+        return self.store.capacity
+
+    @property
+    def used(self) -> int:
+        return self.store.used
+
+    def _total(self, field: str) -> int:
+        return sum(getattr(s, field) for s in self.store._tier_stats.values())
+
+    @property
+    def hits(self) -> int:
+        return self._total("hits")
+
+    @property
+    def misses(self) -> int:
+        return self._total("misses")
+
+    @property
+    def evictions(self) -> int:
+        return self._total("evictions")
+
+    # -- ops ---------------------------------------------------------------
     def __contains__(self, key: Hashable) -> bool:
         """Presence check without touching LRU order or hit/miss counters."""
-        return key in self._store
+        return key in self.store
 
     def get(self, key: Hashable):
-        if key in self._store:
-            self._store.move_to_end(key)
-            self.hits += 1
-            return self._store[key]
-        self.misses += 1
-        return None
+        return self.store.get(key, tier=self._tier(key))
 
-    def put(self, key: Hashable, value: Any):
-        nb = _nbytes(value)
-        if nb > self.capacity:
-            return  # never cache something bigger than the device
-        if key in self._store:
-            self.used -= self._bytes[key]
-        self._store[key] = value
-        self._store.move_to_end(key)
-        self._bytes[key] = nb
-        self.used += nb
-        while self.used > self.capacity and self._store:
-            k, _ = self._store.popitem(last=False)
-            self.used -= self._bytes.pop(k)
-            self.evictions += 1
+    def put(
+        self,
+        key: Hashable,
+        value: Any,
+        tier: Optional[str] = None,
+        encoding: Optional[str] = None,
+        decode_work: Optional[Dict[str, int]] = None,
+    ) -> bool:
+        """Persist one entry (never window-pinned, never ephemeral — the
+        cache path is the promotion path).  `encoding` prices a decoded
+        column's re-decode; `decode_work` prices a prefiltered result by
+        the ground-truth work that produced it."""
+        return self.store.put(
+            key, value, tier=tier or self._tier(key),
+            encoding=encoding, decode_work=decode_work,
+        )
 
-    def plan_fetch(self, keys: List[Hashable]) -> Tuple[List[Hashable], List[Hashable]]:
-        """Split keys into (cached, missing) without touching LRU order."""
-        cached = [k for k in keys if k in self._store]
-        missing = [k for k in keys if k not in self._store]
-        return cached, missing
+    def promote(self, key: Hashable, value: Any,
+                encoding: Optional[str] = None) -> bool:
+        """Persist a pool-served decode.  A no-op when the entry is already
+        cache-owned (non-ephemeral) in this store — the common case for a
+        store-backed pool, where every hit would otherwise re-run the put
+        machinery just to clear an already-clear flag.  `encoding` keeps
+        the promoted entry's honest eviction price; when absent, a price
+        already recorded on the entry wins over the PLAIN fallback."""
+        e = self.store.peek(key)
+        if e is not None and not e.ephemeral:
+            return True
+        return self.put(key, value, tier="decoded",
+                        encoding=encoding or (e.encoding if e is not None else None))
+
+    def plan_fetch(
+        self, keys: List[Hashable], tier: Optional[str] = None
+    ) -> Tuple[List[Hashable], List[Hashable]]:
+        """Split keys into (cached, missing) without touching LRU order;
+        `tier` scopes residency to one tier of the store."""
+        return self.store.plan_fetch(keys, tier=tier)
 
     def clear(self):
-        self._store.clear()
-        self._bytes.clear()
-        self.used = 0
+        self.store.clear()
 
     def stats(self) -> dict:
+        st = self.store.stats()
         return {
-            "entries": len(self._store),
-            "bytes": self.used,
+            "entries": sum(t["entries"] for t in st["tiers"].values()),
+            "bytes": st["used"],
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "tiers": st["tiers"],
         }

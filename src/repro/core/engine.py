@@ -10,12 +10,15 @@ Pipeline per scan (DESIGN.md §2):
          │                    │
          │              optional stream compaction (survivors packed)
          ▼                    ▼
-    BlockCache  ◄──── pre-filtered columns + mask + count ──► consumer
+    BlockStore  ◄──── pre-filtered columns + mask + count ──► consumer
+    (tiered: encoded pages / decoded columns / prefiltered results)
 
 Offload configurations reproduce the paper's Figure 1:
   'raw'         — decode + filter on every scan (query on Parquet)
-  'preloaded'   — decoded row groups served from the BlockCache
-  'prefiltered' — whole filtered scans served from the BlockCache
+  'preloaded'   — decoded row groups served from the store's decoded
+                  tier (encoded pages cached too, so even an evicted
+                  decode skips the storage->NIC re-fetch)
+  'prefiltered' — whole filtered scans served from the prefiltered tier
 
 Backends: 'ref' (pure jnp — also the multi-pod dry-run path), 'pallas'
 (Pallas kernels; interpret off-TPU), 'host' (numpy on the host CPU — the
@@ -78,6 +81,8 @@ class ScanStats:
     decode_work: Dict[str, int] = dataclasses.field(default_factory=dict)
     pool_hits: int = 0  # (rg, column) decodes served by a shared decode pool
     pool_hit_bytes: int = 0
+    page_hits: int = 0  # encoded pages served by the store's encoded tier
+    page_hit_bytes: int = 0  # encoded bytes that skipped the storage->NIC hop
     rows_total: int = 0
     rows_out: int = 0
     fused: bool = False
@@ -150,8 +155,24 @@ class DatapathEngine:
         return jnp.asarray(out)
 
     def rg_cache_key(self, reader, rg: int, name: str):
-        """BlockCache / decode-pool key for one decoded row-group column."""
+        """Decoded-tier / decode-pool key for one decoded row-group column."""
         return ("rg", reader.path, rg, name, self.backend)
+
+    def page_cache_key(self, reader, rg: int, name: str):
+        """Encoded-tier key for one column's raw encoded page.  No backend
+        component: encoded bytes are backend-independent."""
+        return ("page", reader.path, rg, name)
+
+    @staticmethod
+    def _pool_put(pool, key, arr, encoding: Optional[str] = None) -> None:
+        """Insert into a shared decode pool.  Store-backed views take the
+        source encoding so the window pin is priced honestly; a plain dict
+        (legacy callers) just stores the array."""
+        put = getattr(pool, "put", None)
+        if put is not None:
+            put(key, arr, encoding=encoding)
+        else:
+            pool[key] = arr
 
     def _decode_column(
         self,
@@ -169,8 +190,14 @@ class DatapathEngine:
         if pool is not None:
             hit = pool.get(key)
             if hit is not None:
-                if offload in ("preloaded", "prefiltered") and key not in self.cache:
-                    self.cache.put(key, hit)  # pool hits must still persist
+                if offload in ("preloaded", "prefiltered"):
+                    # pool hits must still persist: promote the (possibly
+                    # ephemeral window-pinned) entry to a cache-owned one,
+                    # carrying the pool's recorded encoding so the promoted
+                    # decode keeps its honest eviction price
+                    enc_of = getattr(pool, "encoding_of", None)
+                    self.cache.promote(key, hit,
+                                       encoding=enc_of(key) if enc_of else None)
                 if stats is not None:
                     stats.decoded_bytes += int(hit.nbytes)
                     stats.pool_hits += 1
@@ -180,15 +207,16 @@ class DatapathEngine:
             hit = self.cache.get(key)
             if hit is not None:
                 if pool is not None:
-                    pool[key] = hit
+                    self._pool_put(pool, key, hit)
                 if stats is not None:
                     stats.decoded_bytes += int(hit.nbytes)
                 return hit, True
         arr = self._decode_host(col, L) if self.backend == "host" else self._decode_device(col, L)
+        enc_name = col.encoding.value if col is not None else None
         if offload in ("preloaded", "prefiltered"):
-            self.cache.put(key, arr)
+            self.cache.put(key, arr, encoding=enc_name)
         if pool is not None:
-            pool[key] = arr
+            self._pool_put(pool, key, arr, encoding=enc_name)
         if stats is not None:
             stats.decoded_bytes += int(arr.nbytes)
             stats.decoded_bytes_fresh += int(arr.nbytes)
@@ -431,8 +459,31 @@ class DatapathEngine:
             mask = mask & (jnp.arange(L) < n)
             return cols, mask
 
-        enc = reader.read_encoded(rg, need)
-        stats.encoded_bytes += sum(c.encoded_bytes() for c in enc.values())
+        # Encoded-page tier: under preloaded/prefiltered the store keeps raw
+        # encoded pages too, so a repeat scan whose decoded columns were
+        # evicted (or never fit) at least skips the storage->NIC re-fetch.
+        # Page hits contribute no `encoded_bytes` — nothing crossed the hop —
+        # which is also what keeps them out of netsim's fetch simulation.
+        enc: Dict[str, EncodedColumn] = {}
+        missing = list(need)
+        if mode in ("preloaded", "prefiltered"):
+            missing = []
+            for name in need:
+                page = self.cache.get(self.page_cache_key(reader, rg, name))
+                if page is None:
+                    missing.append(name)
+                else:
+                    enc[name] = page
+                    stats.page_hits += 1
+                    stats.page_hit_bytes += page.encoded_bytes()
+        if missing:
+            fetched = reader.read_encoded(rg, missing)
+            stats.encoded_bytes += sum(c.encoded_bytes() for c in fetched.values())
+            enc.update(fetched)
+            if mode in ("preloaded", "prefiltered"):
+                for name, col in fetched.items():
+                    self.cache.put(self.page_cache_key(reader, rg, name), col,
+                                   tier="encoded")
 
         fuse = None
         if self.backend in ("ref", "pallas", "auto"):
@@ -644,7 +695,11 @@ class ResumableScan:
         result = ScanResult(out_cols, mask, count, self.stats)
         self.stats.rows_out = int(count)
         if self.offload == "prefiltered":
+            # decode_work prices the entry's eviction rank by the ground-
+            # truth work that produced it (re-creating the result costs at
+            # least that much again)
             self.engine.cache.put(
-                self.engine.plan_cache_key(self.reader, self.plan, self.blooms), result
+                self.engine.plan_cache_key(self.reader, self.plan, self.blooms),
+                result, tier="prefiltered", decode_work=dict(self.stats.decode_work),
             )
         self.result = result

@@ -1,26 +1,42 @@
 """datapath — the SmartNIC as a shared, scheduled, multi-tenant service.
 
 service.py    DatapathService: bounded queue, admission control, quotas,
-              per-tenant WFQ virtual time + actual-cost reconciliation
+              per-tenant WFQ virtual time + actual-cost reconciliation,
+              auto-tuned coalescing hold window
+blockstore.py unified tiered BlockStore (encoded pages / decoded columns
+              / prefiltered results): one byte ledger, cost-aware
+              eviction priced by the cost model, window-scoped decode
+              pins that survive hold_ticks
 scheduler.py  fair-share batch formation (wfq/fifo, row-group preemption,
-              cross-tick coalescing holds) + shared-scan DecodePool
+              cross-tick coalescing holds) + shared decode windows
 costmodel.py  calibrated per-encoding decode rates (GB/s table with a
               nominal fallback), decode-seconds estimates from footer
-              metadata — the WFQ virtual-time currency
+              metadata — the WFQ virtual-time currency AND the store's
+              eviction pricing
 netsim.py     storage->NIC bandwidth/latency model, prefetch overlap
-              (decode priced by the same calibrated table)
-policy.py     adaptive raw/preloaded/prefiltered choice per request,
-              hold-window footprint compatibility
+              (decode priced by the same calibrated table; store hits
+              never enter the simulated fetch)
+policy.py     adaptive raw/preloaded/prefiltered choice per request
+              (residency read per tier from the store), hold-window
+              footprint compatibility
 telemetry.py  queue depth, decoded-bytes-saved, per-tenant p50/p99,
-              fair-share metrics (Jain index, held-request latency),
-              estimated-vs-actual decode-cost ledger
+              fair-share metrics (Jain index, held-request latency,
+              window-retained bytes), estimated-vs-actual decode-cost
+              ledger, per-tier store ledger
 
-See DESIGN.md §8–§9.  The synchronous per-caller path (core/engine.py)
-remains the substrate; the service schedules it — at row-group
-granularity, so no scan occupies the device longer than one preemption
-quantum.
+See DESIGN.md §8–§9 and §11.  The synchronous per-caller path
+(core/engine.py) remains the substrate; the service schedules it — at
+row-group granularity, so no scan occupies the device longer than one
+preemption quantum.
 """
 
+from repro.datapath.blockstore import (  # noqa: F401
+    TIERS,
+    BlockEntry,
+    BlockStore,
+    DecodePool,
+    StoreView,
+)
 from repro.datapath.costmodel import (  # noqa: F401
     NOMINAL_RATES_GBPS,
     CostModel,
@@ -33,7 +49,7 @@ from repro.datapath.policy import (  # noqa: F401
     StaticPolicy,
     coalesce_compatible,
 )
-from repro.datapath.scheduler import DecodePool, form_batch, run_tick  # noqa: F401
+from repro.datapath.scheduler import form_batch, run_tick  # noqa: F401
 from repro.datapath.service import (  # noqa: F401
     DatapathService,
     QueueFull,

@@ -1,0 +1,466 @@
+"""Unified tiered block store — ONE cost-aware cache hierarchy.
+
+The paper's "pre-loaded" and "pre-filtered" configurations both hinge on
+a cache whose metadata and orchestration it flags as an open challenge.
+The repro used to answer it three disjoint ways: the LRU BlockCache
+(which also held whole prefiltered ScanResults under the same budget),
+the tick-scoped DecodePool that died at tick end, and the policy's
+plan_fetch probing.  This module is the single accounted subsystem that
+replaces all three:
+
+  tiers      'encoded'      raw encoded pages (skip the storage->NIC
+                            re-fetch; priced by the link model)
+             'decoded'      decoded row-group columns (skip the decode;
+                            priced by the per-encoding decode rate)
+             'prefiltered'  whole filtered ScanResults (skip the scan;
+                            priced by the ground-truth decode work that
+                            produced them)
+  ledger     one byte budget across every tier — used == Σ billed bytes
+             of the kept entries, never above capacity (property-tested
+             in tests/test_blockstore.py).
+  eviction   cost-aware: the victim is the UNPINNED entry with the
+             lowest estimated re-creation seconds per byte (cheapest to
+             get back), LRU sequence as the tie-break.  Under pressure
+             the store automatically keeps whatever is most expensive
+             per byte to recreate — e.g. encoded pages outlive decoded
+             PLAIN columns, while DICT/DELTA decodes outlive pages.
+  windows    a StoreView pins decoded entries for a scheduling window
+             (the service's hold_ticks), so a late-arriving coalescing
+             partner reuses decodes instead of re-aligning ticks.
+             Pinned entries are never evicted before their window
+             expires; entries pinned by a raw scan are EPHEMERAL — they
+             drop at expiry unless a preloaded/prefiltered put promoted
+             them — so raw stays raw beyond the window.
+
+`DecodePool` survives as a thin compatibility wrapper: a never-expiring
+window over a private single-purpose store, with the exact budget
+semantics the old tick-scoped pool had (rejected puts leave the old
+entry and the ledger untouched).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, Hashable, List, Optional, Tuple
+
+from repro.datapath.costmodel import CostModel
+
+TIERS = ("encoded", "decoded", "prefiltered")
+
+# A window pin that never expires (standalone DecodePool compatibility).
+NEVER = 1 << 62
+
+
+def _nbytes(obj) -> int:
+    if hasattr(obj, "nbytes"):
+        return int(obj.nbytes)
+    if isinstance(obj, dict):
+        return sum(_nbytes(v) for v in obj.values())
+    if isinstance(obj, (list, tuple)):
+        return sum(_nbytes(v) for v in obj)
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        # e.g. a whole prefiltered ScanResult or an EncodedColumn: bill its
+        # arrays, otherwise the ledger never sees them and the store grows
+        # unbounded
+        return sum(_nbytes(getattr(obj, f.name)) for f in dataclasses.fields(obj))
+    return 64
+
+
+@dataclasses.dataclass
+class TierStats:
+    """Cumulative per-tier counters (live entries/bytes are computed by
+    BlockStore.stats() from the ledger, so they can never drift)."""
+
+    hits: int = 0
+    misses: int = 0
+    hit_bytes: int = 0
+    puts: int = 0
+    rejected_puts: int = 0
+    evictions: int = 0
+    expired: int = 0  # ephemeral window entries dropped at expiry
+    redecode_saved_s: float = 0.0  # estimated re-creation seconds hits avoided
+
+    def as_dict(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
+
+
+@dataclasses.dataclass
+class BlockEntry:
+    key: Hashable
+    value: Any
+    tier: str
+    nbytes: int
+    encoding: Optional[str]  # decoded tier: source encoding (pricing key)
+    redecode_s: float  # estimated seconds to re-create this entry
+    seq: int  # LRU clock (monotone; refreshed on touch)
+    pin_tick: int = -1  # tick of the most recent window pin
+    pin_expires: int = -1  # last tick (inclusive) the window pin covers
+    ephemeral: bool = False  # drop at pin expiry unless promoted
+    owner: Optional[str] = None  # tenant whose decode pinned it
+
+    def pinned(self, tick: int) -> bool:
+        return self.pin_expires >= tick
+
+    def rank(self) -> Tuple[float, int]:
+        """Eviction priority: cheapest re-creation seconds per byte first,
+        least recently used as the tie-break."""
+        return (self.redecode_s / max(self.nbytes, 1), self.seq)
+
+
+class BlockStore:
+    """Tiered block cache with a single byte ledger and cost-aware
+    eviction.  Keys live in one flat namespace (the engine's key tuples
+    already disambiguate: ("page", ...) / ("rg", ...) / ("scan", ...));
+    the tier is entry metadata driving pricing and the telemetry ledger,
+    not a lookup dimension."""
+
+    def __init__(self, capacity_bytes: int = 2 << 30,
+                 cost_model: Optional[CostModel] = None):
+        self.capacity = capacity_bytes
+        self.cost_model = cost_model or CostModel()
+        self.tick = 0
+        self.used = 0
+        self._entries: Dict[Hashable, BlockEntry] = {}
+        self._seq = itertools.count()
+        self._tier_stats: Dict[str, TierStats] = {t: TierStats() for t in TIERS}
+        # window-view hit accounting, kept separate from tier hits so the
+        # shim's .hits still means "cache lookups" (not pool coalescing)
+        self.window_hits = 0
+        self.window_hit_bytes = 0
+        self.window_saved_s = 0.0
+
+    # ------------------------------------------------------------------
+    # pricing
+    # ------------------------------------------------------------------
+    def _price(self, tier: str, nbytes: int, encoding: Optional[str],
+               decode_work: Optional[Dict[str, int]]) -> float:
+        """Estimated seconds to re-create an entry if evicted.
+
+        encoded      re-fetch over the storage->NIC link
+        decoded      re-decode at the encoding's calibrated rate
+        prefiltered  re-do the scan's ground-truth decode work
+        Decoded/prefiltered entries are floored at the PLAIN rate for
+        their own bytes: however the entry was produced, serving it again
+        at least re-materializes its output."""
+        cm = self.cost_model
+        if tier == "encoded":
+            return cm.link_model().fetch_seconds(nbytes)
+        floor = cm.decode_seconds(nbytes, "plain")
+        if decode_work:
+            return max(floor, sum(cm.decode_seconds(b, e)
+                                  for e, b in decode_work.items()))
+        return max(floor, cm.decode_seconds(nbytes, encoding or "plain"))
+
+    # ------------------------------------------------------------------
+    # core ops
+    # ------------------------------------------------------------------
+    def peek(self, key: Hashable) -> Optional[BlockEntry]:
+        """Entry lookup without touching LRU order or hit/miss counters."""
+        return self._entries.get(key)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def touch(self, entry: BlockEntry) -> None:
+        entry.seq = next(self._seq)
+
+    def get(self, key: Hashable, tier: Optional[str] = None):
+        """Counting lookup: a hit is recorded under the entry's tier (plus
+        the re-creation seconds it avoided); a miss under `tier` (the tier
+        the caller expected to find the key in, 'decoded' by default)."""
+        e = self._entries.get(key)
+        if e is None:
+            self._tier_stats[tier or "decoded"].misses += 1
+            return None
+        st = self._tier_stats[e.tier]
+        st.hits += 1
+        st.hit_bytes += e.nbytes
+        st.redecode_saved_s += e.redecode_s
+        self.touch(e)
+        return e.value
+
+    def put(
+        self,
+        key: Hashable,
+        value: Any,
+        tier: str = "decoded",
+        encoding: Optional[str] = None,
+        decode_work: Optional[Dict[str, int]] = None,
+        pin_until: Optional[int] = None,
+        ephemeral: bool = False,
+        owner: Optional[str] = None,
+    ) -> bool:
+        """Insert or refresh one entry; returns False when the entry could
+        not be kept (bigger than the store, or the shortfall is pinned).
+        Re-inserting an existing key bills only the size delta, and a
+        rejected resize leaves the old entry — the ledger never holds an
+        unbilled or over-budget byte."""
+        assert tier in TIERS, tier
+        nb = _nbytes(value)
+        st = self._tier_stats[tier]
+        old = self._entries.get(key)
+        need = nb - (old.nbytes if old is not None else 0)
+        if nb > self.capacity:
+            st.rejected_puts += 1
+            return False  # never cache something bigger than the device
+        if self.used + need > self.capacity:
+            self._evict(self.used + need - self.capacity, exclude=key)
+            if self.used + need > self.capacity:  # the rest is pinned
+                st.rejected_puts += 1
+                return False
+        seq = next(self._seq)
+        if old is not None:
+            self.used += need
+            old.value = value
+            old.nbytes = nb
+            old.tier = tier if not ephemeral else old.tier
+            old.encoding = encoding or old.encoding
+            old.redecode_s = self._price(old.tier, nb, old.encoding, decode_work)
+            old.seq = seq
+            # promotion clears the ephemeral flag; a window re-pin of a
+            # persistent entry never re-taints it
+            old.ephemeral = old.ephemeral and ephemeral
+            if pin_until is not None:
+                old.pin_tick = self.tick
+                old.pin_expires = max(old.pin_expires, pin_until)
+                old.owner = owner or old.owner
+            return True
+        entry = BlockEntry(
+            key=key, value=value, tier=tier, nbytes=nb, encoding=encoding,
+            redecode_s=self._price(tier, nb, encoding, decode_work), seq=seq,
+            ephemeral=ephemeral, owner=owner,
+        )
+        if pin_until is not None:
+            entry.pin_tick = self.tick
+            entry.pin_expires = pin_until
+        self._entries[key] = entry
+        self.used += nb
+        st.puts += 1
+        return True
+
+    def _evict(self, need_bytes: int, exclude: Optional[Hashable] = None) -> None:
+        """Free at least `need_bytes` by evicting unpinned entries in
+        cost-rank order (lowest re-creation seconds per byte first, LRU
+        tie-break).  Window-pinned blocks are never victims — and when the
+        evictable entries cannot cover the shortfall, NOTHING is evicted:
+        the caller's put will be refused anyway, and a doomed put must not
+        flush the unpinned working set on its way out."""
+        victims = sorted(
+            (e for e in self._entries.values()
+             if e.key != exclude and not e.pinned(self.tick)),
+            key=BlockEntry.rank,
+        )
+        if sum(e.nbytes for e in victims) < need_bytes:
+            return
+        for victim in victims:
+            if need_bytes <= 0:
+                return
+            del self._entries[victim.key]
+            self.used -= victim.nbytes
+            need_bytes -= victim.nbytes
+            self._tier_stats[victim.tier].evictions += 1
+
+    def advance_tick(self, tick: int) -> None:
+        """Move the window clock: pins whose window ended become evictable,
+        and ephemeral (raw-scan) entries among them are dropped outright —
+        raw mode leaves no persistent state beyond its hold window."""
+        self.tick = tick
+        for key in [k for k, e in self._entries.items()
+                    if e.ephemeral and e.pin_expires < tick]:
+            e = self._entries.pop(key)
+            self.used -= e.nbytes
+            self._tier_stats[e.tier].expired += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.used = 0
+
+    # ------------------------------------------------------------------
+    # metadata probes (non-mutating — admission control and the policy)
+    # ------------------------------------------------------------------
+    def plan_fetch(self, keys: List[Hashable],
+                   tier: Optional[str] = None) -> Tuple[List[Hashable], List[Hashable]]:
+        """Split keys into (resident, missing) without touching LRU order
+        or counters; `tier` restricts residency to one tier."""
+        def resident(k):
+            e = self._entries.get(k)
+            return e is not None and (tier is None or e.tier == tier)
+
+        cached = [k for k in keys if resident(k)]
+        missing = [k for k in keys if not resident(k)]
+        return cached, missing
+
+    def pinned(self, key: Hashable) -> bool:
+        """Is `key` a live window-pinned decoded block right now?"""
+        e = self._entries.get(key)
+        return e is not None and e.tier == "decoded" and e.pinned(self.tick)
+
+    def retention_charges(self) -> Dict[str, Tuple[int, float]]:
+        """Per-owner (pinned bytes, per-tick retention price) over window
+        pins held ACROSS a tick boundary.  Each entry's price amortizes
+        one full re-creation over its window, so holding a decode for its
+        whole hold window costs its owner exactly what re-decoding it
+        would have — window retention is paid for in the same WFQ
+        currency it saves."""
+        out: Dict[str, Tuple[int, float]] = {}
+        for e in self._entries.values():
+            if e.owner is None or not e.pinned(self.tick) or e.pin_tick >= self.tick:
+                continue
+            b, s = out.get(e.owner, (0, 0.0))
+            out[e.owner] = (b + e.nbytes,
+                            s + e.redecode_s / max(e.pin_expires - e.pin_tick, 1))
+        return out
+
+    # ------------------------------------------------------------------
+    # windows + reporting
+    # ------------------------------------------------------------------
+    def window(self, expires_tick: int, max_bytes: Optional[int] = None,
+               owner: Optional[str] = None) -> "StoreView":
+        return StoreView(self, expires_tick, max_bytes=max_bytes, owner=owner)
+
+    def stats(self) -> dict:
+        """Deterministic per-tier ledger (key-sorted, plain types) for
+        telemetry snapshots and the blockstore bench sub-report."""
+        live: Dict[str, Dict[str, int]] = {
+            t: {"entries": 0, "bytes": 0, "pinned_bytes": 0} for t in TIERS
+        }
+        for e in self._entries.values():
+            lv = live[e.tier]
+            lv["entries"] += 1
+            lv["bytes"] += e.nbytes
+            if e.pinned(self.tick):
+                lv["pinned_bytes"] += e.nbytes
+        tiers = {}
+        for t in TIERS:
+            d = self._tier_stats[t].as_dict()
+            d.update(live[t])
+            tiers[t] = dict(sorted(d.items()))
+        return {
+            "capacity": self.capacity,
+            "used": self.used,
+            "tick": self.tick,
+            "tiers": tiers,
+            "window_hits": self.window_hits,
+            "window_hit_bytes": self.window_hit_bytes,
+            "window_saved_s": self.window_saved_s,
+        }
+
+
+class StoreView:
+    """Window-scoped view into the store's decoded tier — the scheduler's
+    shared decode pool.  Entries it inserts are pinned (evictable only
+    after `expires_tick`) and ephemeral (dropped at expiry unless a
+    preloaded/prefiltered put promotes them); entries pinned by EARLIER
+    windows are visible too, which is exactly how a late-arriving
+    coalescing partner reuses retained decodes.
+
+    Budget semantics match the old tick-scoped DecodePool: `used_bytes`
+    is the summed nbytes of the entries this view pinned, a re-insert
+    bills only the size delta, and a rejected put (view budget or store
+    capacity) changes nothing."""
+
+    def __init__(self, store: BlockStore, expires_tick: int,
+                 max_bytes: Optional[int] = None, owner: Optional[str] = None):
+        self.store = store
+        self.expires_tick = expires_tick
+        self.max_bytes = max_bytes
+        self.owner = owner  # rebindable: run_tick sets it per request
+        self._mine: Dict[Hashable, int] = {}  # key -> billed nbytes
+        self.used_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.hit_bytes = 0
+        self.puts = 0
+        self.rejected_puts = 0
+        # cross-tick reuse: hits on entries pinned by an EARLIER tick
+        self.retained_hits = 0
+        self.retained_hit_bytes = 0
+        self.retained_saved_s = 0.0
+
+    # -- visibility --------------------------------------------------------
+    def _visible(self, key: Hashable) -> Optional[BlockEntry]:
+        e = self.store.peek(key)
+        if e is None or e.tier != "decoded" or not e.pinned(self.store.tick):
+            return None
+        return e
+
+    def __contains__(self, key: Hashable) -> bool:
+        return self._visible(key) is not None
+
+    def __len__(self) -> int:
+        return sum(1 for k in self.store._entries if self._visible(k) is not None)
+
+    def __iter__(self):
+        return (k for k in list(self.store._entries) if self._visible(k) is not None)
+
+    def values(self):
+        return [self.store._entries[k].value for k in self]
+
+    def __getitem__(self, key: Hashable):
+        e = self._visible(key)
+        if e is None:
+            raise KeyError(key)
+        return e.value
+
+    def encoding_of(self, key: Hashable) -> Optional[str]:
+        """Source encoding recorded for a visible entry — carried along
+        when the engine promotes a pool hit into another store, so the
+        promoted decode keeps its honest eviction price."""
+        e = self._visible(key)
+        return e.encoding if e is not None else None
+
+    # -- counting ops ------------------------------------------------------
+    def get(self, key: Hashable, default=None):
+        e = self._visible(key)
+        if e is None:
+            self.misses += 1
+            return default
+        self.hits += 1
+        self.hit_bytes += e.nbytes
+        self.store.window_hits += 1
+        self.store.window_hit_bytes += e.nbytes
+        self.store.window_saved_s += e.redecode_s
+        if -1 < e.pin_tick < self.store.tick:  # pinned by an earlier tick
+            self.retained_hits += 1
+            self.retained_hit_bytes += e.nbytes
+            self.retained_saved_s += e.redecode_s
+        self.store.touch(e)
+        return e.value
+
+    def put(self, key: Hashable, value, encoding: Optional[str] = None) -> bool:
+        nb = int(value.nbytes)
+        delta = nb - self._mine.get(key, 0)
+        if (self.max_bytes is not None and delta > 0
+                and self.used_bytes + delta > self.max_bytes):
+            self.rejected_puts += 1
+            return False
+        kept = self.store.put(
+            key, value, tier="decoded", encoding=encoding,
+            pin_until=self.expires_tick, ephemeral=True, owner=self.owner,
+        )
+        if not kept:
+            self.rejected_puts += 1
+            return False
+        if key not in self._mine:
+            self.puts += 1
+        self.used_bytes += delta
+        self._mine[key] = nb
+        return True
+
+    def __setitem__(self, key: Hashable, value) -> None:
+        self.put(key, value)
+
+
+class DecodePool(StoreView):
+    """Back-compat shim: the old tick-scoped shared decode pool, now a
+    never-expiring window over a private single-purpose BlockStore.  All
+    entries are pinned, so the store never evicts — an over-budget put is
+    refused with the old entry (and the ledger) untouched, exactly the
+    accounting the property suite in tests/test_decode_pool_props.py
+    pins down."""
+
+    def __init__(self, max_bytes: int = 1 << 30):
+        super().__init__(
+            BlockStore(capacity_bytes=max_bytes), NEVER, max_bytes=max_bytes
+        )

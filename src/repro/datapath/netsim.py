@@ -11,6 +11,13 @@ This is a simulated clock (no sleeping): the scheduler feeds it the real
 encoded/decoded byte counts per row group and records the modeled
 serial vs overlapped times in telemetry, which is what lets a CPU-only
 container still reproduce the paper's "fetch hides behind decode" claim.
+
+Block-store hits never enter the pipeline: a row group served from the
+unified store (decoded tier, window-pinned decodes, or encoded pages)
+pulls zero bytes over the storage->NIC hop, and the scheduler feeds this
+model only the row groups whose slice actually fetched — at row-group
+granularity, so one resident group in a multi-group slice is not billed
+for its neighbors' transfers.
 """
 
 from __future__ import annotations

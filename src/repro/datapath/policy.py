@@ -88,13 +88,18 @@ class AdaptiveOffloadPolicy:
     def _choose(self, engine, reader, plan, seen, blooms, row_groups, selectivity) -> str:
         # 1) whole-scan reuse: cached result, or a recurring signature worth
         #    caching (the key folds in bloom digests, so per-caller semijoin
-        #    state can never serve another caller's probe)
+        #    state can never serve another caller's probe).  Residency is
+        #    read straight from the store's prefiltered tier.
         scan_key = engine.plan_cache_key(reader, plan, blooms)
-        cached, _ = engine.cache.plan_fetch([scan_key])
+        cached, _ = engine.cache.plan_fetch([scan_key], tier="prefiltered")
         if cached or seen >= self.repeat_k:
             return "prefiltered"
 
-        # 2) row-group reuse: are this scan's decoded columns already resident?
+        # 2) row-group reuse: are this scan's decoded columns already
+        #    resident?  The probe reads the store's DECODED tier directly —
+        #    window-pinned decodes from a recent coalescing hold count as
+        #    resident (they are reusable right now), prefiltered results
+        #    and encoded pages do not.
         if row_groups is None:
             from repro.core.plan import bind_expr
 
@@ -105,7 +110,7 @@ class AdaptiveOffloadPolicy:
             for name in plan.all_columns()
         ]
         if rg_keys:
-            hit, _ = engine.cache.plan_fetch(rg_keys)
+            hit, _ = engine.cache.plan_fetch(rg_keys, tier="decoded")
             if len(hit) / len(rg_keys) >= self.cached_frac_threshold:
                 return "preloaded"
 

@@ -14,20 +14,27 @@ Two layers per tick (DESIGN.md §9):
               materialized (service._vreconcile), so a tenant whose scans
               under-estimate cannot buy extra share.
   run_tick    decides HOW it runs — requests grouped by table around a
-              budgeted DecodePool so each (path, row group, column,
-              backend) pair is decoded ONCE per tick and every coalesced
-              predicate is evaluated over the shared decoded columns.
+              window-scoped view into the unified BlockStore's decoded
+              tier (datapath/blockstore.py) so each (path, row group,
+              column, backend) pair is decoded ONCE per tick, every
+              coalesced predicate is evaluated over the shared decoded
+              columns, and the decodes stay pinned for `hold_ticks` more
+              ticks — a late-arriving partner reuses them instead of
+              re-aligning ticks.
 
 Cross-tick coalescing window: a fresh request with no compatible partner
 (policy.coalesce_compatible) in the queue may be held up to
 service.hold_ticks ticks; the moment a partner dispatches it is released
-into the SAME tick and shares that tick's DecodePool, and if no partner
-ever arrives it force-dispatches at its deadline — a held request is
-never late by more than hold_ticks.
+into the SAME tick and shares that tick's decode window, and if no
+partner ever arrives it force-dispatches at its deadline — a held
+request is never late by more than hold_ticks.  A request whose
+footprint is already window-pinned in the store is never held at all:
+the retained decodes ARE its partner, so it dispatches immediately.
 
-The storage->NIC fetch for each tick's row groups is fed through netsim's
-double-buffered PrefetchPipeline, recording how much of the fetch time
-hides behind on-device decode.
+The storage->NIC fetch for the row groups actually read this tick (store
+hits — decoded, window-pinned, or encoded-page — fetch nothing and skip
+the simulation) is fed through netsim's double-buffered PrefetchPipeline,
+recording how much of the fetch time hides behind on-device decode.
 """
 
 from __future__ import annotations
@@ -38,57 +45,16 @@ from repro.core.engine import ResumableScan
 from repro.datapath.policy import coalesce_compatible
 
 
-class DecodePool(dict):
-    """Tick-scoped shared decode pool with hit accounting and a byte budget.
-
-    The engine consults it before the BlockCache and before decoding
-    (engine._decode_column); `puts` therefore counts unique (row group,
-    column) decodes materialized this tick — the number a set of
-    perfectly-coalesced scans shares.  Once `max_bytes` of decoded output
-    is pinned, further inserts are refused (later scans simply decode for
-    themselves), so one oversized tick cannot bypass the BlockCache's
-    capacity accounting via the pool.
-
-    Accounting invariant (property-tested in tests/test_decode_pool_props.py):
-    `used_bytes` always equals the summed nbytes of the kept entries —
-    re-inserting an existing key bills only the size delta, and a
-    rejected put leaves `used_bytes` untouched.
-    """
-
-    def __init__(self, max_bytes: int = 1 << 30):
-        super().__init__()
-        self.max_bytes = max_bytes
-        self.used_bytes = 0
-        self.hits = 0
-        self.misses = 0
-        self.puts = 0
-        self.rejected_puts = 0
-        self.hit_bytes = 0
-
-    def get(self, key, default=None):
-        if key in self:
-            self.hits += 1
-            val = dict.__getitem__(self, key)
-            self.hit_bytes += int(val.nbytes)
-            return val
-        self.misses += 1
-        return default
-
-    def __setitem__(self, key, value):
-        nb = int(value.nbytes)
-        if key not in self:
-            if self.used_bytes + nb > self.max_bytes:
-                self.rejected_puts += 1
-                return
-            self.puts += 1
-            self.used_bytes += nb
-        else:
-            old = int(dict.__getitem__(self, key).nbytes)
-            if self.used_bytes - old + nb > self.max_bytes:
-                self.rejected_puts += 1
-                return
-            self.used_bytes += nb - old
-        dict.__setitem__(self, key, value)
+def _retained_resident(service, req) -> bool:
+    """Does the store hold a live window-pinned decode for any of `req`'s
+    (row group, column) blocks?  If so the hold window already paid off
+    for this footprint — dispatch now and reuse, don't re-align ticks."""
+    engine = service.engine
+    return any(
+        service.store.pinned(engine.rg_cache_key(req.reader, rg, name))
+        for rg in req.row_groups
+        for name in req.col_set
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +94,10 @@ def form_batch(service) -> List[Tuple[object, List[int]]]:
             or any(o is not req and coalesce_compatible(req, o) for o in active)
         ):
             eligible.append(req)
+        elif _retained_resident(service, req):
+            # the window already holds this footprint's decodes: reuse now
+            eligible.append(req)
+            tel.inc("retained_partner_dispatch")
         else:
             held.append(req)
 
@@ -156,7 +126,8 @@ def form_batch(service) -> List[Tuple[object, List[int]]]:
         cost_b = float(req.rg_bytes[req.cursor])
         req.cursor += 1
         units[req.req_id][1].append(rg)
-        req.charged_s += service._vcharge(req.tenant, cost_s, cost_b)
+        req.charged_s += service._vcharge(req.tenant, cost_s, cost_b,
+                                          table=req.reader.path)
         req.charged_raw_s += cost_s
         return cost_b
 
@@ -270,20 +241,27 @@ def form_batch(service) -> List[Tuple[object, List[int]]]:
 
 def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
     """Execute one tick's dispatch units: group by table, coalesce through
-    a shared DecodePool, advance each request's resumable scan, simulate
-    the storage->NIC fetch.  Completed results land on each ticket."""
+    a window-scoped view into the store's decoded tier, advance each
+    request's resumable scan, simulate the storage->NIC fetch.  Completed
+    results land on each ticket."""
     groups: Dict[str, List[Tuple[object, List[int]]]] = {}
     for req, rgs in batch:
         groups.setdefault(req.reader.path, []).append((req, rgs))
 
     tel = service.telemetry
     for _path, group in groups.items():
-        pool = DecodePool(max_bytes=service.pool_bytes)
+        # decodes pinned through this window survive `hold_ticks` more
+        # ticks, so a late-arriving compatible partner reuses them
+        pool = service.store.window(
+            expires_tick=service._tick + service.hold_ticks,
+            max_bytes=service.pool_bytes,
+        )
         if len(group) > 1:
             tel.inc("coalesced_groups")
             tel.inc("coalesced_requests", len(group))
         fetches: List[Tuple[object, List[int]]] = []
         for req, rgs in group:
+            pool.owner = req.tenant  # retained pins bill their decoder
             try:
                 if req.rs is None:  # first dispatch: pin the offload mode
                     mode = service.policy.choose(
@@ -300,11 +278,21 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
                 rs = req.rs
                 work0 = dict(rs.stats.decode_work)
                 if rs.result is None and rgs:
-                    enc0, dec0 = rs.stats.encoded_bytes, rs.stats.decoded_bytes
-                    rs.advance(rgs, pool=pool)
+                    dec0 = rs.stats.decoded_bytes
+                    # advance one row group at a time so the fetch
+                    # simulation sees exactly the groups that pulled
+                    # encoded bytes — store-resident groups (decoded,
+                    # window-pinned, or page-tier) fetch nothing and are
+                    # skipped at row-group granularity, not per slice
+                    fetched: List[int] = []
+                    for rg in rgs:
+                        enc0 = rs.stats.encoded_bytes
+                        rs.advance([rg], pool=pool)
+                        if rs.stats.encoded_bytes > enc0:
+                            fetched.append(rg)
                     tel.observe_tenant_bytes(req.tenant, rs.stats.decoded_bytes - dec0)
-                    if rs.stats.encoded_bytes > enc0:  # this slice fetched
-                        fetches.append((req, rgs))
+                    if fetched:
+                        fetches.append((req, fetched))
                 if rgs:
                     # retroactive honesty: the estimate was charged at
                     # dispatch; re-bill by the decode work the slice REALLY
@@ -331,6 +319,10 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
                 if res.stats.cache_hit:
                     tel.inc("prefiltered_hits")
         tel.inc("decoded_bytes_saved", pool.hit_bytes)
+        if pool.retained_hits:  # served from a PREVIOUS tick's window pins
+            tel.inc("retained_hits", pool.retained_hits)
+            tel.inc("retained_reuse_bytes", pool.retained_hit_bytes)
+            tel.inc("retained_redecode_saved_s", pool.retained_saved_s)
         if pool.rejected_puts:
             tel.inc("pool_rejected_puts", pool.rejected_puts)
 
@@ -355,7 +347,8 @@ def _reconcile_slice(service, req, work: Dict[str, int]) -> None:
         service.cost_model.decode_seconds(nbytes, encoding)
         for encoding, nbytes in work.items()
     )
-    service._vreconcile(req.tenant, charged_s, raw_s, actual_s)
+    service._vreconcile(req.tenant, charged_s, raw_s, actual_s,
+                        table=req.reader.path)
 
 
 def _simulate_fetch(service, fetches: List[Tuple[object, List[int]]]) -> None:

@@ -12,8 +12,11 @@ queries at once.  This module is that service layer:
             encoding-aware cost model, reconciled against actual decode
             cost at slice completion, row-group preemption points,
             cross-tick coalescing holds — scheduler.py) and runs it
-            around a shared DecodePool so each (row group, column) pair
-            is decoded once per tick
+            around a window-scoped view into the unified BlockStore's
+            decoded tier, so each (row group, column) pair is decoded
+            once per tick AND stays pinned for hold_ticks more ticks
+            (late partners reuse instead of re-decoding; retained bytes
+            bill the holder's virtual time)
   client()  an engine-compatible adapter (`.scan(reader, plan)`) so the
             whole query suite in core/queries.py runs through the
             service unchanged
@@ -26,20 +29,22 @@ this, including for scans sliced across ticks).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.cache import BlockCache
 from repro.core.engine import DatapathEngine, ScanResult
 from repro.core.plan import ScanPlan, bind_expr
 from repro.core.zonemap import prune_and_estimate
+from repro.datapath.blockstore import BlockStore
 from repro.datapath.costmodel import CostModel
 from repro.datapath.netsim import PrefetchPipeline
 from repro.datapath.policy import AdaptiveOffloadPolicy
 from repro.datapath.scheduler import form_batch, run_tick
-from repro.datapath.telemetry import Telemetry
+from repro.datapath.telemetry import Telemetry, quantile
 
 
 class QueueFull(RuntimeError):
@@ -129,14 +134,17 @@ class DatapathService:
         policy=None,
         pipeline: Optional[PrefetchPipeline] = None,
         telemetry: Optional[Telemetry] = None,
-        pool_bytes: int = 1 << 30,  # per-tick DecodePool budget
+        pool_bytes: int = 1 << 30,  # per-tick decode-window pin budget
         scheduler: str = "wfq",  # "wfq" | "fifo" (seed behavior, for A/B)
         tick_bytes: Optional[int] = None,  # per-tick decoded-byte budget
-        hold_ticks: int = 0,  # cross-tick coalescing window (0 = off)
+        # cross-tick coalescing window: 0 = off, N = hold up to N ticks,
+        # "auto" = tuned from observed footprint-recurrence gaps
+        hold_ticks: Union[int, str] = 0,
         cost_model: Optional[CostModel] = None,  # encoding-aware decode pricing
         reconcile: bool = True,  # re-bill vtime by actual decode cost
     ):
         assert scheduler in ("wfq", "fifo"), scheduler
+        assert hold_ticks == "auto" or int(hold_ticks) >= 0, hold_ticks
         self.engine = engine or DatapathEngine(backend="ref", cache=BlockCache())
         self.max_queue_depth = max_queue_depth
         self.batch_per_tick = batch_per_tick
@@ -152,21 +160,39 @@ class DatapathService:
         self.pool_bytes = pool_bytes
         self.scheduler = scheduler
         self.tick_bytes = tick_bytes
-        self.hold_ticks = hold_ticks
+        self.hold_auto = hold_ticks == "auto"
+        self.hold_ticks = 0 if self.hold_auto else int(hold_ticks)
         self.telemetry = telemetry or Telemetry()
+        # ONE tiered store backs the engine's cache, the scheduler's decode
+        # windows, and the policy's residency probes — a single byte ledger
+        # priced by the service's cost model (an engine with a bespoke
+        # cache still gets a private store for window coalescing)
+        self.store: BlockStore = (
+            getattr(self.engine.cache, "store", None) or BlockStore()
+        )
+        self.store.cost_model = self.cost_model
+        self.telemetry.store = self.store
         self.queue: List[ScanRequest] = []
         self._tenants: Dict[str, _TenantState] = {}
         self._vtime: Dict[str, float] = {}  # WFQ virtual time, decode-s/weight
-        # EWMA of actual/estimated decode cost per tenant, applied at charge
-        # time: a tenant whose scans systematically under-estimate is re-
-        # priced at dispatch (not only retroactively), closing the within-
-        # tick window where a stale estimate could still buy extra slots.
+        # EWMA of actual/estimated decode cost, applied at charge time: a
+        # tenant whose scans systematically under-estimate is re-priced at
+        # dispatch (not only retroactively), closing the within-tick window
+        # where a stale estimate could still buy extra slots.  The tenant-
+        # level scale is the fallback; per-(tenant, table) scales keep one
+        # lying table from re-pricing the same tenant's honest tables.
         self._est_scale: Dict[str, float] = {}
+        self._est_scale_table: Dict[Tuple[str, str], float] = {}
+        # footprint-recurrence log driving the "auto" hold window
+        self._footprints: collections.deque = collections.deque(maxlen=64)
+        self._recur_gaps: collections.deque = collections.deque(maxlen=32)
         self._ids = itertools.count()
         self._tick = 0
 
     EST_SCALE_ALPHA = 0.5  # EWMA weight of the newest slice's observed error
     EST_SCALE_CLAMP = 64.0  # bound on the adaptive dispatch-time scale
+    HOLD_AUTO_MAX = 4  # ceiling on the auto-tuned coalescing window
+    HOLD_AUTO_MIN_RECUR = 0.25  # recurrence rate below which holding is off
 
     # ------------------------------------------------------------------
     # admission
@@ -180,19 +206,31 @@ class DatapathService:
     def _weight(self, tenant: str) -> float:
         return max(self._quota(tenant).weight, 1e-9)
 
-    def _vcharge(self, tenant: str, seconds: float, nbytes: float) -> float:
+    def _scale_for(self, tenant: str, table: Optional[str] = None) -> float:
+        """Dispatch-time estimate-error scale: the (tenant, table) EWMA when
+        that table has reconciled slices, else the tenant-level blend — an
+        unseen table inherits the tenant's history rather than scale 1.0."""
+        if table is not None:
+            s = self._est_scale_table.get((tenant, table))
+            if s is not None:
+                return s
+        return self._est_scale.get(tenant, 1.0)
+
+    def _vcharge(self, tenant: str, seconds: float, nbytes: float,
+                 table: Optional[str] = None) -> float:
         """Advance `tenant`'s virtual time by a dispatched row group's
         estimated decode-SECONDS over its weight (the WFQ clock is device
         time, not nominal bytes — an RLE group is cheaper than PLAIN).
-        The estimate is re-priced by the tenant's observed estimate-error
-        scale before charging; returns the seconds actually charged."""
-        charged = seconds * self._est_scale.get(tenant, 1.0)
+        The estimate is re-priced by the observed estimate-error scale of
+        the (tenant, table) pair before charging; returns the seconds
+        actually charged."""
+        charged = seconds * self._scale_for(tenant, table)
         self._vtime[tenant] = self._vtime.get(tenant, 0.0) + charged / self._weight(tenant)
         self.telemetry.observe_sched(tenant, charged, nbytes)
         return charged
 
     def _vreconcile(self, tenant: str, charged_s: float, raw_s: float,
-                    actual_seconds: float) -> None:
+                    actual_seconds: float, table: Optional[str] = None) -> None:
         """Re-bill `tenant`'s virtual time by a completed slice's ACTUAL
         decode cost: `charged_s` was charged at dispatch, so apply only
         the difference (positive for under-estimates — a tenant whose
@@ -223,9 +261,15 @@ class DatapathService:
         if raw_s > 0.0 and actual_seconds > 0.0:
             target = min(max(actual_seconds / raw_s, 1.0 / self.EST_SCALE_CLAMP),
                          self.EST_SCALE_CLAMP)
-            prev = self._est_scale.get(tenant, 1.0)
             a = self.EST_SCALE_ALPHA
+            prev = self._est_scale.get(tenant, 1.0)
             self._est_scale[tenant] = (1.0 - a) * prev + a * target
+            if table is not None:
+                # the per-table scale trains on the same slices but never
+                # blends across tables: one lying table cannot re-price a
+                # tenant's honest tables (ROADMAP per-(tenant, table) item)
+                prev_t = self._est_scale_table.get((tenant, table), 1.0)
+                self._est_scale_table[(tenant, table)] = (1.0 - a) * prev_t + a * target
 
     def submit(self, tenant: str, reader, plan: ScanPlan, blooms: Optional[Dict] = None) -> Ticket:
         """Admit one scan request or raise (QueueFull / QuotaExceeded).
@@ -284,6 +328,9 @@ class DatapathService:
         rg_costs = self.cost_model.estimate_row_groups(
             self.engine, reader, plan, rgs, pred=pred
         )
+        if self.hold_auto and rgs:
+            self._observe_footprint(reader.path, frozenset(rgs),
+                                    frozenset(plan.all_columns()))
         self.queue.append(
             ScanRequest(ticket.req_id, tenant, reader, plan, blooms, ticket,
                         est_bytes=est_bytes, est_rows=est_rows,
@@ -297,6 +344,31 @@ class DatapathService:
         return ticket
 
     # ------------------------------------------------------------------
+    # auto-tuned coalescing window
+    # ------------------------------------------------------------------
+    def _observe_footprint(self, path: str, rg_set: frozenset,
+                           col_set: frozenset) -> None:
+        """Feed the hold-window auto-tuner one admitted footprint: the gap
+        (in ticks) to the most recent overlapping footprint is a recurrence
+        sample; no overlap is a one-off sample.  The window opens only when
+        partners actually recur (rate >= HOLD_AUTO_MIN_RECUR) and is sized
+        to cover the typical gap (p75, capped) — hold longer when a partner
+        is likely, not at all for one-off footprints."""
+        gap = None
+        for tk, p, rgs, cols in reversed(self._footprints):
+            if p == path and (rgs & rg_set) and (cols & col_set):
+                gap = self._tick - tk
+                break
+        self._recur_gaps.append(gap)
+        self._footprints.append((self._tick, path, rg_set, col_set))
+        gaps = [float(g) for g in self._recur_gaps if g is not None]
+        if gaps and len(gaps) / len(self._recur_gaps) >= self.HOLD_AUTO_MIN_RECUR:
+            self.hold_ticks = min(self.HOLD_AUTO_MAX, int(quantile(gaps, 0.75)))
+        else:
+            self.hold_ticks = 0
+        self.telemetry.counters["hold_ticks_auto"] = float(self.hold_ticks)
+
+    # ------------------------------------------------------------------
     # execution
     # ------------------------------------------------------------------
     def tick(self) -> int:
@@ -305,6 +377,17 @@ class DatapathService:
         completes the tick its last row group lands; a large scan may span
         many ticks (preemption points).  Returns requests completed."""
         self._tick += 1
+        # expire decode-window pins whose hold window ended (ephemeral raw
+        # decodes drop; promoted entries merely become evictable)
+        self.store.advance_tick(self._tick)
+        # retention isn't free: decoded bytes a tenant keeps window-pinned
+        # across a tick boundary bill its virtual time at a rate that sums
+        # to one re-decode over the full window (blockstore.retention_charges)
+        for tenant, (nbytes, charge_s) in sorted(self.store.retention_charges().items()):
+            self._vtime[tenant] = (
+                self._vtime.get(tenant, 0.0) + charge_s / self._weight(tenant)
+            )
+            self.telemetry.observe_retained(tenant, nbytes, charge_s)
         if self._tick % self.quota_window_ticks == 0:  # window boundary: refill
             for state in self._tenants.values():
                 state.reset()

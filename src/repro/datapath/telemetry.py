@@ -63,6 +63,13 @@ class Telemetry:
         self.tenant_sched_seconds: Dict[str, float] = collections.defaultdict(float)
         self.tenant_actual_seconds: Dict[str, float] = collections.defaultdict(float)
         self.tenant_recon_seconds: Dict[str, float] = collections.defaultdict(float)
+        # window-retention ledger: decoded byte-ticks a tenant kept pinned
+        # across tick boundaries, and the virtual-time it was billed for them
+        self.tenant_retained_bytes: Dict[str, float] = collections.defaultdict(float)
+        self.tenant_retained_seconds: Dict[str, float] = collections.defaultdict(float)
+        # the unified BlockStore, registered by the service so snapshots
+        # carry the per-tier hit/eviction/retained ledger
+        self.store = None
 
     # -- recording ---------------------------------------------------------
     def inc(self, name: str, value: float = 1.0) -> None:
@@ -105,6 +112,15 @@ class Telemetry:
         self.inc("recon_slices")
         self.inc("recon_abs_seconds", abs(correction_s))
 
+    def observe_retained(self, tenant: str, nbytes: float, charge_s: float) -> None:
+        """One tick's window-retention bill for `tenant`: the decoded bytes
+        it kept pinned across the tick boundary (a byte-tick of occupancy)
+        and the virtual-time charge the scheduler applied for them."""
+        self.tenant_retained_bytes[tenant] += nbytes
+        self.tenant_retained_seconds[tenant] += charge_s
+        self.inc("retained_byte_ticks", nbytes)
+        self.inc("retained_charge_seconds", charge_s)
+
     # -- reading -----------------------------------------------------------
     def tenant_latency(self, tenant: str) -> Dict[str, float]:
         xs = list(self._tenant_latency.get(tenant, ()))
@@ -124,6 +140,7 @@ class Telemetry:
             set(self.tenant_decoded_bytes)
             | set(self.tenant_sched_bytes)
             | set(self.tenant_sched_seconds)
+            | set(self.tenant_retained_bytes)
             | set(self._tenant_latency)
         )
 
@@ -145,7 +162,10 @@ class Telemetry:
         return out
 
     def fairness(self, weights: Optional[Dict[str, float]] = None) -> dict:
-        """Fair-share report: each tenant's share of decoded bytes, the
+        """Fair-share report: each tenant's share of the decode capacity it
+        OCCUPIED — decoded bytes plus window-retained byte-ticks (a byte
+        kept pinned across a tick denies the pool that byte exactly like a
+        byte decoded, so hoarding decodes is visible in the shares) — the
         Jain index over weight-normalized allocations (1.0 = perfectly
         weighted-fair), and what the coalescing hold window cost.  Shares
         cover every tenant known to the scheduler, so a starved tenant
@@ -153,11 +173,15 @@ class Telemetry:
         weights = weights or {}
         decoded = {t: self.tenant_decoded_bytes.get(t, 0.0)
                    for t in self.known_tenants()}
-        total = float(sum(decoded.values()))
-        shares = {t: (v / total if total > 0 else 0.0) for t, v in decoded.items()}
-        normalized = [v / max(weights.get(t, 1.0), 1e-9) for t, v in decoded.items()]
+        retained = {t: self.tenant_retained_bytes.get(t, 0.0)
+                    for t in self.known_tenants()}
+        usage = {t: decoded[t] + retained[t] for t in decoded}
+        total = float(sum(usage.values()))
+        shares = {t: (v / total if total > 0 else 0.0) for t, v in usage.items()}
+        normalized = [v / max(weights.get(t, 1.0), 1e-9) for t, v in usage.items()]
         return {
             "tenant_decoded_bytes": decoded,
+            "tenant_retained_bytes": dict(sorted(retained.items())),
             "tenant_sched_bytes": dict(sorted(self.tenant_sched_bytes.items())),
             "tenant_sched_seconds": dict(sorted(self.tenant_sched_seconds.items())),
             "tenant_share": shares,
@@ -170,7 +194,10 @@ class Telemetry:
 
     def snapshot(self) -> dict:
         """Deterministic summary: every dict is key-sorted and empty deques
-        collapse to fixed zeros, so benchmark JSON is stable run-to-run."""
+        collapse to fixed zeros, so benchmark JSON is stable run-to-run.
+        `store` is the unified block store's per-tier ledger (hits,
+        evictions, retained bytes, re-decode seconds saved) when a service
+        registered one, else a fixed empty dict."""
         depths = list(self.queue_depth)
         ticks = list(self._tick_seconds)
         return {
@@ -184,4 +211,5 @@ class Telemetry:
             },
             "fairness": self.fairness(),
             "cost": self.cost_report(),
+            "store": self.store.stats() if self.store is not None else {},
         }

@@ -1,0 +1,397 @@
+"""Unified tiered BlockStore: ledger/pinning/eviction invariants (unit +
+hypothesis property sweep), cost-ranked eviction, the encoded-page tier,
+cross-tick retained-decode reuse through the service (bit-identical to
+single-shot scans), window-retention WFQ charges, per-(tenant, table)
+estimate scales, and the auto-tuned hold window."""
+
+import numpy as np
+import pytest
+
+from repro.core import BlockCache, Cmp, DatapathEngine, ScanPlan, tpch
+from repro.datapath import BlockStore, CostModel, DatapathService, StaticPolicy
+from repro.lakeformat.reader import LakeReader
+
+RG_ROWS = 8192
+
+
+@pytest.fixture(scope="module")
+def tables(tmp_path_factory):
+    d = tmp_path_factory.mktemp("tpch_store")
+    return tpch.write_tables(str(d), sf=0.05, seed=0, sorted_data=True,
+                             row_group_size=RG_ROWS)
+
+
+@pytest.fixture(scope="module")
+def lineitem(tables):
+    return LakeReader(tables["lineitem"])
+
+
+@pytest.fixture(scope="module")
+def part(tables):
+    return LakeReader(tables["part"])
+
+
+def _service(**kw):
+    kw.setdefault("engine", DatapathEngine(backend="ref", cache=BlockCache(1 << 30)))
+    kw.setdefault("policy", StaticPolicy("raw"))
+    return DatapathService(**kw)
+
+
+def _assert_identical(got, want):
+    assert int(got.count) == int(want.count)
+    assert np.array_equal(np.asarray(got.mask), np.asarray(want.mask))
+    assert set(got.columns) == set(want.columns)
+    for name in want.columns:
+        assert np.array_equal(
+            np.asarray(got.columns[name]), np.asarray(want.columns[name])
+        ), name
+
+
+def _arr(nbytes: int) -> np.ndarray:
+    return np.zeros(nbytes, np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# ledger + eviction units
+# ---------------------------------------------------------------------------
+
+def test_ledger_tracks_entries_and_rejects_oversized():
+    st = BlockStore(capacity_bytes=1000)
+    assert st.put("a", _arr(400))
+    assert st.put("b", _arr(400))
+    assert st.used == 800
+    assert not st.put("huge", _arr(2000))  # bigger than the device
+    assert st.used == 800
+    assert st.put("a", _arr(100))  # resize bills only the delta
+    assert st.used == 500
+
+
+def test_eviction_prefers_cheapest_redecode_per_byte():
+    """Victim selection is cost-aware, not LRU: the PLAIN column (cheapest
+    re-decode seconds per byte) is evicted before DELTA/DICT even though it
+    is the most recently used entry."""
+    st = BlockStore(capacity_bytes=300)
+    assert st.put("delta", _arr(100), encoding="delta")
+    assert st.put("dict", _arr(100), encoding="dict")
+    assert st.put("plain", _arr(100), encoding="plain")
+    st.get("plain")  # freshen its LRU position
+    assert st.put("delta2", _arr(100), encoding="delta")
+    assert "plain" not in st and "delta" in st and "dict" in st
+    assert st.put("delta3", _arr(100), encoding="delta")
+    assert "dict" not in st  # next-cheapest ratio after plain
+    assert st.used <= 300
+
+
+def test_lru_breaks_ties_within_equal_cost():
+    st = BlockStore(capacity_bytes=300)
+    for k in ("a", "b", "c"):
+        assert st.put(k, _arr(100), encoding="plain")
+    st.get("a")  # a is now the most recent of three equal-cost entries
+    assert st.put("d", _arr(100), encoding="plain")
+    assert "b" not in st and "a" in st and "c" in st
+
+
+def test_window_pins_survive_pressure_and_expiry_drops_ephemeral():
+    st = BlockStore(capacity_bytes=300)
+    view = st.window(expires_tick=2, max_bytes=None, owner="t0")
+    view.put("p1", _arr(100), encoding="plain")
+    view.put("p2", _arr(100), encoding="plain")
+    assert st.put("cold", _arr(100), encoding="delta")
+    # pinned blocks are never victims: the shortfall is pinned, so the put
+    # is refused outright (the expensive DELTA entry is evictable but too
+    # small to make room alone)
+    assert not st.put("newcomer", _arr(250), encoding="delta")
+    assert "p1" in st and "p2" in st
+    assert st.used <= 300
+    # promotion (a cache-path put) clears the ephemeral flag
+    assert st.put("p2", st.peek("p2").value, tier="decoded", encoding="plain")
+    st.advance_tick(3)  # window over: raw decodes drop, promoted stays
+    assert "p1" not in st and "p2" in st
+    assert not st.pinned("p2")  # evictable again, but resident
+
+
+def test_refused_put_does_not_flush_the_unpinned_working_set():
+    """Regression: a put whose shortfall is pinned must be refused WITHOUT
+    evicting the unpinned entries first — a doomed insert used to destroy
+    the working set while caching nothing."""
+    st = BlockStore(capacity_bytes=300)
+    view = st.window(expires_tick=5)
+    view.put("pin1", _arr(100), encoding="plain")
+    view.put("pin2", _arr(100), encoding="plain")
+    assert st.put("dict", _arr(50), encoding="dict")
+    assert not st.put("big", _arr(120), encoding="plain")  # 70 short, pinned
+    assert "dict" in st  # the evictable entry survived the refusal
+    assert st.used == 250
+
+
+def test_promoted_pool_hit_keeps_its_encoding_price():
+    """Regression: promoting a pool hit into a separate cache store used to
+    drop the source encoding, re-pricing expensive decodes at the PLAIN
+    floor and inverting the eviction ranking."""
+    from repro.datapath import DecodePool
+
+    pool = DecodePool()
+    pool.put("k", _arr(100), encoding="delta")
+    cache = BlockCache(1 << 20)
+    hit = pool.get("k")
+    assert cache.promote("k", hit, encoding=pool.encoding_of("k"))
+    assert cache.store.peek("k").encoding == "delta"
+    assert cache.store.peek("k").redecode_s == pytest.approx(
+        CostModel().decode_seconds(100, "delta"))
+
+
+def test_tier_pricing_encoded_vs_prefiltered():
+    cm = CostModel()
+    st = BlockStore(capacity_bytes=1 << 20, cost_model=cm)
+    st.put("page", _arr(1000), tier="encoded")
+    assert st.peek("page").redecode_s == pytest.approx(
+        cm.link_model().fetch_seconds(1000))
+    work = {"delta": 4000, "rle": 2000}
+    st.put("scan", _arr(1000), tier="prefiltered", decode_work=work)
+    assert st.peek("scan").redecode_s == pytest.approx(
+        sum(cm.decode_seconds(b, e) for e, b in work.items()))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property sweep
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st_
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    OPS = st_.lists(
+        st_.tuples(
+            st_.integers(0, 7),  # key
+            st_.integers(0, 96),  # nbytes
+            st_.sampled_from(["plain", "bitpack", "dict", "delta", "rle"]),
+            st_.booleans(),  # window-pin this put?
+            st_.booleans(),  # advance the tick after this op?
+        ),
+        min_size=1, max_size=60,
+    )
+
+    @settings(deadline=None, max_examples=150)
+    @given(ops=OPS, capacity=st_.integers(1, 400), hold=st_.integers(0, 3))
+    def test_ledger_capacity_and_pin_invariants(ops, capacity, hold):
+        """After every operation: used == Σ nbytes of the kept entries,
+        used never exceeds capacity, and an accepted window pin is never
+        evicted before its window expires."""
+        store = BlockStore(capacity_bytes=capacity)
+        pins = {}  # key -> expiry tick of the latest accepted pin
+        for key, nb, enc, pin, bump in ops:
+            if pin:
+                view = store.window(expires_tick=store.tick + hold)
+                kept = view.put(key, _arr(nb), encoding=enc)
+            else:
+                kept = store.put(key, _arr(nb), encoding=enc)
+            if kept and pin:
+                pins[key] = max(pins.get(key, -1), store.tick + hold)
+            assert store.used == sum(e.nbytes for e in store._entries.values())
+            assert store.used <= capacity
+            for k, exp in pins.items():
+                if exp >= store.tick:
+                    assert k in store, (k, exp, store.tick)
+            if bump:
+                store.advance_tick(store.tick + 1)
+                assert store.used == sum(e.nbytes for e in store._entries.values())
+
+    @settings(deadline=None, max_examples=100)
+    @given(
+        entries=st_.lists(
+            st_.tuples(st_.integers(1, 64),
+                       st_.sampled_from(["plain", "bitpack", "dict", "delta", "rle"])),
+            min_size=2, max_size=10,
+        ),
+        overflow=st_.integers(1, 128),
+    )
+    def test_eviction_follows_cost_ranking(entries, overflow):
+        """Force an eviction wave and check the evicted set is exactly the
+        cheapest-ranked prefix (re-decode seconds per byte, LRU tie-break)
+        of the resident entries."""
+        capacity = sum(nb for nb, _ in entries)
+        store = BlockStore(capacity_bytes=capacity)
+        for i, (nb, enc) in enumerate(entries):
+            assert store.put(i, _arr(nb), encoding=enc)
+        ranked = sorted(store._entries.values(), key=lambda e: e.rank())
+        trigger = min(overflow, capacity)
+        expected_evicted, freed = [], 0
+        for e in ranked:
+            if store.used + trigger - freed <= capacity:
+                break
+            expected_evicted.append(e.key)
+            freed += e.nbytes
+        assert store.put("trigger", _arr(trigger), encoding="plain")
+        for key in expected_evicted:
+            assert key not in store
+        for i in range(len(entries)):
+            if i not in expected_evicted:
+                assert i in store
+        assert store.used <= capacity
+
+
+# ---------------------------------------------------------------------------
+# encoded-page tier (engine level)
+# ---------------------------------------------------------------------------
+
+def test_page_tier_skips_refetch_when_decoded_tier_evicts(lineitem):
+    """Under capacity pressure the cost ranking keeps encoded pages (link
+    latency makes them expensive per byte to re-fetch) while PLAIN decoded
+    columns churn — so a repeat scan re-decodes but never re-fetches."""
+    plan = ScanPlan("lineitem", ["l_extendedprice"])
+    enc_total = sum(
+        lineitem.row_group_meta(rg)["columns"]["l_extendedprice"]["encoded_bytes"]
+        for rg in range(lineitem.n_row_groups)
+    )
+    cap = enc_total + int(1.5 * RG_ROWS * 4)  # all pages + ~1.5 decoded groups
+    eng = DatapathEngine(backend="ref", cache=BlockCache(cap))
+    r1 = eng.scan(lineitem, plan, offload="preloaded")
+    assert r1.stats.encoded_bytes > 0
+    r2 = eng.scan(lineitem, plan, offload="preloaded")
+    assert r2.stats.encoded_bytes == 0  # every page served from the store
+    assert r2.stats.page_hits > 0
+    assert r2.stats.decoded_bytes_fresh > 0  # decoded tier really churned
+    assert eng.cache.stats()["tiers"]["decoded"]["evictions"] > 0
+    _assert_identical(r2, DatapathEngine(backend="ref").scan(lineitem, plan))
+    assert eng.cache.used <= cap
+
+
+# ---------------------------------------------------------------------------
+# cross-tick retained reuse through the service (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+PLAN_EARLY = ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+                      Cmp("l_shipdate", "between", (300, 700)))
+PLAN_LATE = ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+                     Cmp("l_shipdate", "between", (350, 750)))
+
+
+def _late_partner(hold_ticks, lineitem):
+    """Drive the acceptance scenario: a scan dispatches (alone, at its hold
+    deadline), THEN a compatible partner arrives within the hold window."""
+    svc = _service(hold_ticks=hold_ticks)
+    early = svc.submit("early", lineitem, PLAN_EARLY)
+    while early.status == "queued":
+        svc.tick()
+    late = svc.submit("late", lineitem, PLAN_LATE)
+    svc.drain()
+    return svc, early, late
+
+
+def test_late_partner_reuses_retained_decodes_bit_identical(lineitem):
+    svc, early, late = _late_partner(2, lineitem)
+    c = svc.telemetry.counters
+    # the partner was dispatched against the retained window, not re-held
+    assert c.get("retained_partner_dispatch", 0) >= 1
+    assert late.done_tick - late.submitted_tick == 1
+    # overlapping row groups came from the retained decoded tier: re-decode
+    # seconds were actually saved vs the old tick-scoped pool
+    assert c.get("retained_hits", 0) > 0
+    assert c.get("retained_reuse_bytes", 0) > 0
+    assert c.get("retained_redecode_saved_s", 0.0) > 0.0
+    assert late.result.stats.pool_hits > 0
+    # ...and the results are bit-identical to single-shot engine scans
+    _assert_identical(early.result,
+                      DatapathEngine(backend="ref").scan(lineitem, PLAN_EARLY))
+    _assert_identical(late.result,
+                      DatapathEngine(backend="ref").scan(lineitem, PLAN_LATE))
+
+
+def test_tick_scoped_control_has_no_retained_reuse(lineitem):
+    svc, _, late = _late_partner(0, lineitem)
+    c = svc.telemetry.counters
+    assert c.get("retained_hits", 0) == 0
+    assert c.get("retained_reuse_bytes", 0) == 0
+    assert late.result.stats.pool_hits == 0
+    _assert_identical(late.result,
+                      DatapathEngine(backend="ref").scan(lineitem, PLAN_LATE))
+
+
+def test_raw_window_pins_leave_no_persistent_state(lineitem):
+    """Raw stays raw beyond the window: once the retained pins expire, the
+    ephemeral decodes drop from the store entirely."""
+    svc, _, _ = _late_partner(2, lineitem)
+    for _ in range(4):  # idle ticks past every window
+        svc.tick()
+    st = svc.store.stats()
+    assert st["tiers"]["decoded"]["entries"] == 0
+    assert st["tiers"]["decoded"]["expired"] > 0
+    assert svc.store.used == st["tiers"]["encoded"]["bytes"] + \
+        st["tiers"]["prefiltered"]["bytes"]
+
+
+def test_retained_bytes_are_charged_into_wfq(lineitem):
+    """Hoarding decodes is not free: window-retained bytes bill the owning
+    tenant's virtual time and show up in the fairness ledger."""
+    svc, early, _ = _late_partner(2, lineitem)
+    c = svc.telemetry.counters
+    assert c.get("retained_byte_ticks", 0) > 0
+    assert c.get("retained_charge_seconds", 0.0) > 0.0
+    fair = svc.telemetry.fairness()
+    assert fair["tenant_retained_bytes"]["early"] > 0
+    assert svc._vtime.get("early", 0.0) > 0.0
+
+
+def test_store_ledger_in_snapshot_is_deterministic(lineitem):
+    svc, _, _ = _late_partner(2, lineitem)
+    import json
+
+    snap = svc.telemetry.snapshot()
+    assert set(snap["store"]["tiers"]) == {"encoded", "decoded", "prefiltered"}
+    json.dumps(snap)  # plain, serializable types throughout
+
+
+# ---------------------------------------------------------------------------
+# per-(tenant, table) estimate scales
+# ---------------------------------------------------------------------------
+
+def test_per_table_scale_isolates_a_lying_table(lineitem, part):
+    """A tenant under-estimating ONE table's costs 4x is re-priced on that
+    table only; its honest table keeps (and unseen tables inherit) sane
+    pricing instead of one blended scale."""
+    svc = _service()
+    svc.submit("t", lineitem, ScanPlan("lineitem", ["l_extendedprice"]))
+    req = next(q for q in svc.queue if q.reader is lineitem)
+    req.rg_costs = tuple(c / 4 for c in req.rg_costs)  # the lie
+    svc.submit("t", part, ScanPlan("part", ["p_size"]))
+    svc.drain()
+    lying = svc._est_scale_table[("t", lineitem.path)]
+    honest = svc._est_scale_table[("t", part.path)]
+    assert lying > 1.5
+    assert honest == pytest.approx(1.0)
+    # dispatch-time pricing: the honest table uses its own scale, the
+    # unseen table falls back to the tenant-level blend
+    assert svc._scale_for("t", part.path) == pytest.approx(1.0)
+    assert svc._scale_for("t", "never_seen") == svc._est_scale["t"]
+    assert svc._est_scale["t"] > 1.0  # the blend still remembers the lie
+
+
+# ---------------------------------------------------------------------------
+# auto-tuned hold window
+# ---------------------------------------------------------------------------
+
+def test_auto_hold_opens_for_recurring_footprints(lineitem):
+    svc = _service(hold_ticks="auto")
+    assert svc.hold_ticks == 0
+    for i in range(5):  # same footprint recurring a tick or two apart
+        svc.submit(f"t{i}", lineitem, PLAN_EARLY)
+        svc.drain()
+    assert svc.hold_ticks >= 1
+    assert svc.hold_ticks <= svc.HOLD_AUTO_MAX
+    assert svc.telemetry.counters["hold_ticks_auto"] == float(svc.hold_ticks)
+
+
+def test_auto_hold_stays_closed_for_one_off_footprints(lineitem):
+    svc = _service(hold_ticks="auto")
+    for i, day in enumerate((200, 900, 1600)):  # disjoint row-group windows
+        plan = ScanPlan("lineitem", ["l_extendedprice"],
+                        Cmp("l_shipdate", "between", (day, day + 150)))
+        svc.submit(f"t{i}", lineitem, plan)
+        svc.drain()
+    assert svc.hold_ticks == 0
+    assert svc.telemetry.counters.get("held_requests", 0) == 0

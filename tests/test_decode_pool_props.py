@@ -1,11 +1,15 @@
 """Property-based DecodePool budget-accounting invariants.
 
-The tick-scoped DecodePool is the one place coalesced scans pin decoded
-bytes outside the BlockCache's LRU accounting, so its byte bookkeeping
-must be exact: `used_bytes` is always the summed nbytes of the kept
-entries, re-inserting an existing key bills only the size delta, and a
-rejected (over-budget) put changes nothing.  Exercised over random put
-sequences with a small key domain so re-insertions are common.
+DecodePool is now a compatibility wrapper over the unified BlockStore (a
+never-expiring window view pinning every entry — see
+repro/datapath/blockstore.py), so this suite doubles as a property test
+of the store's pinned-put ledger through the old pool contract: the byte
+bookkeeping must be exact — `used_bytes` is always the summed nbytes of
+the kept entries, re-inserting an existing key bills only the size
+delta, and a rejected (over-budget) put changes nothing.  Exercised over
+random put sequences with a small key domain so re-insertions are
+common.  (The store's own tier/pin/eviction properties live in
+tests/test_blockstore.py.)
 
 Module skips without `hypothesis` (same policy as tests/test_encodings.py).
 """
