@@ -34,6 +34,13 @@ workload shows the cost-ranked eviction keeping encoded pages (repeat
 scans re-decode but never re-fetch) — per-tier hit/eviction rates come
 from the store's ledger.
 
+The `batchdecode` sub-report A/Bs the bucketed batch-decode dispatch
+path (service batch_decode=True, the default) against the sequential
+one-launch-per-(row group, column) loop on a >= 32-row-group,
+multi-column whole-table scan: device dispatches (kernels.ops'
+dispatch counter), wall time, decode launches, and — with the slice
+pipeline — the netsim fetch/decode overlap at slice granularity.
+
 Reported rows:
     service.independent    N direct DatapathEngine.scan() calls
     service.coalesced      same scans through one DatapathService tick
@@ -43,6 +50,7 @@ Reported rows:
     service.holdwindow     cross-tick vs tick-scoped coalescing savings
     service.costmodel.*    calibrated rates + 4x-under-estimator shares
     service.blockstore.*   late-partner retained reuse + tier ledger
+    service.batchdecode.*  dispatch counts + wall, batched vs sequential
 """
 
 from __future__ import annotations
@@ -355,6 +363,109 @@ def run_blockstore(sf: float = 0.1) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# batchdecode sub-report: bucketed batch launches vs per-(rg, column) loop
+# ---------------------------------------------------------------------------
+
+BATCH_COLS = ["l_extendedprice", "l_discount", "l_tax", "l_quantity"]
+
+
+def batchdecode_setup(sf: float = 0.1):
+    """A lineitem with SMALL row groups so a whole-table scan spans >= 32
+    groups — the dispatch-amplification regime the batch path collapses."""
+    d = os.path.join(DATA_DIR, f"tpch_batch_sf{sf}")
+    if not os.path.exists(os.path.join(d, "lineitem.lake")):
+        tpch.write_tables(d, sf=sf, seed=0, sorted_data=True,
+                          row_group_size=1024)
+    return LakeReader(os.path.join(d, "lineitem.lake"))
+
+
+def _run_batchmode(reader, batch_decode: bool, cost_model,
+                   tick_bytes=None) -> dict:
+    from repro.kernels import ops
+
+    def once():
+        svc = DatapathService(
+            engine=DatapathEngine(backend="ref", cache=BlockCache(4 << 30)),
+            policy=StaticPolicy("raw"), batch_decode=batch_decode,
+            cost_model=cost_model, tick_bytes=tick_bytes,
+        )
+        svc.submit("t", reader, ScanPlan("lineitem", list(BATCH_COLS)))
+        svc.drain()
+        return svc
+
+    once()  # warmup: jit compiles + file cache
+    d0 = ops.dispatch_count()
+    import time as _time
+    t0 = _time.perf_counter()
+    svc = once()
+    wall = _time.perf_counter() - t0
+    c = svc.telemetry.counters
+    return {
+        "dispatches": ops.dispatch_count() - d0,
+        "wall_s": wall,
+        "decode_launches": int(c.get("decode_launches", 0)),
+        "batch_slices": int(c.get("batch_slices", 0)),
+        "sim_serial_s": float(c.get("sim_pipe_serial_s",
+                                    c.get("sim_fetch_serial_s", 0.0))),
+        "sim_overlapped_s": float(c.get("sim_pipe_overlapped_s",
+                                        c.get("sim_fetch_overlapped_s", 0.0))),
+        "sim_saved_s": float(c.get("sim_pipe_saved_s",
+                                   c.get("sim_fetch_saved_s", 0.0))),
+    }
+
+
+def run_batchdecode(sf: float = 0.1) -> dict:
+    reader = batchdecode_setup(sf)
+    assert reader.n_row_groups >= 32, reader.n_row_groups
+    # calibrated-ish model (fast smoke) so the per-launch overhead term is
+    # real and the slice-level pipeline numbers carry it
+    cm = CostModel.calibrate(backend="ref", n=1 << 16, repeats=1)
+
+    seq = _run_batchmode(reader, False, cm)
+    bat = _run_batchmode(reader, True, cm)
+    ratio = seq["dispatches"] / max(bat["dispatches"], 1)
+    speedup = seq["wall_s"] / max(bat["wall_s"], 1e-9)
+    row("service.batchdecode", bat["wall_s"],
+        f"rgs={reader.n_row_groups};cols={len(BATCH_COLS)};"
+        f"dispatch_seq={seq['dispatches']};dispatch_batch={bat['dispatches']}"
+        f" ({ratio:.1f}x fewer);"
+        f"wall_seq_s={seq['wall_s']:.3f};wall_batch_s={bat['wall_s']:.3f}"
+        f" ({speedup:.2f}x)")
+
+    # sliced dispatch: tick_bytes carves the scan into multiple WFQ slices
+    # so the NEXT slice's fetch overlaps THIS slice's bucketed batch decode
+    slice_bytes = reader.n_rows * 4 * len(BATCH_COLS) // 6
+    seq_p = _run_batchmode(reader, False, cm, tick_bytes=slice_bytes)
+    bat_p = _run_batchmode(reader, True, cm, tick_bytes=slice_bytes)
+    row("service.batchdecode.pipeline", 0.0,
+        f"slices={bat_p['batch_slices']};"
+        f"pipe_overlapped_s={bat_p['sim_overlapped_s']:.5f}"
+        f"/serial={bat_p['sim_serial_s']:.5f}"
+        f" (fetch_hidden_s={bat_p['sim_saved_s']:.5f});"
+        f"seq_overlapped_s={seq_p['sim_overlapped_s']:.5f}")
+    return {
+        "row_groups": reader.n_row_groups,
+        "columns": len(BATCH_COLS),
+        "dispatch_sequential": seq["dispatches"],
+        "dispatch_batched": bat["dispatches"],
+        "dispatch_ratio": ratio,
+        "wall_sequential_s": seq["wall_s"],
+        "wall_batched_s": bat["wall_s"],
+        "wall_speedup": speedup,
+        "decode_launches_sequential": seq["decode_launches"],
+        "decode_launches_batched": bat["decode_launches"],
+        "launch_overhead_s": cm.launch_overhead_s,
+        "pipeline": {
+            "batch_slices": bat_p["batch_slices"],
+            "sim_serial_s": bat_p["sim_serial_s"],
+            "sim_overlapped_s": bat_p["sim_overlapped_s"],
+            "sim_saved_s": bat_p["sim_saved_s"],
+            "sim_overlapped_sequential_s": seq_p["sim_overlapped_s"],
+        },
+    }
+
+
 def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
     readers = setup(sf)
     plans = tenant_plans(n_tenants)
@@ -404,11 +515,13 @@ def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
     fairness = run_fairness(sf)
     costmodel = run_costmodel(sf)
     blockstore = run_blockstore(sf)
+    batchdecode = run_batchdecode(sf)
 
     return {
         "fairness": fairness,
         "costmodel": costmodel,
         "blockstore": blockstore,
+        "batchdecode": batchdecode,
         "n_tenants": n_tenants,
         "independent_fresh_decoded_bytes": ind_fresh,
         "service_fresh_decoded_bytes": svc_fresh,

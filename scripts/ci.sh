@@ -17,10 +17,12 @@ python -c "from repro.datapath.costmodel import main; import sys; sys.exit(main(
 
 # service benchmark — includes the `fairness` sub-report (FIFO vs WFQ under
 # 1-elephant/3-mice, hold-window savings), the `costmodel` sub-report
-# (calibrated rates + 4x-under-estimator reconciliation A/B), and the
+# (calibrated rates + 4x-under-estimator reconciliation A/B), the
 # `blockstore` sub-report (late-partner retained-decode reuse vs the old
-# tick-scoped pool + per-tier hit/eviction ledger under capacity pressure)
-# — appended to the perf trajectory
+# tick-scoped pool + per-tier hit/eviction ledger under capacity pressure),
+# and the `batchdecode` sub-report (bucketed batch launches vs the
+# per-(row group, column) loop: device dispatches, wall time, cross-tick
+# fetch/decode pipelining) — appended to the perf trajectory
 python -m benchmarks.run --fast --only service --json BENCH_point.json
 python scripts/append_bench_point.py BENCH_point.json BENCH_service.json
 rm -f BENCH_point.json

@@ -29,6 +29,11 @@ The engine is also drivable at row-group granularity (`scan_row_group`)
 by the shared service scheduler (repro.datapath): a tick-level decode
 pool lets N concurrent scans over the same row groups decode each
 (row group, column) pair once ("shared-scan coalescing", DESIGN.md §8).
+`scan_row_groups_batched` is the batched form of the same contract
+(DESIGN.md §12): a whole dispatch slice's pages are bucketed by
+(encoding, k, dtype) and decoded in ONE kernel launch per bucket —
+bit-identical results and accounting, ~an order of magnitude fewer
+device dispatches.
 """
 
 from __future__ import annotations
@@ -87,6 +92,17 @@ class ScanStats:
     rows_out: int = 0
     fused: bool = False
     cache_hit: bool = False
+    # Device dispatches on the DECODE path only (column decodes, PLAIN device
+    # puts, fused scans) — predicate eval and compaction launch identically
+    # on both paths and are excluded.  The sequential path counts one per
+    # fresh (row group, column); the batched path one per bucket launch.
+    # This is the one ScanStats field batching is ALLOWED to change; the
+    # cost model prices it via `launch_overhead_s` and reconciliation
+    # refunds the batched path's savings.
+    kernel_launches: int = 0
+    # Batched-path shape telemetry: blocks of pure padding added to reach
+    # each bucket's power-of-two size (the price of shape-stable jit).
+    batch_pad_blocks: int = 0
 
 
 @dataclasses.dataclass
@@ -118,7 +134,7 @@ class DatapathEngine:
         be = self.backend if self.backend != "host" else "ref"
         e = col.encoding
         if e == Encoding.PLAIN:
-            arr = jnp.asarray(col.buffers["plain"])
+            arr = ops.device_put(col.buffers["plain"])
         elif e == Encoding.BITPACK:
             arr = ops.bitunpack(jnp.asarray(col.buffers["packed"]), col.k, backend=be)
             arr = arr.reshape(-1)
@@ -184,7 +200,13 @@ class DatapathEngine:
         offload: Optional[str] = None,
         pool: Optional[Dict] = None,
         stats: Optional[ScanStats] = None,
+        precomputed: Optional[jax.Array] = None,
     ):
+        """Serve one decoded row-group column: pool hit, cache hit, or a
+        fresh decode.  `precomputed` is the batched path's already-launched
+        bucket slice for this (rg, column) — it substitutes for the kernel
+        call only; every hit lookup, stats increment, and pool/cache put
+        runs identically, which is what keeps batched ≡ sequential."""
         offload = offload or self.offload
         key = self.rg_cache_key(reader, rg, name)
         if pool is not None:
@@ -211,7 +233,12 @@ class DatapathEngine:
                 if stats is not None:
                     stats.decoded_bytes += int(hit.nbytes)
                 return hit, True
-        arr = self._decode_host(col, L) if self.backend == "host" else self._decode_device(col, L)
+        if precomputed is not None:
+            arr = precomputed  # bucket launch already counted by the caller
+        else:
+            arr = self._decode_host(col, L) if self.backend == "host" else self._decode_device(col, L)
+            if stats is not None:
+                stats.kernel_launches += 1
         enc_name = col.encoding.value if col is not None else None
         if offload in ("preloaded", "prefiltered"):
             self.cache.put(key, arr, encoding=enc_name)
@@ -304,6 +331,73 @@ class DatapathEngine:
             if hi < lo:
                 lo, hi = 1, 0  # empty range, still valid
         return lo, hi
+
+    def _prepare_row_group(self, reader, rg: int, plan: ScanPlan,
+                           pred: Optional[Expr], mode: str, stats: ScanStats,
+                           pool: Optional[Dict] = None):
+        """The per-row-group front half shared VERBATIM by the sequential
+        and batched dispatch paths (bit-identity by construction, not by
+        mirroring): the fully-resident shortcut probe, the encoded-page
+        tier lookups + storage->NIC fetch, and fusability.
+
+        Returns (n, L, resident, enc, fuse, fetched).  When `resident` the
+        remaining fields are empty — no encoded byte moves.  Fusable plans
+        never take the shortcut (their predicate column is never decoded,
+        so its key can never be resident), which keeps the resident mask
+        an `_eval` over exactly the arrays a direct scan would produce.
+        """
+        need = plan.all_columns()
+        n = reader.row_group_meta(rg)["n"]
+        L = padded_rows(n)
+        if pool is not None or mode in ("preloaded", "prefiltered"):
+            keys = [self.rg_cache_key(reader, rg, name) for name in need]
+            if (pool is not None and all(k in pool for k in keys)) or (
+                mode in ("preloaded", "prefiltered")
+                and all(k in self.cache for k in keys)
+            ):
+                return n, L, True, {}, None, False
+
+        # Encoded-page tier: under preloaded/prefiltered the store keeps
+        # raw encoded pages too, so a repeat scan whose decoded columns
+        # were evicted (or never fit) at least skips the storage->NIC
+        # re-fetch.  Page hits contribute no `encoded_bytes` — nothing
+        # crossed the hop — which is also what keeps them out of netsim's
+        # fetch simulation.
+        enc: Dict[str, EncodedColumn] = {}
+        missing = list(need)
+        if mode in ("preloaded", "prefiltered"):
+            missing = []
+            for name in need:
+                page = self.cache.get(self.page_cache_key(reader, rg, name))
+                if page is None:
+                    missing.append(name)
+                else:
+                    enc[name] = page
+                    stats.page_hits += 1
+                    stats.page_hit_bytes += page.encoded_bytes()
+        fetched = False
+        if missing:
+            got = reader.read_encoded(rg, missing)
+            stats.encoded_bytes += sum(c.encoded_bytes() for c in got.values())
+            enc.update(got)
+            fetched = True
+            if mode in ("preloaded", "prefiltered"):
+                for name, col in got.items():
+                    self.cache.put(self.page_cache_key(reader, rg, name), col,
+                                   tier="encoded")
+        fuse = None
+        if self.backend in ("ref", "pallas", "auto"):
+            fuse = self._fusable(pred, enc, plan.columns)
+        return n, L, False, enc, fuse, fetched
+
+    @staticmethod
+    def _fused_width(reader, rg: int, pred) -> int:
+        """Footer dtype width of the fused predicate column — the honest
+        per-row charge for its processed-but-unmaterialized decode work
+        (mirrors decode_footprint's `L * itemsize` sizing; the old code
+        hardcoded 4)."""
+        cm = reader.row_group_meta(rg)["columns"][pred.column]
+        return np.dtype(cm["dtype"]).itemsize
 
     # ------------------------------------------------------------------
     # service hooks (metadata only — used by repro.datapath for admission
@@ -428,23 +522,16 @@ class DatapathEngine:
         """
         need = plan.all_columns()
         proj = plan.columns
-        n = reader.row_group_meta(rg)["n"]
-        L = padded_rows(n)
-
-        # Fully resident shortcut: every needed column already decoded in
-        # the tick pool (coalescing) or, under preloaded/prefiltered, in the
-        # BlockCache -> no encoded fetch at all.  Fusable plans never
-        # qualify (their predicate column is never decoded), so the mask is
-        # always _eval over the exact same resident arrays a direct scan of
-        # this plan shape would produce — bit-identity preserved.
         mode = offload or self.offload
-        resident = False
-        if pool is not None or mode in ("preloaded", "prefiltered"):
-            keys = [self.rg_cache_key(reader, rg, name) for name in need]
-            resident = (pool is not None and all(k in pool for k in keys)) or (
-                mode in ("preloaded", "prefiltered") and all(k in self.cache for k in keys)
-            )
+        # front half (resident probe / page tier / fetch / fusability) is
+        # the exact code the batched path runs — _prepare_row_group
+        n, L, resident, enc, fuse, _fetched = self._prepare_row_group(
+            reader, rg, plan, pred, mode, stats, pool=pool
+        )
         if resident:
+            # fully resident: every needed column already decoded in the
+            # tick pool (coalescing) or, under preloaded/prefiltered, in
+            # the BlockCache -> no encoded fetch at all
             cols = {}
             for name in need:
                 arr, _ = self._decode_column(
@@ -459,42 +546,19 @@ class DatapathEngine:
             mask = mask & (jnp.arange(L) < n)
             return cols, mask
 
-        # Encoded-page tier: under preloaded/prefiltered the store keeps raw
-        # encoded pages too, so a repeat scan whose decoded columns were
-        # evicted (or never fit) at least skips the storage->NIC re-fetch.
-        # Page hits contribute no `encoded_bytes` — nothing crossed the hop —
-        # which is also what keeps them out of netsim's fetch simulation.
-        enc: Dict[str, EncodedColumn] = {}
-        missing = list(need)
-        if mode in ("preloaded", "prefiltered"):
-            missing = []
-            for name in need:
-                page = self.cache.get(self.page_cache_key(reader, rg, name))
-                if page is None:
-                    missing.append(name)
-                else:
-                    enc[name] = page
-                    stats.page_hits += 1
-                    stats.page_hit_bytes += page.encoded_bytes()
-        if missing:
-            fetched = reader.read_encoded(rg, missing)
-            stats.encoded_bytes += sum(c.encoded_bytes() for c in fetched.values())
-            enc.update(fetched)
-            if mode in ("preloaded", "prefiltered"):
-                for name, col in fetched.items():
-                    self.cache.put(self.page_cache_key(reader, rg, name), col,
-                                   tier="encoded")
-
-        fuse = None
-        if self.backend in ("ref", "pallas", "auto"):
-            fuse = self._fusable(pred, enc, proj)
-
         cols: Dict[str, Optional[jax.Array]] = {}
         if fuse is not None:
             stats.fused = True
             lo, hi = fuse
             fe = enc[pred.column].encoding.value
-            stats.decode_work[fe] = stats.decode_work.get(fe, 0) + L * 4
+            # processed-but-never-materialized decode work, charged at the
+            # column's TRUE footer dtype width (decode_footprint sizes the
+            # estimate the same way, so estimate == actual stays exact for
+            # fused scans whatever the predicate column's dtype)
+            stats.decode_work[fe] = (
+                stats.decode_work.get(fe, 0) + L * self._fused_width(reader, rg, pred)
+            )
+            stats.kernel_launches += 1
             fmask, _ = ops.fused_scan(
                 jnp.asarray(enc[pred.column].buffers["packed"]),
                 enc[pred.column].k,
@@ -526,6 +590,307 @@ class DatapathEngine:
             cols.setdefault(name, None)  # predicate-only column under fusion
         return cols, mask
 
+    # ------------------------------------------------------------------
+    # batched multi-row-group scan (bucketed kernel launches)
+    # ------------------------------------------------------------------
+    def scan_row_groups_batched(
+        self,
+        reader,
+        rgs,
+        plan: ScanPlan,
+        pred: Optional[Expr],
+        blooms: Dict[str, jax.Array],
+        stats: ScanStats,
+        pool: Optional[Dict] = None,
+        offload: Optional[str] = None,
+    ):
+        """Decode + filter MANY row groups with bucketed batch launches —
+        bit-identical to calling `scan_row_group` per group, in order.
+
+        Compatible pages are stacked along the block axis and decoded in
+        ONE kernel launch per (encoding, k, dtype) bucket (`kernels.ops`
+        `*_batch`), bucket-padded to power-of-two block counts so jit
+        traces are reused across slices.  Everything that is NOT the
+        kernel launch — residency lookups, page-tier fetches, stats
+        increments, pool/cache puts — runs through the exact sequential
+        code in strict (row group, column) order, so pool budgets and
+        accounting cannot drift.  (The one documented divergence: all
+        encoded fetches happen before any decoded put, so a cache evicting
+        PRE-RESIDENT entries mid-slice can shift hit/fresh counters; the
+        results stay bit-identical — a vanished entry is re-fetched and
+        re-decoded singly.)
+
+        Returns (per_rg, fetched): `per_rg` is [(cols, mask)] in `rgs`
+        order with the same contract as `scan_row_group`; `fetched` lists
+        the row groups that pulled encoded bytes over the storage->NIC hop
+        (the scheduler feeds exactly these to the netsim pipeline).
+        """
+        rgs = list(rgs)
+        mode = offload or self.offload
+        if self.backend == "host" or len(rgs) <= 1:
+            # the host baseline decodes on the CPU (nothing to batch-launch)
+            # and a single group has nothing to bucket: the sequential path
+            # IS the batched path
+            per_rg, fetched = [], []
+            for rg in rgs:
+                enc0 = stats.encoded_bytes
+                per_rg.append(self.scan_row_group(
+                    reader, rg, plan, pred, blooms, stats, pool=pool, offload=offload
+                ))
+                if stats.encoded_bytes > enc0:
+                    fetched.append(rg)
+            return per_rg, fetched
+
+        need = plan.all_columns()
+        proj = plan.columns
+
+        # -- phase A: residency, page-tier fetch, fusability (rg order) ----
+        # the front half is _prepare_row_group — the SAME code the
+        # sequential scan_row_group runs, so the two paths cannot drift
+        slots = []
+        fetched: List[int] = []
+        for rg in rgs:
+            n, L, resident, enc, fuse, did_fetch = self._prepare_row_group(
+                reader, rg, plan, pred, mode, stats, pool=pool
+            )
+            slot = {"rg": rg, "n": n, "L": L, "resident": resident,
+                    "enc": enc, "fuse": fuse, "decode": []}
+            slots.append(slot)
+            if did_fetch:
+                fetched.append(rg)
+            if resident:
+                continue
+            # columns needing a fresh decode — non-mutating residency peek
+            # (presence checks touch no LRU order and count no hits; the
+            # counting lookups run in the finalize pass, in order)
+            for name in (proj if fuse is not None else need):
+                key = self.rg_cache_key(reader, rg, name)
+                if pool is not None and key in pool:
+                    continue
+                if mode in ("preloaded", "prefiltered") and key in self.cache:
+                    continue
+                slot["decode"].append(name)
+
+        # -- phase B: bucket compatible pages, one launch per bucket -------
+        decoded, fmasks = self._launch_buckets(slots, pred, stats)
+
+        # -- finalize (strict rg order): hits, puts, stats, masks ----------
+        per_rg = []
+        for slot in slots:
+            rg, n, L = slot["rg"], slot["n"], slot["L"]
+            if slot["resident"]:
+                cols = {}
+                for name in need:
+                    cols[name] = self._serve_resident(
+                        reader, rg, name, L, mode, offload, pool, stats, fetched
+                    )
+                mask = (
+                    self._eval(pred, cols, blooms)
+                    if pred is not None
+                    else jnp.ones((L,), jnp.bool_)
+                )
+                per_rg.append((cols, mask & (jnp.arange(L) < n)))
+                continue
+            enc = slot["enc"]
+            cols = {}
+            if slot["fuse"] is not None:
+                stats.fused = True
+                fe = enc[pred.column].encoding.value
+                stats.decode_work[fe] = (
+                    stats.decode_work.get(fe, 0)
+                    + L * self._fused_width(reader, rg, pred)
+                )
+                for name in proj:
+                    arr, _ = self._decode_column(
+                        reader, rg, name, enc[name], L, offload=offload,
+                        pool=pool, stats=stats, precomputed=decoded.get((rg, name)),
+                    )
+                    cols[name] = arr
+                mask = fmasks[rg]
+            else:
+                for name in need:
+                    arr, _ = self._decode_column(
+                        reader, rg, name, enc[name], L, offload=offload,
+                        pool=pool, stats=stats, precomputed=decoded.get((rg, name)),
+                    )
+                    cols[name] = arr
+                mask = (
+                    self._eval(pred, cols, blooms)
+                    if pred is not None
+                    else jnp.ones((L,), jnp.bool_)
+                )
+            mask = mask & (jnp.arange(L) < n)
+            for name in need:
+                cols.setdefault(name, None)
+            per_rg.append((cols, mask))
+        return per_rg, fetched
+
+    def _serve_resident(self, reader, rg, name, L, mode, offload, pool, stats,
+                        fetched):
+        """Finalize-time lookup for a phase-A-resident column.  If the
+        entry was evicted between the phases (cache pressure from this
+        slice's own puts), fall back to a fetch + single decode — the
+        sequential path would have seen the same miss at its later
+        residency check, so results stay identical."""
+        key = self.rg_cache_key(reader, rg, name)
+        still = (pool is not None and key in pool) or (
+            mode in ("preloaded", "prefiltered") and key in self.cache
+        )
+        col = None
+        if not still:
+            # same lookup ladder as _prepare_row_group: the encoded-page
+            # tier first — a page still resident contributes page_hit
+            # bytes, NOT encoded_bytes (nothing re-crosses the hop, so
+            # netsim must not price a transfer)
+            if mode in ("preloaded", "prefiltered"):
+                col = self.cache.get(self.page_cache_key(reader, rg, name))
+                if col is not None:
+                    stats.page_hits += 1
+                    stats.page_hit_bytes += col.encoded_bytes()
+            if col is None:
+                col = reader.read_encoded(rg, [name])[name]
+                stats.encoded_bytes += col.encoded_bytes()
+                if rg not in fetched:
+                    fetched.append(rg)
+                if mode in ("preloaded", "prefiltered"):
+                    self.cache.put(self.page_cache_key(reader, rg, name), col,
+                                   tier="encoded")
+        arr, _ = self._decode_column(
+            reader, rg, name, col, L, offload=offload, pool=pool, stats=stats
+        )
+        return arr
+
+    def _launch_buckets(self, slots, pred, stats):
+        """Group every pending (row group, column) page by its launch
+        signature and decode each bucket in ONE device dispatch.  Returns
+        ({(rg, name): decoded (L,) array}, {rg: fused mask})."""
+        buckets: Dict[tuple, List[dict]] = {}
+        fused_items: Dict[int, List[dict]] = {}
+        for slot in slots:
+            if slot["resident"]:
+                continue
+            rg, L = slot["rg"], slot["L"]
+            if slot["fuse"] is not None:
+                col = slot["enc"][pred.column]
+                lo, hi = slot["fuse"]
+                fused_items.setdefault(col.k, []).append(
+                    {"rg": rg, "L": L, "packed": col.buffers["packed"],
+                     "lo": lo, "hi": hi}
+                )
+            for name in slot["decode"]:
+                col = slot["enc"][name]
+                e = col.encoding
+                if e == Encoding.PLAIN:
+                    bkey = ("plain", str(col.buffers["plain"].dtype))
+                elif e == Encoding.BITPACK:
+                    bkey = ("bitpack", col.k)
+                elif e == Encoding.DICT:
+                    d = col.buffers["dictionary"]
+                    bkey = ("dict", col.k,
+                            "int32" if d.dtype.kind in "iu" else str(d.dtype))
+                elif e == Encoding.DELTA:
+                    bkey = ("delta", col.k)
+                else:
+                    bkey = ("rle", str(col.buffers["rle_values"].dtype))
+                buckets.setdefault(bkey, []).append(
+                    {"rg": rg, "name": name, "col": col, "L": L}
+                )
+
+        be = self.backend
+        decoded: Dict[tuple, jax.Array] = {}
+        for bkey, items in buckets.items():
+            decoded.update(self._decode_bucket(bkey, items, be, stats))
+        fmasks: Dict[int, jax.Array] = {}
+        for k, items in sorted(fused_items.items()):
+            packed = np.concatenate([it["packed"] for it in items], axis=0)
+            blocks = [it["packed"].shape[0] for it in items]
+            lo = np.concatenate(
+                [np.full(b, it["lo"], np.int32) for b, it in zip(blocks, items)])
+            hi = np.concatenate(
+                [np.full(b, it["hi"], np.int32) for b, it in zip(blocks, items)])
+            mask = ops.fused_scan_batch(packed, k, lo, hi, backend=be)
+            stats.kernel_launches += 1
+            stats.batch_pad_blocks += ops.bucket_blocks(packed.shape[0]) - packed.shape[0]
+            s = 0
+            for b, it in zip(blocks, items):
+                fmasks[it["rg"]] = mask[s:s + b].reshape(-1)[: it["L"]]
+                s += b
+        return decoded, fmasks
+
+    @staticmethod
+    def _split_flat(out, items, blocks) -> Dict[tuple, jax.Array]:
+        """Slice one bucket's stacked decode back into per-page (L,)
+        columns, replicating the sequential pad-to-L / truncate-to-L."""
+        res = {}
+        s = 0
+        for b, it in zip(blocks, items):
+            flat = out[s:s + b].reshape(-1)
+            L = it["L"]
+            if flat.shape[0] < L:
+                flat = jnp.pad(flat, (0, L - flat.shape[0]))
+            res[(it["rg"], it["name"])] = flat[:L]
+            s += b
+        return res
+
+    def _decode_bucket(self, bkey, items, be, stats) -> Dict[tuple, jax.Array]:
+        kind = bkey[0]
+        if kind == "plain":
+            # one host gather + ONE device put for the whole bucket (plain
+            # has no kernel, so there is no jit trace to keep shape-stable
+            # — no power-of-two padding, just the stacked transfer)
+            total = sum(it["L"] for it in items)
+            buf = np.zeros((total,), dtype=np.dtype(bkey[1]))
+            s = 0
+            for it in items:
+                v = it["col"].buffers["plain"]
+                buf[s:s + v.shape[0]] = v
+                s += it["L"]
+            out = ops.device_put(buf)
+            stats.kernel_launches += 1
+            res, s = {}, 0
+            for it in items:
+                res[(it["rg"], it["name"])] = out[s:s + it["L"]]
+                s += it["L"]
+            return res
+        stats.kernel_launches += 1
+        if kind == "bitpack":
+            packed = np.concatenate([it["col"].buffers["packed"] for it in items], axis=0)
+            blocks = [it["col"].buffers["packed"].shape[0] for it in items]
+            out = ops.bitunpack_batch(packed, bkey[1], backend=be)
+        elif kind == "dict":
+            packed = np.concatenate([it["col"].buffers["packed"] for it in items], axis=0)
+            blocks = [it["col"].buffers["packed"].shape[0] for it in items]
+            dicts_np = [
+                d.astype(np.int32) if d.dtype.kind in "iu" else d
+                for d in (it["col"].buffers["dictionary"] for it in items)
+            ]
+            # the dictionary axis is bucket-padded like the block axis: a
+            # raw per-call max width would re-trace the jitted batch decode
+            # once per distinct cardinality mix (per-block clip bounds make
+            # the zero padding unreachable, so this is free bit-wise)
+            dmax = ops.bucket_blocks(max(d.shape[0] for d in dicts_np))
+            dicts = np.zeros((len(items), dmax), dtype=np.dtype(bkey[2]))
+            sizes = np.zeros((len(items),), np.int32)
+            for i, d in enumerate(dicts_np):
+                dicts[i, : d.shape[0]] = d
+                sizes[i] = d.shape[0]
+            page = np.concatenate(
+                [np.full(b, i, np.int32) for i, b in enumerate(blocks)])
+            out = ops.dict_decode_batch(packed, dicts, sizes, page, bkey[1], backend=be)
+        elif kind == "delta":
+            packed = np.concatenate([it["col"].buffers["packed"] for it in items], axis=0)
+            blocks = [it["col"].buffers["packed"].shape[0] for it in items]
+            bases = np.concatenate(
+                [it["col"].buffers["bases"].astype(np.int32) for it in items])
+            out = ops.delta_decode_batch(packed, bases, bkey[1], backend=be)
+        else:  # rle
+            values = np.concatenate([it["col"].buffers["rle_values"] for it in items], axis=0)
+            ends = np.concatenate([it["col"].buffers["rle_ends"] for it in items], axis=0)
+            blocks = [it["col"].buffers["rle_values"].shape[0] for it in items]
+            out = ops.rle_decode_batch(values, ends, backend=be)
+        stats.batch_pad_blocks += ops.bucket_blocks(sum(blocks)) - sum(blocks)
+        return self._split_flat(out, items, blocks)
+
     def scan(
         self,
         reader,
@@ -534,6 +899,7 @@ class DatapathEngine:
         offload: Optional[str] = None,
         pool: Optional[Dict] = None,
         row_groups=None,
+        batched: bool = False,
     ) -> ScanResult:
         """Full pushed-down scan.  `offload` overrides the engine-wide mode
         for this call (the adaptive policy's per-request knob); `pool` is a
@@ -542,12 +908,17 @@ class DatapathEngine:
 
         Implemented as a ResumableScan driven to completion in one shot, so
         a scan the service slices across ticks is structurally guaranteed to
-        produce the same result as a direct call."""
+        produce the same result as a direct call.  `batched=True` routes the
+        row-group work through `scan_row_groups_batched` (bucketed batch
+        kernel launches) instead of one launch per (row group, column)."""
         rs = ResumableScan(
             self, reader, plan, blooms=blooms, offload=offload, row_groups=row_groups
         )
         if rs.result is None:
-            rs.advance(tuple(rs.pending), pool=pool)
+            if batched:
+                rs.advance_batched(tuple(rs.pending), pool=pool)
+            else:
+                rs.advance(tuple(rs.pending), pool=pool)
         return rs.result
 
     # ------------------------------------------------------------------
@@ -671,6 +1042,34 @@ class ResumableScan:
         if not self._pending:
             self._finish()
         return self.result
+
+    def advance_batched(self, row_groups, pool: Optional[Dict] = None):
+        """`advance`, but through the engine's bucketed batch-decode path:
+        the slice's row groups are fetched, bucketed by (encoding, k,
+        dtype) and decoded in one kernel launch per bucket — bit-identical
+        fold-in, same preemption contract.  Returns (result-or-None,
+        fetched): `fetched` lists the row groups that actually pulled
+        encoded bytes, which is what the scheduler's netsim pipeline
+        prices (store-resident groups fetch nothing)."""
+        assert self.result is None, "scan already complete"
+        rgs = list(row_groups)
+        for rg in rgs:
+            assert self._pending and rg == self._pending[0], (
+                f"row group {rg} dispatched out of order (next is "
+                f"{self._pending[0] if self._pending else None})"
+            )
+            self._pending.pop(0)
+        per_rg, fetched = self.engine.scan_row_groups_batched(
+            self.reader, rgs, self.plan, self.pred, self.blooms, self.stats,
+            pool=pool, offload=self.offload,
+        )
+        for cols, mask in per_rg:
+            for name in self._need:
+                self._per_rg_cols[name].append(cols[name])
+            self._per_rg_mask.append(mask)
+        if not self._pending:
+            self._finish()
+        return self.result, fetched
 
     def _finish(self) -> None:
         proj = self.plan.columns

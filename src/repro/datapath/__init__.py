@@ -8,7 +8,9 @@ blockstore.py unified tiered BlockStore (encoded pages / decoded columns
               eviction priced by the cost model, window-scoped decode
               pins that survive hold_ticks
 scheduler.py  fair-share batch formation (wfq/fifo, row-group preemption,
-              cross-tick coalescing holds) + shared decode windows
+              cross-tick coalescing holds) + shared decode windows +
+              batched dispatch (each WFQ slice = one bucketed batch
+              decode, reconciled by actual kernel launches)
 costmodel.py  calibrated per-encoding decode rates (GB/s table with a
               nominal fallback), decode-seconds estimates from footer
               metadata — the WFQ virtual-time currency AND the store's
@@ -43,7 +45,12 @@ from repro.datapath.costmodel import (  # noqa: F401
     RowGroupCost,
     measure_rates,
 )
-from repro.datapath.netsim import DecodeModel, LinkModel, PrefetchPipeline  # noqa: F401
+from repro.datapath.netsim import (  # noqa: F401
+    DecodeModel,
+    LinkModel,
+    PrefetchPipeline,
+    SliceClock,
+)
 from repro.datapath.policy import (  # noqa: F401
     AdaptiveOffloadPolicy,
     StaticPolicy,

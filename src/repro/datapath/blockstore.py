@@ -41,6 +41,7 @@ entry and the ledger untouched).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 from typing import Any, Dict, Hashable, List, Optional, Tuple
 
@@ -124,6 +125,17 @@ class BlockStore:
         self._entries: Dict[Hashable, BlockEntry] = {}
         self._seq = itertools.count()
         self._tier_stats: Dict[str, TierStats] = {t: TierStats() for t in TIERS}
+        # Lazy-invalidation eviction heap: (seconds/byte, seq, key) records
+        # pushed on every insert/touch; a record is live iff the entry
+        # still exists with that exact seq (any touch/resize/re-price bumps
+        # seq and pushes a fresh record, orphaning the old one).  Victim
+        # selection is O(log n) amortized instead of the old O(n log n)
+        # sort per eviction (ROADMAP open item).
+        self._heap: List[Tuple[float, int, Hashable]] = []
+        # keys that MAY hold a live window pin (pruned lazily) — lets the
+        # can-we-cover-the-shortfall check sum pinned bytes without a full
+        # entry walk
+        self._pinned_keys: set = set()
         # window-view hit accounting, kept separate from tier hits so the
         # shim's .hits still means "cache lookups" (not pool coalescing)
         self.window_hits = 0
@@ -164,6 +176,17 @@ class BlockStore:
 
     def touch(self, entry: BlockEntry) -> None:
         entry.seq = next(self._seq)
+        self._heap_push(entry)
+
+    def _heap_push(self, entry: BlockEntry) -> None:
+        heapq.heappush(self._heap, entry.rank() + (entry.key,))
+        # stale records accumulate one per touch; compact when they clearly
+        # dominate so the heap stays O(live entries)
+        if len(self._heap) > 64 and len(self._heap) > 4 * len(self._entries):
+            self._heap = [
+                e.rank() + (e.key,) for e in self._entries.values()
+            ]
+            heapq.heapify(self._heap)
 
     def get(self, key: Hashable, tier: Optional[str] = None):
         """Counting lookup: a hit is recorded under the entry's tier (plus
@@ -225,6 +248,8 @@ class BlockStore:
                 old.pin_tick = self.tick
                 old.pin_expires = max(old.pin_expires, pin_until)
                 old.owner = owner or old.owner
+                self._pinned_keys.add(key)
+            self._heap_push(old)
             return True
         entry = BlockEntry(
             key=key, value=value, tier=tier, nbytes=nb, encoding=encoding,
@@ -234,27 +259,79 @@ class BlockStore:
         if pin_until is not None:
             entry.pin_tick = self.tick
             entry.pin_expires = pin_until
+            self._pinned_keys.add(key)
         self._entries[key] = entry
         self.used += nb
         st.puts += 1
+        self._heap_push(entry)
         return True
 
-    def _evict(self, need_bytes: int, exclude: Optional[Hashable] = None) -> None:
-        """Free at least `need_bytes` by evicting unpinned entries in
-        cost-rank order (lowest re-creation seconds per byte first, LRU
-        tie-break).  Window-pinned blocks are never victims — and when the
-        evictable entries cannot cover the shortfall, NOTHING is evicted:
-        the caller's put will be refused anyway, and a doomed put must not
-        flush the unpinned working set on its way out."""
-        victims = sorted(
+    def _pinned_bytes(self) -> int:
+        """Bytes held by live window pins, pruning stale pin bookkeeping as
+        it goes.  O(pinned keys), not O(entries) — pins are the handful of
+        window-held decodes, entries can be thousands."""
+        total = 0
+        for key in [k for k in self._pinned_keys]:
+            e = self._entries.get(key)
+            if e is None or not e.pinned(self.tick):
+                self._pinned_keys.discard(key)
+            else:
+                total += e.nbytes
+        return total
+
+    def _evictable_bytes(self, exclude: Optional[Hashable]) -> int:
+        total = self.used - self._pinned_bytes()
+        ex = self._entries.get(exclude) if exclude is not None else None
+        if ex is not None and not ex.pinned(self.tick):
+            total -= ex.nbytes
+        return total
+
+    def _victims_linear(self, exclude: Optional[Hashable] = None) -> List[BlockEntry]:
+        """O(n log n) rank-ordered victim list — the heap's oracle.  Kept
+        for the property test in tests/test_blockstore.py (heap and linear
+        selection must pick the same victim) and for debugging; production
+        eviction goes through `_pop_victim`."""
+        return sorted(
             (e for e in self._entries.values()
              if e.key != exclude and not e.pinned(self.tick)),
             key=BlockEntry.rank,
         )
-        if sum(e.nbytes for e in victims) < need_bytes:
+
+    def _pop_victim(self, exclude: Optional[Hashable] = None) -> Optional[BlockEntry]:
+        """Next eviction victim off the lazy heap: skip records orphaned by
+        touches/resizes/deletes (seq mismatch), defer records for entries
+        that are merely unevictable right now (pinned, or the excluded
+        key) so they stay discoverable, and return the first live one —
+        identical choice to `_victims_linear()[0]`."""
+        deferred: List[Tuple[float, int, Hashable]] = []
+        victim = None
+        while self._heap:
+            rec = heapq.heappop(self._heap)
+            e = self._entries.get(rec[2])
+            if e is None or e.seq != rec[1]:
+                continue  # orphaned: entry gone or re-ranked since pushed
+            if rec[2] == exclude or e.pinned(self.tick):
+                deferred.append(rec)
+                continue
+            victim = e
+            break
+        for rec in deferred:
+            heapq.heappush(self._heap, rec)
+        return victim
+
+    def _evict(self, need_bytes: int, exclude: Optional[Hashable] = None) -> None:
+        """Free at least `need_bytes` by evicting unpinned entries in
+        cost-rank order (lowest re-creation seconds per byte first, LRU
+        tie-break) via the lazy-invalidation heap.  Window-pinned blocks
+        are never victims — and when the evictable entries cannot cover
+        the shortfall, NOTHING is evicted: the caller's put will be
+        refused anyway, and a doomed put must not flush the unpinned
+        working set on its way out."""
+        if self._evictable_bytes(exclude) < need_bytes:
             return
-        for victim in victims:
-            if need_bytes <= 0:
+        while need_bytes > 0:
+            victim = self._pop_victim(exclude)
+            if victim is None:  # defensive: coverage said this can't happen
                 return
             del self._entries[victim.key]
             self.used -= victim.nbytes
@@ -270,11 +347,14 @@ class BlockStore:
                     if e.ephemeral and e.pin_expires < tick]:
             e = self._entries.pop(key)
             self.used -= e.nbytes
+            self._pinned_keys.discard(key)
             self._tier_stats[e.tier].expired += 1
 
     def clear(self) -> None:
         self._entries.clear()
         self.used = 0
+        self._heap = []
+        self._pinned_keys.clear()
 
     # ------------------------------------------------------------------
     # metadata probes (non-mutating — admission control and the policy)

@@ -53,6 +53,17 @@ NOMINAL_RATES_GBPS: Dict[str, float] = {
     "delta": 6.0,
 }
 
+# Fixed per-kernel-launch overhead when no calibration is available.
+# Deliberately ZERO: unlike the rates (where any sane nonzero beats
+# nothing), dispatch overhead is meaningless un-measured — a guessed
+# value would churn every legacy charge/reconcile pair for no accuracy.
+# `calibrate()` measures the real value (a 1-block decode is ~pure
+# dispatch), and only then do estimates price launches — at which point
+# the sequential path (one launch per row-group column) and the batched
+# path (one per bucket) are both priced honestly and reconciled against
+# `ScanStats.kernel_launches`.
+NOMINAL_LAUNCH_OVERHEAD_S = 0.0
+
 
 @dataclasses.dataclass
 class RowGroupCost:
@@ -81,13 +92,20 @@ def _median_seconds(fn, repeats: int) -> float:
 
 
 def measure_rates(backend: str = "ref", n: int = 1 << 18, repeats: int = 3,
-                  seed: int = 0) -> Dict[str, float]:
+                  seed: int = 0, overhead_s: float = 0.0) -> Dict[str, float]:
     """Microbenchmark each decode kernel path into decoded-output GB/s.
 
     Exercises the exact entry points the engine's `_decode_device` uses
     (repro.kernels.ops), with value distributions matching
     benchmarks/kernels_bench.py.  Raises on any kernel failure — callers
-    wanting a fallback use `CostModel.calibrate`."""
+    wanting a fallback use `CostModel.calibrate`.
+
+    `overhead_s` (the measured per-launch dispatch cost) is subtracted
+    from each timed call before deriving the rate, so the table prices
+    MARGINAL per-byte decode work and estimates don't double-count the
+    overhead that `launch_overhead_s` bills separately per launch
+    (floored at 5% of the measured time so a noisy overhead sample can
+    never produce a zero/negative rate)."""
     import jax.numpy as jnp
 
     from repro.kernels import ops
@@ -96,16 +114,19 @@ def measure_rates(backend: str = "ref", n: int = 1 << 18, repeats: int = 3,
     rng = np.random.default_rng(seed)
     rates: Dict[str, float] = {}
 
+    def _marginal(t: float) -> float:
+        return max(t - overhead_s, t * 0.05)
+
     # PLAIN: decode == device put of the raw buffer
     buf = rng.standard_normal(n).astype(np.float32)
     t = _median_seconds(lambda: jnp.asarray(buf), repeats)
-    rates["plain"] = n * 4 / t / 1e9
+    rates["plain"] = n * 4 / _marginal(t) / 1e9
 
     # BITPACK @ 16 bits
     v = rng.integers(0, 1 << 16, size=n, dtype=np.uint64)
     p = jnp.asarray(E.bitpack_encode(v, 16))
     t = _median_seconds(lambda: ops.bitunpack(p, 16, n, backend=backend), repeats)
-    rates["bitpack"] = n * 4 / t / 1e9
+    rates["bitpack"] = n * 4 / _marginal(t) / 1e9
 
     # DICT (low cardinality)
     v = rng.choice(np.array([1, 5, 9, 13, 20, 44, 90], dtype=np.int64), size=n)
@@ -113,7 +134,7 @@ def measure_rates(backend: str = "ref", n: int = 1 << 18, repeats: int = 3,
     k = int(b.pop("_k")[0])
     pk, d = jnp.asarray(b["packed"]), jnp.asarray(b["dictionary"].astype(np.int32))
     t = _median_seconds(lambda: ops.dict_decode(pk, d, k, n, backend=backend), repeats)
-    rates["dict"] = n * 4 / t / 1e9
+    rates["dict"] = n * 4 / _marginal(t) / 1e9
 
     # DELTA (sorted-ish ints)
     v = np.cumsum(rng.integers(0, 16, size=n)).astype(np.int64)
@@ -121,7 +142,7 @@ def measure_rates(backend: str = "ref", n: int = 1 << 18, repeats: int = 3,
     k = int(b.pop("_k")[0])
     pk, bs = jnp.asarray(b["packed"]), jnp.asarray(b["bases"].astype(np.int32))
     t = _median_seconds(lambda: ops.delta_decode(pk, bs, k, n, backend=backend), repeats)
-    rates["delta"] = n * 4 / t / 1e9
+    rates["delta"] = n * 4 / _marginal(t) / 1e9
 
     # RLE (runs ~64 long; smaller n — one-hot expansion is eager on CPU)
     nr = min(n, 1 << 17)
@@ -129,9 +150,26 @@ def measure_rates(backend: str = "ref", n: int = 1 << 18, repeats: int = 3,
     b = E.rle_encode(v)
     rv, re_ = jnp.asarray(b["rle_values"]), jnp.asarray(b["rle_ends"])
     t = _median_seconds(lambda: ops.rle_decode(rv, re_, len(v), backend=backend), repeats)
-    rates["rle"] = len(v) * 4 / t / 1e9
+    rates["rle"] = len(v) * 4 / _marginal(t) / 1e9
 
     return rates
+
+
+def measure_launch_overhead(backend: str = "ref", repeats: int = 5,
+                            seed: int = 0) -> float:
+    """Fixed per-launch dispatch cost: the median wall time of a ONE-block
+    decode, whose compute is negligible next to dispatch + jit-cache
+    lookup.  This is what the sequential scan pays per (row group, column)
+    and what bucketed batch launches amortize across pages."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.lakeformat import encodings as E
+
+    rng = np.random.default_rng(seed)
+    v = rng.integers(0, 1 << 8, size=E.PACK_BLOCK, dtype=np.uint64)
+    p = jnp.asarray(E.bitpack_encode(v, 8))
+    return _median_seconds(lambda: ops.bitunpack(p, 8, backend=backend), repeats)
 
 
 class CostModel:
@@ -146,6 +184,7 @@ class CostModel:
         backend: str = "ref",
         link_bandwidth_gbps: float = 12.5,
         link_latency_us: float = 10.0,
+        launch_overhead_s: float = NOMINAL_LAUNCH_OVERHEAD_S,
     ):
         self.rates = dict(NOMINAL_RATES_GBPS)
         if rates:
@@ -154,6 +193,7 @@ class CostModel:
         self.backend = backend
         self.link_bandwidth_gbps = link_bandwidth_gbps
         self.link_latency_us = link_latency_us
+        self.launch_overhead_s = max(0.0, float(launch_overhead_s))
 
     # -- pricing -----------------------------------------------------------
     def rate_gbps(self, encoding: str = "plain") -> float:
@@ -161,6 +201,11 @@ class CostModel:
 
     def decode_seconds(self, nbytes: int, encoding: str = "plain") -> float:
         return nbytes / (self.rate_gbps(encoding) * 1e9)
+
+    def launch_seconds(self, n_launches: int) -> float:
+        """Fixed dispatch cost of `n_launches` device kernel launches — the
+        term bucketed batch decoding amortizes.  Zero until calibrated."""
+        return n_launches * self.launch_overhead_s
 
     # -- estimation (footer metadata only) ---------------------------------
     def estimate_row_groups(
@@ -175,7 +220,12 @@ class CostModel:
             nbytes = 0
             seconds = 0.0
             for col in fp["columns"].values():
-                seconds += self.decode_seconds(col["nbytes"], col["encoding"])
+                # one launch per column is the SEQUENTIAL path's dispatch
+                # bill (a fused predicate column launches its fused scan);
+                # the batched path launches per bucket and reconciles the
+                # difference against ScanStats.kernel_launches
+                seconds += (self.decode_seconds(col["nbytes"], col["encoding"])
+                            + self.launch_overhead_s)
                 if col["materialized"]:
                     nbytes += col["nbytes"]
             out.append(RowGroupCost(nbytes, seconds))
@@ -183,7 +233,8 @@ class CostModel:
 
     # -- netsim unification ------------------------------------------------
     def decode_model(self) -> DecodeModel:
-        return DecodeModel(decode_gbps=self.rate_gbps("plain"), rates=dict(self.rates))
+        return DecodeModel(decode_gbps=self.rate_gbps("plain"), rates=dict(self.rates),
+                           launch_overhead_s=self.launch_overhead_s)
 
     def link_model(self) -> LinkModel:
         return LinkModel(bandwidth_gbps=self.link_bandwidth_gbps,
@@ -196,12 +247,21 @@ class CostModel:
     @classmethod
     def calibrate(cls, backend: str = "ref", n: int = 1 << 18, repeats: int = 3,
                   **kw) -> "CostModel":
-        """Measure the kernel table; fall back to the nominal table (with
-        `source='nominal-fallback'`) if any kernel path fails — a cost
-        model must never take the service down."""
+        """Measure the kernel table AND the per-launch dispatch overhead;
+        fall back to the nominal table (with `source='nominal-fallback'`)
+        if any kernel path fails — a cost model must never take the
+        service down."""
         try:
-            rates = measure_rates(backend=backend, n=n, repeats=repeats)
-            return cls(rates=rates, source="calibrated", backend=backend, **kw)
+            overhead = measure_launch_overhead(backend=backend,
+                                               repeats=max(repeats, 3))
+            # the overhead is measured FIRST and subtracted from the rate
+            # microbenchmarks, so rates price marginal per-byte work and
+            # estimates (rate + one launch_overhead_s per launch) don't
+            # double-count dispatch
+            rates = measure_rates(backend=backend, n=n, repeats=repeats,
+                                  overhead_s=overhead)
+            return cls(rates=rates, source="calibrated", backend=backend,
+                       launch_overhead_s=overhead, **kw)
         except Exception:  # noqa: BLE001 — calibration is best-effort
             return cls(source="nominal-fallback", backend=backend, **kw)
 
@@ -213,6 +273,7 @@ class CostModel:
             "backend": self.backend,
             "link_bandwidth_gbps": self.link_bandwidth_gbps,
             "link_latency_us": self.link_latency_us,
+            "launch_overhead_s": self.launch_overhead_s,
         }
 
     def save(self, path: str) -> str:
@@ -231,6 +292,8 @@ class CostModel:
             backend=d.get("backend", "ref"),
             link_bandwidth_gbps=d.get("link_bandwidth_gbps", 12.5),
             link_latency_us=d.get("link_latency_us", 10.0),
+            launch_overhead_s=d.get("launch_overhead_s",
+                                    NOMINAL_LAUNCH_OVERHEAD_S),
         )
 
     @classmethod
@@ -263,6 +326,8 @@ def main(argv=None) -> int:
                                    repeats=args.repeats))
     for enc in sorted(cm.rates):
         print(f"costmodel.{enc},{cm.rates[enc]:.3f} GB/s,source={cm.source}")
+    print(f"costmodel.launch_overhead,{cm.launch_overhead_s * 1e6:.1f} us,"
+          f"source={cm.source}")
     if args.out:
         cm.save(args.out)
         print(f"costmodel.saved,{args.out}")

@@ -45,25 +45,76 @@ class DecodeModel:
     rle -> GB/s) — the calibrated table from datapath/costmodel.py — so
     the prefetch simulation prices an RLE row group differently from
     PLAIN.  Encodings absent from the table (and encoding=None callers)
-    fall back to the scalar `decode_gbps`."""
+    fall back to the scalar `decode_gbps`.  `launch_overhead_s` is the
+    calibrated fixed cost per kernel dispatch (costmodel's per-launch
+    term): the sequential scan pays it once per (row group, column), the
+    batched scan once per bucket — pass `launches` to bill it."""
 
     decode_gbps: float = 20.0
     rates: Optional[Dict[str, float]] = None
+    launch_overhead_s: float = 0.0
 
     def rate_gbps(self, encoding: Optional[str] = None) -> float:
         if encoding is not None and self.rates:
             return self.rates.get(encoding, self.decode_gbps)
         return self.decode_gbps
 
-    def decode_seconds(self, nbytes: int, encoding: Optional[str] = None) -> float:
-        return nbytes / (self.rate_gbps(encoding) * 1e9)
+    def decode_seconds(self, nbytes: int, encoding: Optional[str] = None,
+                       launches: int = 0) -> float:
+        return (nbytes / (self.rate_gbps(encoding) * 1e9)
+                + launches * self.launch_overhead_s)
+
+
+class SliceClock:
+    """Streaming fetch/decode pipeline clock across DISPATCH SLICES — the
+    batched scan loop's simulated steady state.
+
+    The stateless `PrefetchPipeline.simulate` models overlap only within
+    one call, but the batched scheduler dispatches one slice per tick: the
+    next slice's storage->NIC fetch is issued while this slice's bucketed
+    batch decode still runs, ACROSS the tick boundary.  This clock carries
+    that state: `feed(nbytes, decode_seconds)` starts the slice's fetch as
+    soon as the link is free and its decode when both the fetch has landed
+    and the device is free.  `serial_s` / `overlapped_s` / `saved_s` are
+    cumulative over the whole run — saved_s is exactly the fetch time the
+    pipelining hid."""
+
+    def __init__(self, link: Optional[LinkModel] = None):
+        self.link = link or LinkModel()
+        self.link_free = 0.0  # when the storage->NIC link is next free
+        self.device_free = 0.0  # when the decoder is next free
+        self.serial_s = 0.0
+        self.slices = 0
+
+    def feed(self, nbytes: int, decode_seconds: float) -> None:
+        fetch_s = self.link.fetch_seconds(nbytes) if nbytes > 0 else 0.0
+        fetch_done = self.link_free + fetch_s
+        start = max(fetch_done, self.device_free)
+        self.device_free = start + decode_seconds
+        self.link_free = fetch_done  # the next slice's fetch follows at once
+        self.serial_s += fetch_s + decode_seconds
+        self.slices += 1
+
+    @property
+    def overlapped_s(self) -> float:
+        return max(self.device_free, self.link_free)
+
+    @property
+    def saved_s(self) -> float:
+        return max(0.0, self.serial_s - self.overlapped_s)
 
 
 class PrefetchPipeline:
-    """Two-slot fetch/decode overlap over a sequence of row groups.
+    """Two-slot fetch/decode overlap over a sequence of transfer units.
 
     serial     = sum(fetch_i) + sum(decode_i)
     overlapped = fetch_0 + sum_i max(fetch_{i+1}, decode_i) + decode_last
+
+    The unit granularity is the caller's: the sequential scheduler feeds
+    one unit per ROW GROUP (fetch of group i+1 hides behind its neighbor's
+    decode); the batched scheduler feeds one unit per DISPATCH SLICE, so
+    the next slice's whole fetch hides behind this slice's bucketed batch
+    decode — fetch and decode pipeline instead of alternating.
     """
 
     def __init__(self, link: LinkModel = None, decode: DecodeModel = None):

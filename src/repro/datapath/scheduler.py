@@ -31,10 +31,24 @@ request is never late by more than hold_ticks.  A request whose
 footprint is already window-pinned in the store is never held at all:
 the retained decodes ARE its partner, so it dispatches immediately.
 
+Batched dispatch (service.batch_decode, the default): each WFQ slice is
+handed to the engine as ONE row-group batch
+(`ResumableScan.advance_batched` -> `engine.scan_row_groups_batched`),
+which buckets compatible pages by (encoding, k, dtype) and decodes each
+bucket in a single kernel launch — ~4-100x fewer device dispatches than
+the one-launch-per-(row group, column) sequential loop, bit-identically.
+Reconciliation then re-bills each slice by the launches it REALLY made
+(`ScanStats.kernel_launches` priced at the calibrated per-launch
+overhead), so the batched path's dispatch savings flow back through the
+same honesty loop as decode bytes.
+
 The storage->NIC fetch for the row groups actually read this tick (store
 hits — decoded, window-pinned, or encoded-page — fetch nothing and skip
 the simulation) is fed through netsim's double-buffered PrefetchPipeline,
-recording how much of the fetch time hides behind on-device decode.
+recording how much of the fetch time hides behind on-device decode — at
+row-group granularity under sequential dispatch, at SLICE granularity
+under batched dispatch (the next slice's fetch hides behind this slice's
+batch decode).
 """
 
 from __future__ import annotations
@@ -259,7 +273,7 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
         if len(group) > 1:
             tel.inc("coalesced_groups")
             tel.inc("coalesced_requests", len(group))
-        fetches: List[Tuple[object, List[int]]] = []
+        fetches: List[Tuple[object, List[int], int]] = []
         for req, rgs in group:
             pool.owner = req.tenant  # retained pins bill their decoder
             try:
@@ -277,34 +291,53 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
                     )
                 rs = req.rs
                 work0 = dict(rs.stats.decode_work)
+                launches0 = rs.stats.kernel_launches
                 if rs.result is None and rgs:
                     dec0 = rs.stats.decoded_bytes
-                    # advance one row group at a time so the fetch
-                    # simulation sees exactly the groups that pulled
-                    # encoded bytes — store-resident groups (decoded,
-                    # window-pinned, or page-tier) fetch nothing and are
-                    # skipped at row-group granularity, not per slice
                     fetched: List[int] = []
-                    for rg in rgs:
-                        enc0 = rs.stats.encoded_bytes
-                        rs.advance([rg], pool=pool)
-                        if rs.stats.encoded_bytes > enc0:
-                            fetched.append(rg)
+                    if service.batch_decode:
+                        # the whole WFQ slice goes to the engine as ONE
+                        # batch: pages bucketed by (encoding, k, dtype),
+                        # one kernel launch per bucket, and the engine
+                        # reports which groups actually pulled encoded
+                        # bytes (store-resident groups fetch nothing)
+                        _, fetched = rs.advance_batched(rgs, pool=pool)
+                        tel.inc("batch_slices")
+                        tel.inc("batch_slice_rgs", len(rgs))
+                    else:
+                        # advance one row group at a time so the fetch
+                        # simulation sees exactly the groups that pulled
+                        # encoded bytes — store-resident groups (decoded,
+                        # window-pinned, or page-tier) fetch nothing and
+                        # are skipped at row-group granularity, not per
+                        # slice
+                        for rg in rgs:
+                            enc0 = rs.stats.encoded_bytes
+                            rs.advance([rg], pool=pool)
+                            if rs.stats.encoded_bytes > enc0:
+                                fetched.append(rg)
                     tel.observe_tenant_bytes(req.tenant, rs.stats.decoded_bytes - dec0)
                     if fetched:
-                        fetches.append((req, fetched))
+                        fetches.append(
+                            (req, fetched, rs.stats.kernel_launches - launches0))
                 if rgs:
                     # retroactive honesty: the estimate was charged at
                     # dispatch; re-bill by the decode work the slice REALLY
                     # did (ScanStats.decode_work — keyed by the encodings
-                    # actually read, immune to mis-estimated requests).  A
-                    # cache/pool-resident slice did no work — refunded.
+                    # actually read, immune to mis-estimated requests) plus
+                    # the launches it REALLY dispatched (bucketed batch
+                    # slices launch far fewer than the sequential estimate
+                    # and are refunded the difference).  A cache/pool-
+                    # resident slice did no work — fully refunded.
                     work = {
                         e: b - work0.get(e, 0)
                         for e, b in rs.stats.decode_work.items()
                         if b - work0.get(e, 0)
                     }
-                    _reconcile_slice(service, req, work)
+                    launches = rs.stats.kernel_launches - launches0
+                    tel.inc("decode_launches", launches)
+                    tel.inc("decode_slice_rgs", len(rgs))  # both dispatch modes
+                    _reconcile_slice(service, req, work, launches)
             except Exception as e:  # noqa: BLE001 — isolate faulty requests
                 req.ticket.error = e
                 tel.inc("failed")
@@ -329,7 +362,7 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
         _simulate_fetch(service, fetches)
 
 
-def _reconcile_slice(service, req, work: Dict[str, int]) -> None:
+def _reconcile_slice(service, req, work: Dict[str, int], launches: int = 0) -> None:
     """Close the loop on one completed slice: compare the decode-seconds
     charged at dispatch against the slice's actual cost and re-bill the
     tenant's virtual time (service._vreconcile).
@@ -337,31 +370,43 @@ def _reconcile_slice(service, req, work: Dict[str, int]) -> None:
     Actual cost is priced from the decode work the engine REALLY did
     (`work`: fresh output bytes by the encoding of the buffers actually
     read — ground truth from the scan, independent of the request's own
-    estimate), through the service's cost model.  An honest solo raw scan
-    reconciles to exactly zero; a 4x under-estimating request is re-billed
-    4x in the same tick it decoded (and its tenant's future dispatches are
+    estimate) plus the kernel `launches` it really dispatched, through the
+    service's cost model.  An honest solo raw sequential scan reconciles
+    to exactly zero; a batched slice is refunded the launch overhead its
+    buckets amortized; a 4x under-estimating request is re-billed 4x in
+    the same tick it decoded (and its tenant's future dispatches are
     re-priced); a pool/cache-fed slice is refunded."""
     charged_s, raw_s = req.charged_s, req.charged_raw_s
     req.charged_s = req.charged_raw_s = 0.0
     actual_s = sum(
         service.cost_model.decode_seconds(nbytes, encoding)
         for encoding, nbytes in work.items()
-    )
+    ) + service.cost_model.launch_seconds(launches)
     service._vreconcile(req.tenant, charged_s, raw_s, actual_s,
                         table=req.reader.path)
 
 
-def _simulate_fetch(service, fetches: List[Tuple[object, List[int]]]) -> None:
-    """Model the tick's storage->NIC transfer for the union of row groups
-    actually read this tick (cache-hit / pool-fed / failed slices fetch
-    nothing), double-buffered against on-device decode.
+def _simulate_fetch(service, fetches: List[Tuple[object, List[int], int]]) -> None:
+    """Model the tick's storage->NIC transfer for the row groups actually
+    read this tick (cache-hit / pool-fed / failed slices fetch nothing),
+    double-buffered against on-device decode.
 
     Decode is sized exactly like the engine's (engine.decode_footprint):
     PACK_BLOCK-padded rows, true dtype widths, and a fused scan's
     predicate column is processed (it contributes decode time at its
     encoding's rate) but never materialized (it contributes no decoded
-    bytes).  Per-group decode times come from the service's calibrated
-    cost model, so netsim and the WFQ charge read one table.
+    bytes) — plus the calibrated per-launch dispatch overhead.  All times
+    come from the service's cost model, so netsim and the WFQ charge read
+    one table.
+
+    Pipeline granularity follows the dispatch mode.  Sequential: one unit
+    per ROW GROUP (fetch of group i+1 hides behind its neighbor's decode),
+    merged across requests so a shared group is priced once.  Batched: one
+    unit per DISPATCH SLICE in dispatch order — the next slice's whole
+    fetch overlaps this slice's bucketed batch decode, which is the
+    "pipelined fetch/decode scan loop" the batch path exists for; columns
+    an earlier slice already priced this tick contribute nothing (same
+    first-contributor-wins rule as the merge).
 
     Each row group's metadata comes from a reader that actually scanned it
     — NOT from whichever request happened to be first in the group.  Two
@@ -370,35 +415,74 @@ def _simulate_fetch(service, fetches: List[Tuple[object, List[int]]]) -> None:
     keeps the simulated byte counts honest (regression-tested in
     tests/test_scheduler.py).
     """
-    # rg -> merged column footprints.  engine.decode_footprint is the ONE
-    # source of truth for what a scan materializes vs merely processes
-    # (padded rows, dtype widths, per-row-group fusability — auto-encoded
-    # files can flip a predicate column's encoding between groups), so the
-    # transfer model cannot drift from the WFQ charge.  Each request's
-    # columns are priced with its OWN reader's metadata; on overlap the
-    # first contributor wins (and materialization is an OR).
-    per_rg: Dict[int, Dict[str, dict]] = {}
-    for req, rgs in fetches:
-        for fp in service.engine.decode_footprint(req.reader, req.plan, rgs,
-                                                  pred=req.pred):
-            cols = per_rg.setdefault(fp["rg"], {})
-            for name, col in fp["columns"].items():
-                prev = cols.get(name)
-                if prev is None:
-                    cols[name] = dict(col)
-                elif col["materialized"] and not prev["materialized"]:
-                    prev["materialized"] = True
-    if not per_rg:
-        return
     cm = service.cost_model
     enc: List[int] = []
     dec: List[int] = []
     dec_s: List[float] = []
-    for rg in sorted(per_rg):
-        cols = per_rg[rg].values()
-        enc.append(sum(c["encoded_bytes"] for c in cols))
-        dec.append(sum(c["nbytes"] for c in cols if c["materialized"]))
-        dec_s.append(sum(cm.decode_seconds(c["nbytes"], c["encoding"]) for c in cols))
+    if service.batch_decode:
+        # one pipeline unit per slice; dedupe (rg, column) across slices
+        seen: Dict[Tuple[int, str], dict] = {}
+        for req, rgs, launches in fetches:
+            enc_b = dec_b = 0
+            dec_t = 0.0
+            for fp in service.engine.decode_footprint(req.reader, req.plan,
+                                                      rgs, pred=req.pred):
+                for name, col in fp["columns"].items():
+                    prev = seen.get((fp["rg"], name))
+                    if prev is None:
+                        seen[(fp["rg"], name)] = dict(col)
+                        enc_b += col["encoded_bytes"]
+                        dec_t += cm.decode_seconds(col["nbytes"], col["encoding"])
+                        if col["materialized"]:
+                            dec_b += col["nbytes"]
+                    elif col["materialized"] and not prev["materialized"]:
+                        prev["materialized"] = True
+                        dec_b += col["nbytes"]
+            enc.append(enc_b)
+            dec.append(dec_b)
+            dec_s.append(dec_t + cm.launch_seconds(launches))
+        clock = service.slice_clock
+        if clock is not None:
+            # cumulative cross-tick pipeline: slice i+1's fetch is in
+            # flight while slice i's batch decode runs, tick boundaries
+            # notwithstanding (counters are set, not incremented — the
+            # clock already accumulates)
+            for enc_b, dec_t in zip(enc, dec_s):
+                clock.feed(enc_b, dec_t)
+            tel = service.telemetry
+            tel.counters["sim_pipe_slices"] = float(clock.slices)
+            tel.counters["sim_pipe_serial_s"] = clock.serial_s
+            tel.counters["sim_pipe_overlapped_s"] = clock.overlapped_s
+            tel.counters["sim_pipe_saved_s"] = clock.saved_s
+    else:
+        # rg -> merged column footprints.  engine.decode_footprint is the
+        # ONE source of truth for what a scan materializes vs merely
+        # processes (padded rows, dtype widths, per-row-group fusability —
+        # auto-encoded files can flip a predicate column's encoding between
+        # groups), so the transfer model cannot drift from the WFQ charge.
+        # Each request's columns are priced with its OWN reader's metadata;
+        # on overlap the first contributor wins (materialization is an OR).
+        per_rg: Dict[int, Dict[str, dict]] = {}
+        for req, rgs, _launches in fetches:
+            for fp in service.engine.decode_footprint(req.reader, req.plan,
+                                                      rgs, pred=req.pred):
+                cols = per_rg.setdefault(fp["rg"], {})
+                for name, col in fp["columns"].items():
+                    prev = cols.get(name)
+                    if prev is None:
+                        cols[name] = dict(col)
+                    elif col["materialized"] and not prev["materialized"]:
+                        prev["materialized"] = True
+        for rg in sorted(per_rg):
+            cols = per_rg[rg].values()
+            enc.append(sum(c["encoded_bytes"] for c in cols))
+            dec.append(sum(c["nbytes"] for c in cols if c["materialized"]))
+            # sequential decode launches once per column (the same bill
+            # estimate_row_groups charges)
+            dec_s.append(sum(cm.decode_seconds(c["nbytes"], c["encoding"])
+                             for c in cols) + cm.launch_seconds(len(cols)))
+    if not enc:
+        return
     sim = service.pipeline.simulate(enc, dec, decode_seconds=dec_s)
     tel = service.telemetry
     tel.inc("sim_fetch_encoded_bytes", sum(enc))

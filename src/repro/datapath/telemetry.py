@@ -161,6 +161,27 @@ class Telemetry:
             }
         return out
 
+    def batch_report(self) -> dict:
+        """Batched-decode dispatch ledger: slices dispatched through the
+        bucketed path, row groups they carried, and total decode-path
+        kernel launches — `launches_per_rg` is the headline batching win
+        (sequential pays one launch per (row group, column); batched pays
+        one per bucket) and is computed over the row groups dispatched in
+        EITHER mode, so a sequential service reports its true per-group
+        dispatch bill rather than a fake zero.  Fixed keys, zero when
+        idle."""
+        slices = self.counters.get("batch_slices", 0.0)
+        batch_rgs = self.counters.get("batch_slice_rgs", 0.0)
+        all_rgs = self.counters.get("decode_slice_rgs", 0.0)
+        launches = self.counters.get("decode_launches", 0.0)
+        return {
+            "batch_slices": slices,
+            "batch_slice_rgs": batch_rgs,
+            "decode_launches": launches,
+            "launches_per_rg": launches / all_rgs if all_rgs > 0 else 0.0,
+            "rgs_per_slice": batch_rgs / slices if slices > 0 else 0.0,
+        }
+
     def fairness(self, weights: Optional[Dict[str, float]] = None) -> dict:
         """Fair-share report: each tenant's share of the decode capacity it
         OCCUPIED — decoded bytes plus window-retained byte-ticks (a byte
@@ -211,5 +232,6 @@ class Telemetry:
             },
             "fairness": self.fairness(),
             "cost": self.cost_report(),
+            "batch": self.batch_report(),
             "store": self.store.stats() if self.store is not None else {},
         }

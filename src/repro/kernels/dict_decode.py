@@ -42,6 +42,65 @@ def _kernel(k: int, one_hot: bool, packed_ref, dict_ref, out_ref):
         out_ref[...] = jnp.take(d, codes, axis=0, mode="clip").astype(out_ref.dtype)
 
 
+def _batch_kernel(k: int, packed_ref, dict_ref, size_ref, out_ref):
+    """Per-BLOCK dictionaries: each block of codes gathers from its own
+    dictionary row (pre-gathered to (G, Dpad) by the ops wrapper), clipped
+    to its own dictionary's true length — exactly `jnp.take(dict_p, codes,
+    mode="clip")` per source page, so batched == sequential bit-for-bit."""
+    codes = _ladder(packed_ref[...], k)  # (G, 32, 128) int32
+    d = dict_ref[...]  # (G, Dpad)
+    lim = (size_ref[...] - 1).astype(jnp.int32)  # (G, 1)
+    c = jnp.clip(codes, 0, lim[:, :, None])  # (G, 32, 128)
+    flat = jnp.take_along_axis(d, c.reshape(c.shape[0], -1), axis=1)
+    out_ref[...] = flat.reshape(codes.shape).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "group", "interpret"))
+def dict_decode_batch_pallas(
+    packed: jax.Array,
+    dicts: jax.Array,
+    sizes: jax.Array,
+    k: int,
+    *,
+    group: int = DEFAULT_GROUP,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched multi-page dict decode in ONE kernel launch.
+
+    packed (nblocks, k, 128) uint32 codes stacked from many pages;
+    dicts (nblocks, Dpad) per-block dictionary rows (page dictionaries
+    padded to a common width and gathered per block by the caller);
+    sizes (nblocks, 1) int32 true dictionary lengths.
+    -> (nblocks, 32, 128) values of dicts.dtype.
+    """
+    nblocks = packed.shape[0]
+    group = min(group, nblocks)
+    pad = (-nblocks) % group
+    if pad:
+        packed = jnp.pad(packed, ((0, pad), (0, 0), (0, 0)))
+        dicts = jnp.pad(dicts, ((0, pad), (0, 0)))
+        sizes = jnp.pad(sizes, ((0, pad), (0, 0)), constant_values=1)
+    dpad = (-dicts.shape[1]) % LANES
+    if dpad:
+        dicts = jnp.pad(dicts, ((0, 0), (0, dpad)))
+    steps = packed.shape[0] // group
+    out = pl.pallas_call(
+        functools.partial(_batch_kernel, k),
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((group, k, LANES), lambda i: (i, 0, 0)),
+            pl.BlockSpec((group, dicts.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((group, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((group, SUBLANES, LANES), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (packed.shape[0], SUBLANES, LANES), dicts.dtype
+        ),
+        interpret=interpret,
+    )(packed, dicts, sizes)
+    return out[:nblocks]
+
+
 @functools.partial(jax.jit, static_argnames=("k", "group", "interpret"))
 def dict_decode_pallas(
     packed: jax.Array,

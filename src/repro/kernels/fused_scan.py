@@ -44,6 +44,57 @@ def _kernel(k: int, has_dict: bool, *refs):
     cnt_ref[...] = jnp.sum(m.astype(jnp.int32), axis=-1, keepdims=True)
 
 
+def _batch_kernel(k: int, packed_ref, lohi_ref, mask_ref):
+    """Per-BLOCK predicate bounds: block b tests lohi_ref[b] — the batched
+    form of the scalar kernel, so pages from many row groups (each with its
+    own code-rewritten range, e.g. per-group DICT bounds) share one launch."""
+    codes = _ladder(packed_ref[...], k)  # (G, 32, 128) int32
+    G = codes.shape[0]
+    vals = codes.reshape(G, PACK_BLOCK)
+    lo = lohi_ref[:, 0:1]  # (G, 1)
+    hi = lohi_ref[:, 1:2]
+    m = (vals >= lo) & (vals <= hi)
+    mask_ref[...] = m.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "group", "interpret"))
+def fused_scan_batch_pallas(
+    packed: jax.Array,
+    k: int,
+    lohi: jax.Array,
+    *,
+    group: int = DEFAULT_GROUP,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched fused decode+filter over stacked pages in ONE launch.
+
+    packed (nblocks, k, 128) uint32; lohi (nblocks, 2) int32 per-block
+    bounds -> mask (nblocks, 4096) int32 (nonzero = survivor).
+    """
+    nblocks = packed.shape[0]
+    group = min(group, nblocks)
+    pad = (-nblocks) % group
+    if pad:
+        packed = jnp.pad(packed, ((0, pad), (0, 0), (0, 0)))
+        # empty range (1, 0): padded blocks match nothing
+        lohi = jnp.concatenate(
+            [lohi, jnp.tile(jnp.array([[1, 0]], jnp.int32), (pad, 1))], axis=0
+        )
+    steps = packed.shape[0] // group
+    mask = pl.pallas_call(
+        functools.partial(_batch_kernel, k),
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((group, k, LANES), lambda i: (i, 0, 0)),
+            pl.BlockSpec((group, 2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((group, PACK_BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((packed.shape[0], PACK_BLOCK), jnp.int32),
+        interpret=interpret,
+    )(packed, lohi)
+    return mask[:nblocks]
+
+
 @functools.partial(jax.jit, static_argnames=("k", "group", "interpret"))
 def fused_scan_pallas(
     packed: jax.Array,

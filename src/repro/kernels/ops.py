@@ -8,23 +8,37 @@ backend:
 
 Every function here is shape/dtype-stable across backends; tests assert
 exact agreement.
+
+Batched entry points (`*_batch`): every encoding's block layout is
+page-count-agnostic — BITPACK/DICT/DELTA pages are (nblocks, k, 128) and
+RLE pages are (nblk, 128) — so compatible pages from MANY row groups
+stack along the leading block axis and decode in ONE device dispatch.
+Inputs are stacked host (numpy) buffers; the leading axis is padded to a
+power-of-two bucket size BEFORE the jitted call, so the whole scan reuses
+a handful of compiled traces instead of re-tracing per row-group count.
+The module-level dispatch counter underneath `dispatch_count()` is the
+benchmarks' device-dispatch metric: each public entry here counts the
+launches it issues (a batch call counts ONE however many pages it
+carries).
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.bitunpack import bitunpack_pallas
 from repro.kernels.bloom_probe import bloom_probe_pallas
 from repro.kernels.delta_decode import delta_decode_pallas
-from repro.kernels.dict_decode import dict_decode_pallas
+from repro.kernels.dict_decode import dict_decode_batch_pallas, dict_decode_pallas
 from repro.kernels.filter_compact import filter_compact_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.fused_scan import fused_scan_pallas
+from repro.kernels.fused_scan import fused_scan_batch_pallas, fused_scan_pallas
 from repro.kernels.rle_decode import rle_decode_pallas
 
 
@@ -36,9 +50,52 @@ def _resolve(backend: str) -> Tuple[str, bool]:
     return backend, not on_tpu
 
 
+# ---------------------------------------------------------------------------
+# device-dispatch accounting (the batching benchmark's currency)
+# ---------------------------------------------------------------------------
+
+_DISPATCHES = 0
+
+
+def _count(n: int = 1) -> None:
+    global _DISPATCHES
+    _DISPATCHES += n
+
+
+def dispatch_count() -> int:
+    """Device dispatches issued through this module since the last reset.
+    One public decode/filter call counts one dispatch per kernel launch it
+    issues (filter_compact's two-half int path counts two); a `*_batch`
+    call counts ONE regardless of how many pages it carries."""
+    return _DISPATCHES
+
+
+def reset_dispatch_count() -> int:
+    """Zero the dispatch counter; returns the value it had."""
+    global _DISPATCHES
+    n, _DISPATCHES = _DISPATCHES, 0
+    return n
+
+
+def bucket_blocks(n: int) -> int:
+    """Pad a stacked block count to its power-of-two bucket, so batch
+    launches hit a small, reused set of jit traces (shape-stable jit)."""
+    assert n > 0, n
+    return 1 << (n - 1).bit_length()
+
+
+def device_put(buf) -> jax.Array:
+    """Counted host->device transfer: PLAIN 'decode' is a device put, and
+    the dispatch metric must see it on both the sequential path (one put
+    per page) and the batched path (one put per stacked bucket)."""
+    _count()
+    return jnp.asarray(buf)
+
+
 def bitunpack(packed, k: int, n: Optional[int] = None, *, backend: str = "auto"):
     """(nblocks,k,128) uint32 -> flat (n,) int32 (or (nb,32,128) if n is None)."""
     backend, interp = _resolve(backend)
+    _count()
     out = (
         bitunpack_pallas(packed, k, interpret=interp)
         if backend == "pallas"
@@ -49,6 +106,7 @@ def bitunpack(packed, k: int, n: Optional[int] = None, *, backend: str = "auto")
 
 def dict_decode(packed, dictionary, k: int, n: Optional[int] = None, *, backend="auto"):
     backend, interp = _resolve(backend)
+    _count()
     out = (
         dict_decode_pallas(packed, dictionary, k, interpret=interp)
         if backend == "pallas"
@@ -59,6 +117,7 @@ def dict_decode(packed, dictionary, k: int, n: Optional[int] = None, *, backend=
 
 def rle_decode(values, ends, n: Optional[int] = None, *, backend="auto"):
     backend, interp = _resolve(backend)
+    _count()
     out = (
         rle_decode_pallas(values, ends, interpret=interp)
         if backend == "pallas"
@@ -69,6 +128,7 @@ def rle_decode(values, ends, n: Optional[int] = None, *, backend="auto"):
 
 def delta_decode(packed, bases, k: int, n: Optional[int] = None, *, backend="auto"):
     backend, interp = _resolve(backend)
+    _count()
     out = (
         delta_decode_pallas(packed, bases, k, interpret=interp)
         if backend == "pallas"
@@ -90,6 +150,7 @@ def filter_compact(values, mask, *, backend="auto"):
         else ref.filter_compact
     )
     if jnp.issubdtype(values.dtype, jnp.integer):
+        _count(2)
         v = values.astype(jnp.int32)
         hi16 = jax.lax.shift_right_arithmetic(v, 16)
         lo16 = v & 0xFFFF
@@ -97,6 +158,7 @@ def filter_compact(values, mask, *, backend="auto"):
         clo, _ = fn(lo16, mask)
         out = jax.lax.shift_left(chi.astype(jnp.int32), 16) | clo.astype(jnp.int32)
         return out.astype(values.dtype), cnt
+    _count()
     return fn(values, mask)
 
 
@@ -107,6 +169,7 @@ def bloom_build(keys, n_bits: int, n_hashes: int = 4):
 def bloom_probe(keys, bits, n_hashes: int = 4, *, backend="auto"):
     """keys (nblk,1024) -> membership (nblk,1024) bool."""
     backend, interp = _resolve(backend)
+    _count()
     if backend == "pallas":
         return bloom_probe_pallas(keys, bits, n_hashes=n_hashes, interpret=interp) > 0
     return ref.bloom_probe(keys, bits, n_hashes)
@@ -114,12 +177,171 @@ def bloom_probe(keys, bits, n_hashes: int = 4, *, backend="auto"):
 
 def fused_scan(packed, k: int, lo, hi, dictionary=None, *, backend="auto"):
     backend, interp = _resolve(backend)
+    _count()
     lo = jnp.asarray(lo, jnp.int32)
     hi = jnp.asarray(hi, jnp.int32)
     if backend == "pallas":
         mask, cnt = fused_scan_pallas(packed, k, lo, hi, dictionary, interpret=interp)
         return mask > 0, cnt
     return ref.fused_scan(packed, k, lo, hi, dictionary)
+
+
+# ---------------------------------------------------------------------------
+# batched multi-page decode: one launch per (encoding, k, dtype) bucket
+# ---------------------------------------------------------------------------
+#
+# The jitted reference implementations below are what makes the ref backend
+# a single dispatch per bucket too: eager jnp would issue one executable
+# per primitive, but jax.jit with a static k and a bucket-padded leading
+# axis compiles each (k, bucket_blocks) shape once and replays it.
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _ref_bitunpack_batch(packed, k: int):
+    return ref.bitunpack(packed, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _ref_dict_decode_batch(packed, dicts, sizes, k: int):
+    codes = ref.bitunpack(packed, k)  # (nb, 32, 128) int32, >= 0
+    lim = (sizes - 1).astype(jnp.int32)  # (nb, 1)
+    c = jnp.clip(codes, 0, lim[:, :, None])  # per-block mode="clip"
+    flat = jnp.take_along_axis(dicts, c.reshape(c.shape[0], -1), axis=1)
+    return flat.reshape(codes.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _ref_delta_decode_batch(packed, bases, k: int):
+    return ref.delta_decode(packed, bases, k)
+
+
+@jax.jit
+def _ref_rle_decode_batch(values, ends):
+    return ref.rle_decode(values, ends)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _ref_fused_scan_batch(packed, lohi, k: int):
+    from repro.lakeformat.encodings import PACK_BLOCK
+
+    vals = ref.bitunpack(packed, k).reshape(packed.shape[0], PACK_BLOCK)
+    return (vals >= lohi[:, 0:1]) & (vals <= lohi[:, 1:2])
+
+
+def _pad_blocks(arr: np.ndarray, target: int, fill=0) -> np.ndarray:
+    """Host-side leading-axis pad to the bucket size.  Padding happens
+    BEFORE the jitted call on purpose: padding inside the trace would key
+    the jit cache on the raw block count and defeat bucketing."""
+    nb = arr.shape[0]
+    if nb == target:
+        return arr
+    pad = np.full((target - nb,) + arr.shape[1:], fill, dtype=arr.dtype)
+    return np.concatenate([arr, pad], axis=0)
+
+
+def bitunpack_batch(packed: np.ndarray, k: int, *, backend: str = "auto"):
+    """Stacked (nblocks,k,128) uint32 pages -> (nblocks,32,128) int32 in
+    ONE dispatch.  `packed` is a host (numpy) stack; the leading axis is
+    bucket-padded host-side so jit traces are reused."""
+    backend, interp = _resolve(backend)
+    nb = packed.shape[0]
+    padded = _pad_blocks(packed, bucket_blocks(nb))
+    _count()
+    out = (
+        bitunpack_pallas(padded, k, interpret=interp)
+        if backend == "pallas"
+        else _ref_bitunpack_batch(padded, k)
+    )
+    return out[:nb]
+
+
+def dict_decode_batch(
+    packed: np.ndarray,
+    dicts: np.ndarray,
+    sizes: np.ndarray,
+    page: np.ndarray,
+    k: int,
+    *,
+    backend: str = "auto",
+):
+    """Multi-page dict decode in ONE dispatch.
+
+    packed (nblocks,k,128) uint32 stacked codes; dicts (P, Dmax) page
+    dictionaries padded to a common width; sizes (P,) true lengths;
+    page (nblocks,) block -> source-page index.  Returns
+    (nblocks,32,128) values of dicts.dtype, bit-identical per page to
+    `dict_decode(packed_p, dicts[p, :sizes[p]], k)`.
+    """
+    backend, interp = _resolve(backend)
+    nb = packed.shape[0]
+    target = bucket_blocks(nb)
+    padded = _pad_blocks(packed, target)
+    page = _pad_blocks(np.asarray(page, np.int32), target)
+    d_blocks = np.ascontiguousarray(dicts[page])  # (nb_pad, Dmax)
+    s_blocks = np.asarray(sizes, np.int32)[page][:, None]  # (nb_pad, 1)
+    np.maximum(s_blocks, 1, out=s_blocks)
+    _count()
+    out = (
+        dict_decode_batch_pallas(padded, d_blocks, s_blocks, k, interpret=interp)
+        if backend == "pallas"
+        else _ref_dict_decode_batch(padded, d_blocks, s_blocks, k)
+    )
+    return out[:nb]
+
+
+def delta_decode_batch(packed: np.ndarray, bases: np.ndarray, k: int, *, backend="auto"):
+    """Stacked (nblocks,k,128) zigzag deltas + (nblocks,) bases ->
+    (nblocks,4096) int32 in ONE dispatch (blocks are self-contained)."""
+    backend, interp = _resolve(backend)
+    nb = packed.shape[0]
+    target = bucket_blocks(nb)
+    padded = _pad_blocks(packed, target)
+    bases = _pad_blocks(np.asarray(bases, np.int32), target)
+    _count()
+    out = (
+        delta_decode_pallas(padded, bases, k, interpret=interp)
+        if backend == "pallas"
+        else _ref_delta_decode_batch(padded, bases, k)
+    )
+    return out[:nb]
+
+
+def rle_decode_batch(values: np.ndarray, ends: np.ndarray, *, backend="auto"):
+    """Stacked (nblk,128) run values + ends -> (nblk,1024) in ONE dispatch
+    (the writer clips runs at block boundaries, so blocks are independent)."""
+    backend, interp = _resolve(backend)
+    nb = values.shape[0]
+    target = bucket_blocks(nb)
+    values = _pad_blocks(values, target)
+    ends = _pad_blocks(ends, target)
+    _count()
+    out = (
+        rle_decode_pallas(values, ends, interpret=interp)
+        if backend == "pallas"
+        else _ref_rle_decode_batch(values, ends)
+    )
+    return out[:nb]
+
+
+def fused_scan_batch(packed: np.ndarray, k: int, lo: np.ndarray, hi: np.ndarray,
+                     *, backend="auto"):
+    """Batched fused decode+filter: stacked (nblocks,k,128) pages with
+    PER-BLOCK int bounds lo/hi (nblocks,) -> survivor mask
+    (nblocks,4096) bool in ONE dispatch.  Per-block bounds are what let
+    DICT pages ride along: each row group's range is rewritten onto its
+    own codes, so bounds differ across the stack."""
+    backend, interp = _resolve(backend)
+    nb = packed.shape[0]
+    target = bucket_blocks(nb)
+    padded = _pad_blocks(packed, target)
+    lohi = np.stack([np.asarray(lo, np.int32), np.asarray(hi, np.int32)], axis=1)
+    lohi = _pad_blocks(lohi, target)
+    lohi[nb:, 0], lohi[nb:, 1] = 1, 0  # padded blocks match nothing
+    _count()
+    if backend == "pallas":
+        return fused_scan_batch_pallas(padded, k, jnp.asarray(lohi),
+                                       interpret=interp)[:nb] > 0
+    return _ref_fused_scan_batch(padded, lohi, k)[:nb]
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, scale=None, backend="auto",

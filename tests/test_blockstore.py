@@ -201,6 +201,54 @@ if HAVE_HYPOTHESIS:
                 store.advance_tick(store.tick + 1)
                 assert store.used == sum(e.nbytes for e in store._entries.values())
 
+    VICTIM_OPS = st_.lists(
+        st_.tuples(
+            st_.integers(0, 3),  # 0=put 1=get 2=pinned put 3=tick advance
+            st_.integers(0, 9),  # key
+            st_.integers(1, 64),  # nbytes (>= 1 so one eviction frees bytes)
+            st_.sampled_from(["plain", "bitpack", "dict", "delta", "rle"]),
+        ),
+        min_size=1, max_size=80,
+    )
+
+    @settings(deadline=None, max_examples=150)
+    @given(ops=VICTIM_OPS)
+    def test_heap_victim_matches_linear_selection(ops):
+        """The lazy-invalidation eviction heap must pick exactly the victim
+        the old O(n) linear scan picked — lowest re-creation seconds per
+        byte, LRU tie-break, pins skipped — across op sequences that churn
+        the heap with stale records: re-puts (re-price + resize), gets
+        (re-rank), window pins, and tick advances (pin expiry + ephemeral
+        drops).  Drains the store victim by victim at the end, checking
+        every single selection against the oracle."""
+        store = BlockStore(capacity_bytes=1 << 20)
+        for op, key, nb, enc in ops:
+            if op == 0:
+                store.put(key, _arr(nb), encoding=enc)
+            elif op == 1:
+                store.get(key)
+            elif op == 2:
+                store.window(expires_tick=store.tick + 2).put(
+                    key, _arr(nb), encoding=enc)
+            else:
+                store.advance_tick(store.tick + 1)
+        while True:
+            oracle = store._victims_linear()
+            if not oracle:
+                # nothing evictable (empty, or every survivor is pinned):
+                # the heap must agree — an evict attempt changes nothing
+                before = dict(store._entries)
+                store._evict(1)
+                assert dict(store._entries) == before
+                break
+            want = oracle[0].key
+            used0 = store.used
+            store._evict(1)  # evicts exactly the top-ranked victim
+            assert want not in store._entries
+            assert store.used == used0 - oracle[0].nbytes
+            for e in oracle[1:]:  # nothing beyond the chosen victim went
+                assert e.key in store._entries
+
     @settings(deadline=None, max_examples=100)
     @given(
         entries=st_.lists(

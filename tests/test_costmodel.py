@@ -156,6 +156,42 @@ def test_fused_predicate_column_priced_but_not_materialized(lineitem):
         sum(c.seconds for c in c_n))  # same decode work either way
 
 
+def test_fused_decode_work_uses_footer_dtype_width(lineitem):
+    """Regression: `scan_row_group` used to charge the fused predicate
+    column's decode work at a hardcoded `L * 4` whatever the column's
+    dtype; it must use the footer dtype width, exactly like
+    `decode_footprint` sizes the estimate.  Pinned on a NON-float32 fused
+    scan (int32 BITPACK predicate) by asserting the engine's per-encoding
+    decode_work dict equals the footprint-derived bytes EXACTLY — so
+    estimate == actual in both the bytes and the seconds domain."""
+    plan = ScanPlan("lineitem", ["l_extendedprice"], Cmp("l_quantity", "le", 10))
+    eng = DatapathEngine(backend="ref", cache=BlockCache(1 << 30))
+    pred = bind_expr(plan.predicate, lineitem)
+    rgs = prune_row_groups(lineitem, pred)
+    res = eng.scan(lineitem, plan, row_groups=rgs)
+    assert res.stats.fused  # precondition: the fast path really fused
+    meta = lineitem.row_group_meta(rgs[0])["columns"]["l_quantity"]
+    assert np.dtype(meta["dtype"]) == np.int32  # precondition: non-float32
+    # footprint-derived ground truth: processed bytes by encoding, at the
+    # footer dtype width (materialized or not)
+    want = {}
+    for fp in eng.decode_footprint(lineitem, plan, rgs, pred=pred):
+        for col in fp["columns"].values():
+            want[col["encoding"]] = want.get(col["encoding"], 0) + col["nbytes"]
+    assert res.stats.decode_work == want
+    # and the seconds estimate prices to exactly the same number
+    cm = CostModel()
+    est_s = sum(c.seconds for c in
+                cm.estimate_row_groups(eng, lineitem, plan, rgs, pred=pred))
+    actual_s = (sum(cm.decode_seconds(b, e) for e, b in res.stats.decode_work.items())
+                + cm.launch_seconds(res.stats.kernel_launches))
+    assert est_s == pytest.approx(actual_s)
+    # the batched path records the identical decode_work
+    res_b = DatapathEngine(backend="ref", cache=BlockCache(1 << 30)).scan(
+        lineitem, plan, row_groups=rgs, batched=True)
+    assert res_b.stats.decode_work == want
+
+
 def test_estimates_use_padded_rows(lineitem):
     """The short last row group still bills a full PACK_BLOCK of output."""
     last = lineitem.n_row_groups - 1
