@@ -41,6 +41,14 @@ multi-column whole-table scan: device dispatches (kernels.ops'
 dispatch counter), wall time, decode launches, and — with the slice
 pipeline — the netsim fetch/decode overlap at slice granularity.
 
+The `trace` sub-report A/Bs the flight recorder (datapath/trace.py) on
+the skewed elephant/mice workload: the same run with per-request span
+tracing on (sample_rate=1) vs off (sample_rate=0), reporting the wall
+overhead ratio (must stay under ~5%), result bit-identity, the Chrome-
+trace event count, and the trace-derived per-request stage attribution
+(decode/filter/rest % of wall) printed against the paper's Fig. 2
+46/17/37 anchor — the observability claim as a measured point.
+
 Reported rows:
     service.independent    N direct DatapathEngine.scan() calls
     service.coalesced      same scans through one DatapathService tick
@@ -51,6 +59,7 @@ Reported rows:
     service.costmodel.*    calibrated rates + 4x-under-estimator shares
     service.blockstore.*   late-partner retained reuse + tier ledger
     service.batchdecode.*  dispatch counts + wall, batched vs sequential
+    service.trace.*        tracing overhead + stage attribution vs Fig. 2
 """
 
 from __future__ import annotations
@@ -61,6 +70,7 @@ from repro.core import BlockCache, DatapathEngine, tpch
 from repro.core.plan import Cmp, ScanPlan
 from repro.core.queries import QUERIES, run_via_service
 from repro.datapath import (
+    PAPER_FIG2_PCT,
     AdaptiveOffloadPolicy,
     CostModel,
     DatapathService,
@@ -364,6 +374,78 @@ def run_blockstore(sf: float = 0.1) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# trace sub-report: flight-recorder overhead + paper-anchored attribution
+# ---------------------------------------------------------------------------
+
+def _run_traced_skew(reader, sample_rate: float):
+    """The fairness elephant/mice workload with the flight recorder at
+    `sample_rate`; returns (service, results, wall_s)."""
+    import time as _time
+
+    rg_cost = FAIR_RG_ROWS * 4 * 2
+    t0 = _time.perf_counter()
+    svc = DatapathService(
+        engine=DatapathEngine(backend="ref", cache=BlockCache(4 << 30)),
+        policy=StaticPolicy("raw"), scheduler="wfq",
+        tick_bytes=int(rg_cost * 1.5),
+        trace_sample_rate=sample_rate, trace_capacity=16,
+    )
+    tickets = [svc.submit("elephant", reader, _elephant_plan())]
+    tickets += [svc.submit(f"mouse{i}", reader, _mouse_plan(d))
+                for i, d in enumerate((300, 900, 1500))]
+    svc.drain()
+    wall = _time.perf_counter() - t0
+    return svc, tickets, wall
+
+
+def run_trace(sf: float = 0.1) -> dict:
+    import numpy as np
+
+    reader = fairness_setup(sf)
+    _run_traced_skew(reader, 0.0)  # warmup: jit compiles + file cache
+    svc_off, res_off, wall_off = _run_traced_skew(reader, 0.0)
+    svc_on, res_on, wall_on = _run_traced_skew(reader, 1.0)
+
+    bit_identical = all(
+        a.status == b.status == "done"
+        and int(a.result.count) == int(b.result.count)
+        and all(np.array_equal(np.asarray(a.result.columns[c]),
+                               np.asarray(b.result.columns[c]))
+                for c in a.result.columns)
+        for a, b in zip(res_on, res_off)
+    )
+    overhead = wall_on / max(wall_off, 1e-9)
+
+    rep = svc_on.telemetry.trace_report()
+    pct = rep["stage_pct"]
+    chrome_events = len(svc_on.tracer.recorder.to_chrome_trace()["traceEvents"])
+    row("service.trace.overhead", wall_on,
+        f"wall_off_s={wall_off:.3f};ratio={overhead:.3f}x;"
+        f"bit_identical={bit_identical};"
+        f"recorded={rep['recorded']}/{rep['completed']};"
+        f"chrome_events={chrome_events}")
+    row("service.trace.stages", 0.0,
+        f"decode={pct['decode']:.1f}%;filter={pct['filter']:.1f}%;"
+        f"rest={pct['rest']:.1f}%"
+        f" (paper fig2: decode={PAPER_FIG2_PCT['decode']:.0f}%"
+        f"/filter={PAPER_FIG2_PCT['filter']:.0f}%)")
+    return {
+        "wall_traced_s": wall_on,
+        "wall_untraced_s": wall_off,
+        "overhead_ratio": overhead,
+        "bit_identical": bit_identical,
+        "recorded": rep["recorded"],
+        "completed": rep["completed"],
+        "chrome_events": chrome_events,
+        "decode_pct": pct["decode"],
+        "filter_pct": pct["filter"],
+        "rest_pct": pct["rest"],
+        "stage_s": rep["stage_s"],
+        "paper_fig2_pct": dict(sorted(PAPER_FIG2_PCT.items())),
+    }
+
+
+# ---------------------------------------------------------------------------
 # batchdecode sub-report: bucketed batch launches vs per-(rg, column) loop
 # ---------------------------------------------------------------------------
 
@@ -516,12 +598,14 @@ def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
     costmodel = run_costmodel(sf)
     blockstore = run_blockstore(sf)
     batchdecode = run_batchdecode(sf)
+    tracing = run_trace(sf)
 
     return {
         "fairness": fairness,
         "costmodel": costmodel,
         "blockstore": blockstore,
         "batchdecode": batchdecode,
+        "trace": tracing,
         "n_tenants": n_tenants,
         "independent_fresh_decoded_bytes": ind_fresh,
         "service_fresh_decoded_bytes": svc_fresh,

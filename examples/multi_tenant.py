@@ -128,6 +128,49 @@ def main():
     print(f"  store ledger           : window_hits={st5['window_hits']} " + " ".join(
         f"{t}={v['hits']}h/{v['evictions']}e" for t, v in st5["tiers"].items()))
 
+    # Phase 6 — the flight recorder: re-run the elephant/mice skew with
+    # per-request span tracing, dump a Perfetto-loadable timeline of the
+    # whole run, and print each tenant's decode/filter/rest split next to
+    # the paper's Fig. 2 anchor (46% decode / 17% filter).
+    rec = DatapathService(
+        engine=DatapathEngine(backend="ref", cache=BlockCache(4 << 30)),
+        quotas={"elephant": TenantQuota(weight=2.0)},
+        tick_bytes=int(rg_cost * 1.5),
+        hold_ticks=1,
+        trace_capacity=32,
+    )
+    rec.submit("elephant", readers["lineitem"],
+               ScanPlan("lineitem", ["l_extendedprice", "l_quantity"]))
+    for i in range(args.tenants - 1):
+        rec.submit(f"mouse{i}", readers["lineitem"],
+                   ScanPlan("lineitem", ["l_extendedprice"],
+                            Cmp("l_shipdate", "between",
+                                (300 + 600 * i, 500 + 600 * i))))
+    rec.drain()
+    trep = rec.telemetry.trace_report()
+    trace_path = "/tmp/multi_tenant_trace.json"
+    n_events = rec.tracer.recorder.save_chrome_trace(trace_path)
+    print("\nphase 6 — flight recorder (per-request span tracing):")
+    print(f"  requests traced        : {trep['recorded']}/{trep['completed']}"
+          f" (ring capacity {trep['capacity']})")
+    print(f"  timeline export        : {trace_path} ({n_events} events —"
+          f" load in ui.perfetto.dev)")
+    print("  stage attribution (% of request wall):")
+    print(f"    {'tenant':10s} {'n':>3s} {'decode':>8s} {'filter':>8s}"
+          f" {'fetch':>8s} {'wait':>8s} {'rest':>8s}")
+    for t, bt in trep["by_tenant"].items():
+        waits = bt["stage_pct"]["wfq_wait"] + bt["stage_pct"]["hold_window"]
+        print(f"    {t:10s} {bt['n']:3d} {bt['decode_pct']:7.1f}%"
+              f" {bt['filter_pct']:7.1f}% {bt['stage_pct']['fetch']:7.1f}%"
+              f" {waits:7.1f}% {bt['rest_pct']:7.1f}%")
+    fleet = trep["stage_pct"]
+    anchor = trep["paper_fig2_pct"]
+    print(f"    {'fleet':10s} {trep['recorded']:3d} {fleet['decode']:7.1f}%"
+          f" {fleet['filter']:7.1f}%     ---      ---  {fleet['rest']:7.1f}%")
+    print(f"  paper Fig. 2 anchor    : decode={anchor['decode']:.0f}%"
+          f" filter={anchor['filter']:.0f}% rest={anchor['rest']:.0f}%"
+          f"  (TPC-H on Parquet)")
+
     snap = svc.telemetry.snapshot()
     c = snap["counters"]
     print("\nservice telemetry")

@@ -20,9 +20,13 @@ python -c "from repro.datapath.costmodel import main; import sys; sys.exit(main(
 # (calibrated rates + 4x-under-estimator reconciliation A/B), the
 # `blockstore` sub-report (late-partner retained-decode reuse vs the old
 # tick-scoped pool + per-tier hit/eviction ledger under capacity pressure),
-# and the `batchdecode` sub-report (bucketed batch launches vs the
+# the `batchdecode` sub-report (bucketed batch launches vs the
 # per-(row group, column) loop: device dispatches, wall time, cross-tick
-# fetch/decode pipelining) — appended to the perf trajectory
+# fetch/decode pipelining), and the `trace` sub-report (flight-recorder
+# A/B on the skewed workload: wall overhead ratio, result bit-identity,
+# Chrome-trace event count, and the trace-derived decode/filter/rest
+# stage attribution against the paper's Fig. 2 46/17/37 split) —
+# appended to the perf trajectory
 python -m benchmarks.run --fast --only service --json BENCH_point.json
 python scripts/append_bench_point.py BENCH_point.json BENCH_service.json
 rm -f BENCH_point.json

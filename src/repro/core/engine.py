@@ -69,6 +69,21 @@ from repro.lakeformat.encodings import (
     padded_rows,
 )
 
+# Flight-recorder hook: the repro.datapath.trace MODULE, installed by the
+# datapath scheduler at its import time (engine cannot import datapath —
+# that would close an import cycle through the package __init__).  None
+# for library users who never touch the service, so direct scans pay one
+# module-attribute load and nothing else.
+TRACE = None
+
+
+def _tr():
+    """The trace module iff a traced service slice is executing right
+    now, else None.  Call sites gate EVERY span kwarg construction on
+    this, which is what keeps the untraced hot path allocation-free."""
+    t = TRACE
+    return t if t is not None and t._CUR is not None else None
+
 
 @dataclasses.dataclass
 class ScanStats:
@@ -236,7 +251,13 @@ class DatapathEngine:
         if precomputed is not None:
             arr = precomputed  # bucket launch already counted by the caller
         else:
+            tr = _tr()
+            if tr is not None:
+                tr.begin("decode_launch", rg=rg, column=name,
+                         encoding=col.encoding.value, rows=L)
             arr = self._decode_host(col, L) if self.backend == "host" else self._decode_device(col, L)
+            if tr is not None:
+                tr.end(name="decode_launch", nbytes=int(arr.nbytes))
             if stats is not None:
                 stats.kernel_launches += 1
         enc_name = col.encoding.value if col is not None else None
@@ -299,6 +320,19 @@ class DatapathEngine:
                 m = m | self._eval(c, cols, blooms)
             return m
         raise TypeError(e)
+
+    def _eval_mask(self, pred: Optional[Expr], cols, blooms, L: int, rg: int):
+        """Predicate eval wrapped in a `filter` span (no predicate: an
+        all-true validity mask, not filter work, so no span)."""
+        if pred is None:
+            return jnp.ones((L,), jnp.bool_)
+        tr = _tr()
+        if tr is not None:
+            tr.begin("filter", rg=rg, rows=L)
+        mask = self._eval(pred, cols, blooms)
+        if tr is not None:
+            tr.end(name="filter")
+        return mask
 
     # ------------------------------------------------------------------
     # fused decode+filter fast path
@@ -377,8 +411,14 @@ class DatapathEngine:
                     stats.page_hit_bytes += page.encoded_bytes()
         fetched = False
         if missing:
+            tr = _tr()
+            if tr is not None:
+                tr.begin("fetch", rg=rg, columns=len(missing))
             got = reader.read_encoded(rg, missing)
-            stats.encoded_bytes += sum(c.encoded_bytes() for c in got.values())
+            nb = sum(c.encoded_bytes() for c in got.values())
+            if tr is not None:
+                tr.end(name="fetch", nbytes=nb)
+            stats.encoded_bytes += nb
             enc.update(got)
             fetched = True
             if mode in ("preloaded", "prefiltered"):
@@ -538,11 +578,7 @@ class DatapathEngine:
                     reader, rg, name, None, L, offload=offload, pool=pool, stats=stats
                 )
                 cols[name] = arr
-            mask = (
-                self._eval(pred, cols, blooms)
-                if pred is not None
-                else jnp.ones((L,), jnp.bool_)
-            )
+            mask = self._eval_mask(pred, cols, blooms, L, rg)
             mask = mask & (jnp.arange(L) < n)
             return cols, mask
 
@@ -559,6 +595,9 @@ class DatapathEngine:
                 stats.decode_work.get(fe, 0) + L * self._fused_width(reader, rg, pred)
             )
             stats.kernel_launches += 1
+            tr = _tr()
+            if tr is not None:
+                tr.begin("decode_launch", rg=rg, encoding=fe, fused=True, rows=L)
             fmask, _ = ops.fused_scan(
                 jnp.asarray(enc[pred.column].buffers["packed"]),
                 enc[pred.column].k,
@@ -566,6 +605,8 @@ class DatapathEngine:
                 hi,
                 backend=self.backend,
             )
+            if tr is not None:
+                tr.end(name="decode_launch")
             fmask = fmask.reshape(-1)[:L]
             for name in proj:
                 arr, _ = self._decode_column(
@@ -579,11 +620,7 @@ class DatapathEngine:
                     reader, rg, name, enc[name], L, offload=offload, pool=pool, stats=stats
                 )
                 cols[name] = arr
-            mask = (
-                self._eval(pred, cols, blooms)
-                if pred is not None
-                else jnp.ones((L,), jnp.bool_)
-            )
+            mask = self._eval_mask(pred, cols, blooms, L, rg)
 
         mask = mask & (jnp.arange(L) < n)  # row validity
         for name in need:
@@ -684,11 +721,7 @@ class DatapathEngine:
                     cols[name] = self._serve_resident(
                         reader, rg, name, L, mode, offload, pool, stats, fetched
                     )
-                mask = (
-                    self._eval(pred, cols, blooms)
-                    if pred is not None
-                    else jnp.ones((L,), jnp.bool_)
-                )
+                mask = self._eval_mask(pred, cols, blooms, L, rg)
                 per_rg.append((cols, mask & (jnp.arange(L) < n)))
                 continue
             enc = slot["enc"]
@@ -714,11 +747,7 @@ class DatapathEngine:
                         pool=pool, stats=stats, precomputed=decoded.get((rg, name)),
                     )
                     cols[name] = arr
-                mask = (
-                    self._eval(pred, cols, blooms)
-                    if pred is not None
-                    else jnp.ones((L,), jnp.bool_)
-                )
+                mask = self._eval_mask(pred, cols, blooms, L, rg)
             mask = mask & (jnp.arange(L) < n)
             for name in need:
                 cols.setdefault(name, None)
@@ -748,7 +777,12 @@ class DatapathEngine:
                     stats.page_hits += 1
                     stats.page_hit_bytes += col.encoded_bytes()
             if col is None:
+                tr = _tr()
+                if tr is not None:
+                    tr.begin("fetch", rg=rg, columns=1)
                 col = reader.read_encoded(rg, [name])[name]
+                if tr is not None:
+                    tr.end(name="fetch", nbytes=col.encoded_bytes())
                 stats.encoded_bytes += col.encoded_bytes()
                 if rg not in fetched:
                     fetched.append(rg)
@@ -799,9 +833,25 @@ class DatapathEngine:
         be = self.backend
         decoded: Dict[tuple, jax.Array] = {}
         for bkey, items in buckets.items():
+            tr = _tr()
+            if tr is not None:
+                launches0 = stats.kernel_launches
+                pad0 = stats.batch_pad_blocks
+                tr.begin("decode_launch",
+                         bucket="/".join(str(p) for p in bkey),
+                         pages=len(items))
             decoded.update(self._decode_bucket(bkey, items, be, stats))
+            if tr is not None:
+                tr.end(name="decode_launch",
+                       launches=stats.kernel_launches - launches0,
+                       pad_blocks=stats.batch_pad_blocks - pad0)
         fmasks: Dict[int, jax.Array] = {}
         for k, items in sorted(fused_items.items()):
+            tr = _tr()
+            if tr is not None:
+                pad0 = stats.batch_pad_blocks
+                tr.begin("decode_launch", bucket=f"fused/k{k}",
+                         pages=len(items), fused=True)
             packed = np.concatenate([it["packed"] for it in items], axis=0)
             blocks = [it["packed"].shape[0] for it in items]
             lo = np.concatenate(
@@ -815,6 +865,9 @@ class DatapathEngine:
             for b, it in zip(blocks, items):
                 fmasks[it["rg"]] = mask[s:s + b].reshape(-1)[: it["L"]]
                 s += b
+            if tr is not None:
+                tr.end(name="decode_launch", launches=1,
+                       pad_blocks=stats.batch_pad_blocks - pad0)
         return decoded, fmasks
 
     @staticmethod
@@ -1090,7 +1143,12 @@ class ResumableScan:
         mask = jnp.concatenate(self._per_rg_mask)
         count = jnp.sum(mask.astype(jnp.int32))
         if self.plan.compact:
+            tr = _tr()
+            if tr is not None:
+                tr.begin("filter", compact=True, rows=int(mask.shape[0]))
             out_cols, mask, count = self.engine._compact(out_cols, mask)
+            if tr is not None:
+                tr.end(name="filter")
         result = ScanResult(out_cols, mask, count, self.stats)
         self.stats.rows_out = int(count)
         if self.offload == "prefiltered":

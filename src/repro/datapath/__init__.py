@@ -21,10 +21,14 @@ netsim.py     storage->NIC bandwidth/latency model, prefetch overlap
 policy.py     adaptive raw/preloaded/prefiltered choice per request
               (residency read per tier from the store), hold-window
               footprint compatibility
-telemetry.py  queue depth, decoded-bytes-saved, per-tenant p50/p99,
+telemetry.py  queue depth, decoded-bytes-saved, per-tenant p50/p99/p99.9,
               fair-share metrics (Jain index, held-request latency,
               window-retained bytes), estimated-vs-actual decode-cost
               ledger, per-tier store ledger
+trace.py      flight recorder: per-request span trees (admission / waits
+              / slices / fetch / decode / filter / reconcile), bounded
+              ring of completed traces, Chrome-trace export, and the
+              paper-anchored decode/filter/rest stage attribution
 
 See DESIGN.md §8–§9 and §11.  The synchronous per-caller path
 (core/engine.py) remains the substrate; the service schedules it — at
@@ -67,3 +71,10 @@ from repro.datapath.service import (  # noqa: F401
     Ticket,
 )
 from repro.datapath.telemetry import Telemetry, jain_index, quantile  # noqa: F401
+from repro.datapath.trace import (  # noqa: F401
+    PAPER_FIG2_PCT,
+    STAGES,
+    FlightRecorder,
+    RequestTrace,
+    Tracer,
+)

@@ -45,6 +45,7 @@ import heapq
 import itertools
 from typing import Any, Dict, Hashable, List, Optional, Tuple
 
+from repro.datapath import trace
 from repro.datapath.costmodel import CostModel
 
 TIERS = ("encoded", "decoded", "prefiltered")
@@ -200,6 +201,9 @@ class BlockStore:
         st.hits += 1
         st.hit_bytes += e.nbytes
         st.redecode_saved_s += e.redecode_s
+        if trace._CUR is not None:  # flight recorder: hit inside a slice
+            trace.event("store_hit", tier=e.tier, nbytes=e.nbytes,
+                        saved_s=e.redecode_s)
         self.touch(e)
         return e.value
 
@@ -337,6 +341,8 @@ class BlockStore:
             self.used -= victim.nbytes
             need_bytes -= victim.nbytes
             self._tier_stats[victim.tier].evictions += 1
+            if trace._CUR is not None:  # eviction forced by a traced slice
+                trace.event("evict", tier=victim.tier, nbytes=victim.nbytes)
 
     def advance_tick(self, tick: int) -> None:
         """Move the window clock: pins whose window ended become evictable,
@@ -501,10 +507,15 @@ class StoreView:
         self.store.window_hits += 1
         self.store.window_hit_bytes += e.nbytes
         self.store.window_saved_s += e.redecode_s
-        if -1 < e.pin_tick < self.store.tick:  # pinned by an earlier tick
+        retained = -1 < e.pin_tick < self.store.tick  # pinned by an earlier tick
+        if retained:
             self.retained_hits += 1
             self.retained_hit_bytes += e.nbytes
             self.retained_saved_s += e.redecode_s
+        if trace._CUR is not None:  # flight recorder: window-pool hit
+            trace.event("store_hit", tier="decoded", window=True,
+                        retained=retained, nbytes=e.nbytes,
+                        saved_s=e.redecode_s)
         self.store.touch(e)
         return e.value
 

@@ -86,14 +86,29 @@ class SliceClock:
         self.serial_s = 0.0
         self.slices = 0
 
-    def feed(self, nbytes: int, decode_seconds: float) -> None:
+    def feed(self, nbytes: int, decode_seconds: float) -> Dict[str, float]:
+        """Advance the clock by one slice; returns that slice's fetch
+        anatomy so the flight recorder can show hidden-vs-exposed fetch
+        time PER SLICE: `exposed_s` is how long the decoder actually
+        stalled waiting for this slice's fetch to land (including link
+        backlog), `hidden_s` the part of the transfer that overlapped
+        earlier decode work."""
         fetch_s = self.link.fetch_seconds(nbytes) if nbytes > 0 else 0.0
         fetch_done = self.link_free + fetch_s
         start = max(fetch_done, self.device_free)
+        exposed = max(0.0, fetch_done - self.device_free)
         self.device_free = start + decode_seconds
         self.link_free = fetch_done  # the next slice's fetch follows at once
         self.serial_s += fetch_s + decode_seconds
         self.slices += 1
+        return {
+            "fetch_s": fetch_s,
+            "decode_s": decode_seconds,
+            "exposed_s": exposed,
+            "hidden_s": max(0.0, fetch_s - exposed),
+            "start_s": start,
+            "done_s": self.device_free,
+        }
 
     @property
     def overlapped_s(self) -> float:

@@ -55,8 +55,17 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
+from repro.core import engine as _engine_mod
 from repro.core.engine import ResumableScan
+from repro.datapath import trace
 from repro.datapath.policy import coalesce_compatible
+
+# Install the engine's flight-recorder hook (engine.TRACE).  The engine
+# cannot import repro.datapath — that would close an import cycle through
+# the package __init__ — so the scheduler, which every traced slice flows
+# through, hands it the trace module once at import time.  Library users
+# who never import the datapath keep TRACE = None and pay nothing.
+_engine_mod.TRACE = trace
 
 
 def _retained_resident(service, req) -> bool:
@@ -246,6 +255,24 @@ def form_batch(service) -> List[Tuple[object, List[int]]]:
             tel.inc("held_requests")
         tel.inc("held_ticks")
 
+    # -- flight recorder: attribute this tick's queued time by WHY the
+    #    request waited.  Held requests sit in a hold_window span; eligible
+    #    requests the fair scheduler passed over sit in wfq_wait.  The wait
+    #    spans close the instant run_tick dispatches a slice, so waiting
+    #    and executing can never overlap in the span tree.
+    tracer = service.tracer
+    if tracer is not None and tracer.has_live():
+        for req in held:
+            rt = tracer.live(req.req_id)
+            if rt is not None:
+                tracer.wait(rt, "hold_window", tick=service._tick)
+        for req in eligible:
+            if req.req_id in units:
+                continue
+            rt = tracer.live(req.req_id)
+            if rt is not None:
+                tracer.wait(rt, "wfq_wait", tick=service._tick)
+
     return [units[rid] for rid in order]
 
 
@@ -263,6 +290,7 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
         groups.setdefault(req.reader.path, []).append((req, rgs))
 
     tel = service.telemetry
+    tracer = service.tracer
     for _path, group in groups.items():
         # decodes pinned through this window survive `hold_ticks` more
         # ticks, so a late-arriving compatible partner reuses them
@@ -276,81 +304,100 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
         fetches: List[Tuple[object, List[int], int]] = []
         for req, rgs in group:
             pool.owner = req.tenant  # retained pins bill their decoder
+            # flight recorder: the slice span, plus the engine-side slice
+            # context (trace.set_slice) that lets decode/fetch/filter/store
+            # spans attach without a plumbed-through tracer argument
+            rt = tracer.live(req.req_id) if tracer is not None else None
+            if rt is not None:
+                tracer.end_wait(rt)  # waiting ends the moment we dispatch
+                tracer.begin(rt, "slice_dispatch", tick=service._tick,
+                             rgs=len(rgs))
+                trace.set_slice(tracer, rt)
             try:
-                if req.rs is None:  # first dispatch: pin the offload mode
-                    mode = service.policy.choose(
-                        service.engine, req.reader, req.plan, req.blooms,
-                        row_groups=req.row_groups,
-                        selectivity=req.est_rows / max(req.reader.n_rows, 1),
-                    )
-                    tel.inc(f"offload_{mode}")
-                    req.mode = mode
-                    req.rs = ResumableScan(
-                        service.engine, req.reader, req.plan, blooms=req.blooms,
-                        offload=mode, row_groups=req.row_groups,
-                    )
-                rs = req.rs
-                work0 = dict(rs.stats.decode_work)
-                launches0 = rs.stats.kernel_launches
-                if rs.result is None and rgs:
-                    dec0 = rs.stats.decoded_bytes
-                    fetched: List[int] = []
-                    if service.batch_decode:
-                        # the whole WFQ slice goes to the engine as ONE
-                        # batch: pages bucketed by (encoding, k, dtype),
-                        # one kernel launch per bucket, and the engine
-                        # reports which groups actually pulled encoded
-                        # bytes (store-resident groups fetch nothing)
-                        _, fetched = rs.advance_batched(rgs, pool=pool)
-                        tel.inc("batch_slices")
-                        tel.inc("batch_slice_rgs", len(rgs))
-                    else:
-                        # advance one row group at a time so the fetch
-                        # simulation sees exactly the groups that pulled
-                        # encoded bytes — store-resident groups (decoded,
-                        # window-pinned, or page-tier) fetch nothing and
-                        # are skipped at row-group granularity, not per
-                        # slice
-                        for rg in rgs:
-                            enc0 = rs.stats.encoded_bytes
-                            rs.advance([rg], pool=pool)
-                            if rs.stats.encoded_bytes > enc0:
-                                fetched.append(rg)
-                    tel.observe_tenant_bytes(req.tenant, rs.stats.decoded_bytes - dec0)
-                    if fetched:
-                        fetches.append(
-                            (req, fetched, rs.stats.kernel_launches - launches0))
-                if rgs:
-                    # retroactive honesty: the estimate was charged at
-                    # dispatch; re-bill by the decode work the slice REALLY
-                    # did (ScanStats.decode_work — keyed by the encodings
-                    # actually read, immune to mis-estimated requests) plus
-                    # the launches it REALLY dispatched (bucketed batch
-                    # slices launch far fewer than the sequential estimate
-                    # and are refunded the difference).  A cache/pool-
-                    # resident slice did no work — fully refunded.
-                    work = {
-                        e: b - work0.get(e, 0)
-                        for e, b in rs.stats.decode_work.items()
-                        if b - work0.get(e, 0)
-                    }
-                    launches = rs.stats.kernel_launches - launches0
-                    tel.inc("decode_launches", launches)
-                    tel.inc("decode_slice_rgs", len(rgs))  # both dispatch modes
-                    _reconcile_slice(service, req, work, launches)
-            except Exception as e:  # noqa: BLE001 — isolate faulty requests
-                req.ticket.error = e
-                tel.inc("failed")
-                continue
-            if rs.result is not None:
-                res = rs.result
-                req.ticket.result = res
-                tel.inc("decoded_bytes", res.stats.decoded_bytes)
-                tel.inc("decoded_bytes_fresh", res.stats.decoded_bytes_fresh)
-                tel.inc("encoded_bytes", res.stats.encoded_bytes)
-                tel.inc("rows_out", res.stats.rows_out)
-                if res.stats.cache_hit:
-                    tel.inc("prefiltered_hits")
+                try:
+                    if req.rs is None:  # first dispatch: pin the offload mode
+                        mode = service.policy.choose(
+                            service.engine, req.reader, req.plan, req.blooms,
+                            row_groups=req.row_groups,
+                            selectivity=req.est_rows / max(req.reader.n_rows, 1),
+                        )
+                        tel.inc(f"offload_{mode}")
+                        req.mode = mode
+                        req.rs = ResumableScan(
+                            service.engine, req.reader, req.plan, blooms=req.blooms,
+                            offload=mode, row_groups=req.row_groups,
+                        )
+                    rs = req.rs
+                    work0 = dict(rs.stats.decode_work)
+                    launches0 = rs.stats.kernel_launches
+                    if rs.result is None and rgs:
+                        dec0 = rs.stats.decoded_bytes
+                        fetched: List[int] = []
+                        if service.batch_decode:
+                            # the whole WFQ slice goes to the engine as ONE
+                            # batch: pages bucketed by (encoding, k, dtype),
+                            # one kernel launch per bucket, and the engine
+                            # reports which groups actually pulled encoded
+                            # bytes (store-resident groups fetch nothing)
+                            _, fetched = rs.advance_batched(rgs, pool=pool)
+                            tel.inc("batch_slices")
+                            tel.inc("batch_slice_rgs", len(rgs))
+                        else:
+                            # advance one row group at a time so the fetch
+                            # simulation sees exactly the groups that pulled
+                            # encoded bytes — store-resident groups (decoded,
+                            # window-pinned, or page-tier) fetch nothing and
+                            # are skipped at row-group granularity, not per
+                            # slice
+                            for rg in rgs:
+                                enc0 = rs.stats.encoded_bytes
+                                rs.advance([rg], pool=pool)
+                                if rs.stats.encoded_bytes > enc0:
+                                    fetched.append(rg)
+                        tel.observe_tenant_bytes(req.tenant, rs.stats.decoded_bytes - dec0)
+                        if fetched:
+                            fetches.append(
+                                (req, fetched, rs.stats.kernel_launches - launches0))
+                    if rgs:
+                        # retroactive honesty: the estimate was charged at
+                        # dispatch; re-bill by the decode work the slice REALLY
+                        # did (ScanStats.decode_work — keyed by the encodings
+                        # actually read, immune to mis-estimated requests) plus
+                        # the launches it REALLY dispatched (bucketed batch
+                        # slices launch far fewer than the sequential estimate
+                        # and are refunded the difference).  A cache/pool-
+                        # resident slice did no work — fully refunded.
+                        work = {
+                            e: b - work0.get(e, 0)
+                            for e, b in rs.stats.decode_work.items()
+                            if b - work0.get(e, 0)
+                        }
+                        launches = rs.stats.kernel_launches - launches0
+                        tel.inc("decode_launches", launches)
+                        tel.inc("decode_slice_rgs", len(rgs))  # both dispatch modes
+                        if rt is not None:
+                            tracer.begin(rt, "reconcile")
+                        actual_s = _reconcile_slice(service, req, work, launches)
+                        if rt is not None:
+                            tracer.end(rt, name="reconcile",
+                                       launches=launches, actual_s=actual_s)
+                except Exception as e:  # noqa: BLE001 — isolate faulty requests
+                    req.ticket.error = e
+                    tel.inc("failed")
+                    continue
+                if rs.result is not None:
+                    res = rs.result
+                    req.ticket.result = res
+                    tel.inc("decoded_bytes", res.stats.decoded_bytes)
+                    tel.inc("decoded_bytes_fresh", res.stats.decoded_bytes_fresh)
+                    tel.inc("encoded_bytes", res.stats.encoded_bytes)
+                    tel.inc("rows_out", res.stats.rows_out)
+                    if res.stats.cache_hit:
+                        tel.inc("prefiltered_hits")
+            finally:
+                if rt is not None:
+                    trace.set_slice(None, None)
+                    tracer.end(rt, name="slice_dispatch", mode=req.mode or "")
         tel.inc("decoded_bytes_saved", pool.hit_bytes)
         if pool.retained_hits:  # served from a PREVIOUS tick's window pins
             tel.inc("retained_hits", pool.retained_hits)
@@ -362,7 +409,7 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
         _simulate_fetch(service, fetches)
 
 
-def _reconcile_slice(service, req, work: Dict[str, int], launches: int = 0) -> None:
+def _reconcile_slice(service, req, work: Dict[str, int], launches: int = 0) -> float:
     """Close the loop on one completed slice: compare the decode-seconds
     charged at dispatch against the slice's actual cost and re-bill the
     tenant's virtual time (service._vreconcile).
@@ -384,6 +431,7 @@ def _reconcile_slice(service, req, work: Dict[str, int], launches: int = 0) -> N
     ) + service.cost_model.launch_seconds(launches)
     service._vreconcile(req.tenant, charged_s, raw_s, actual_s,
                         table=req.reader.path)
+    return actual_s
 
 
 def _simulate_fetch(service, fetches: List[Tuple[object, List[int], int]]) -> None:
@@ -447,8 +495,18 @@ def _simulate_fetch(service, fetches: List[Tuple[object, List[int], int]]) -> No
             # flight while slice i's batch decode runs, tick boundaries
             # notwithstanding (counters are set, not incremented — the
             # clock already accumulates)
-            for enc_b, dec_t in zip(enc, dec_s):
-                clock.feed(enc_b, dec_t)
+            tracer = service.tracer
+            for (req, frgs, _l), enc_b, dec_t in zip(fetches, enc, dec_s):
+                info = clock.feed(enc_b, dec_t)
+                # flight recorder: per-slice hidden-vs-exposed fetch time
+                # from the streaming pipeline clock
+                rt = tracer.live(req.req_id) if tracer is not None else None
+                if rt is not None:
+                    tracer.event(rt, "sim_fetch", nbytes=enc_b, rgs=len(frgs),
+                                 fetch_s=info["fetch_s"],
+                                 decode_s=info["decode_s"],
+                                 hidden_s=info["hidden_s"],
+                                 exposed_s=info["exposed_s"])
             tel = service.telemetry
             tel.counters["sim_pipe_slices"] = float(clock.slices)
             tel.counters["sim_pipe_serial_s"] = clock.serial_s
@@ -490,3 +548,16 @@ def _simulate_fetch(service, fetches: List[Tuple[object, List[int], int]]) -> No
     tel.inc("sim_fetch_serial_s", sim["serial_s"])
     tel.inc("sim_fetch_overlapped_s", sim["overlapped_s"])
     tel.inc("sim_fetch_saved_s", sim["saved_s"])
+    tracer = service.tracer
+    if tracer is not None and not service.batch_decode:
+        # sequential dispatch pipelines at row-group granularity merged
+        # across requests, so per-request anatomy does not exist — attach
+        # the tick-level overlap summary to each participating request
+        for req, frgs, _l in fetches:
+            rt = tracer.live(req.req_id)
+            if rt is not None:
+                tracer.event(rt, "sim_fetch", rgs=len(frgs),
+                             serial_s=sim["serial_s"],
+                             overlapped_s=sim["overlapped_s"],
+                             saved_s=sim["saved_s"],
+                             shared=len(fetches) > 1)

@@ -49,6 +49,7 @@ from repro.datapath.netsim import PrefetchPipeline, SliceClock
 from repro.datapath.policy import AdaptiveOffloadPolicy
 from repro.datapath.scheduler import form_batch, run_tick
 from repro.datapath.telemetry import Telemetry, quantile
+from repro.datapath.trace import Tracer
 
 
 class QueueFull(RuntimeError):
@@ -152,6 +153,14 @@ class DatapathService:
         # device dispatches.  False = the seed per-row-group loop (kept
         # for A/B in benchmarks/service_bench.py `batchdecode`).
         batch_decode: bool = True,
+        # flight recorder (datapath/trace.py): fraction of requests that
+        # carry a span tree (deterministic sampler, 0.0 = tracing off and
+        # allocation-free) and how many completed traces the bounded ring
+        # retains.  `tracer` injects a pre-built Tracer (e.g. with a fake
+        # clock for deterministic tests) and overrides both knobs.
+        trace_sample_rate: float = 1.0,
+        trace_capacity: int = 64,
+        tracer: Optional[Tracer] = None,
     ):
         assert scheduler in ("wfq", "fifo"), scheduler
         assert hold_ticks == "auto" or int(hold_ticks) >= 0, hold_ticks
@@ -179,6 +188,16 @@ class DatapathService:
         self.hold_auto = hold_ticks == "auto"
         self.hold_ticks = 0 if self.hold_auto else int(hold_ticks)
         self.telemetry = telemetry or Telemetry()
+        # per-request flight recorder; None when sampling is fully off so
+        # every trace touchpoint is a single attribute check
+        if tracer is not None:
+            self.tracer: Optional[Tracer] = tracer
+        elif trace_sample_rate > 0.0:
+            self.tracer = Tracer(capacity=trace_capacity,
+                                 sample_rate=trace_sample_rate)
+        else:
+            self.tracer = None
+        self.telemetry.tracer = self.tracer
         # ONE tiered store backs the engine's cache, the scheduler's decode
         # windows, and the policy's residency probes — a single byte ledger
         # priced by the service's cost model (an engine with a bespoke
@@ -290,6 +309,8 @@ class DatapathService:
     def submit(self, tenant: str, reader, plan: ScanPlan, blooms: Optional[Dict] = None) -> Ticket:
         """Admit one scan request or raise (QueueFull / QuotaExceeded).
         Cost estimates are metadata-only — no data bytes move on rejection."""
+        tr = self.tracer
+        t_tr0 = tr.clock() if tr is not None else 0.0  # trace time base
         self.telemetry.inc("submitted")
         if len(self.queue) >= self.max_queue_depth:
             self.telemetry.inc("rejected_queue_full")
@@ -357,6 +378,17 @@ class DatapathService:
                         col_set=frozenset(plan.all_columns()))
         )
         self.telemetry.inc("admitted")
+        # flight recorder: open the request's root span at submit entry,
+        # record admission as a closed child (estimate + quota work), and
+        # start the queued-wait clock — run_tick closes it at dispatch
+        if tr is not None:
+            rt = tr.start(ticket.req_id, tenant, reader.path, t0=t_tr0,
+                          submitted_tick=ticket.submitted_tick)
+            if rt is not None:
+                tr.add_span(rt, "admission", t_tr0, tr.clock(),
+                            est_bytes=est_bytes, est_rows=est_rows,
+                            row_groups=len(rgs))
+                tr.wait(rt, "wfq_wait", tick=self._tick)
         return ticket
 
     # ------------------------------------------------------------------
@@ -430,6 +462,14 @@ class DatapathService:
             if self._tick > req.first_tick > 0:
                 self.telemetry.inc("split_scans")  # preempted across ticks
             res = req.ticket.result
+            if self.tracer is not None:
+                # close the root span at the request's terminal tick and
+                # push the trace into the flight recorder's bounded ring
+                self.tracer.finish(
+                    req.req_id, req.ticket.status, done_tick=self._tick,
+                    mode=req.mode or "", held_ticks=req.held_ticks,
+                    rows_out=res.stats.rows_out if res is not None else 0,
+                )
             if res is not None:
                 # reconcile the admission estimate against bytes actually
                 # pulled: cache-resident and pool-coalesced scans fetch less

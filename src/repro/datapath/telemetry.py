@@ -70,6 +70,9 @@ class Telemetry:
         # the unified BlockStore, registered by the service so snapshots
         # carry the per-tier hit/eviction/retained ledger
         self.store = None
+        # the flight recorder's Tracer (datapath/trace.py), registered by
+        # the service so snapshots carry the per-request stage attribution
+        self.tracer = None
 
     # -- recording ---------------------------------------------------------
     def inc(self, name: str, value: float = 1.0) -> None:
@@ -128,18 +131,23 @@ class Telemetry:
             "n": len(xs),
             "p50_s": quantile(xs, 0.50),
             "p99_s": quantile(xs, 0.99),
+            "p999_s": quantile(xs, 0.999),  # tail-of-tail (SLO work)
         }
 
     def known_tenants(self) -> List[str]:
         """Every tenant the scheduler has seen — decoded bytes, scheduler
-        charges, OR latency samples.  Fairness must range over all of
-        them: a fully-starved tenant decodes zero bytes and would
-        otherwise vanish from the report, RAISING the Jain index exactly
-        when it should tank."""
+        charges, actual/reconciled decode seconds, OR latency samples.
+        Fairness must range over all of them: a fully-starved tenant
+        decodes zero bytes and would otherwise vanish from the report,
+        RAISING the Jain index exactly when it should tank — and a tenant
+        observed only via observe_actual_cost/observe_recon must not
+        vanish from cost_report()."""
         return sorted(
             set(self.tenant_decoded_bytes)
             | set(self.tenant_sched_bytes)
             | set(self.tenant_sched_seconds)
+            | set(self.tenant_actual_seconds)
+            | set(self.tenant_recon_seconds)
             | set(self.tenant_retained_bytes)
             | set(self._tenant_latency)
         )
@@ -211,7 +219,22 @@ class Telemetry:
             "max_share": max(shares.values()) if shares else 0.0,
             "held_requests": self.counters.get("held_requests", 0.0),
             "held_ticks": self.counters.get("held_ticks", 0.0),
+            # tail-of-tail latency per tenant: the fairness story is
+            # incomplete if a fair byte split hides a blown p99.9
+            "tenant_latency_p999_s": {
+                t: quantile(list(self._tenant_latency.get(t, ())), 0.999)
+                for t in self.known_tenants()
+            },
         }
+
+    def trace_report(self) -> dict:
+        """The flight recorder's stage-attribution report (fixed empty
+        shape when no tracer is registered, so benchmark JSON keys are
+        stable whether or not tracing ran)."""
+        if self.tracer is None:
+            return {"enabled": False, "completed": 0, "recorded": 0,
+                    "requests": []}
+        return self.tracer.report()
 
     def snapshot(self) -> dict:
         """Deterministic summary: every dict is key-sorted and empty deques
@@ -227,6 +250,7 @@ class Telemetry:
             "queue_depth_mean": sum(depths) / len(depths) if depths else 0.0,
             "tick_p50_s": quantile(ticks, 0.50),
             "tick_p99_s": quantile(ticks, 0.99),
+            "tick_p999_s": quantile(ticks, 0.999),
             "tenants": {
                 t: self.tenant_latency(t) for t in sorted(self._tenant_latency)
             },
@@ -234,4 +258,5 @@ class Telemetry:
             "cost": self.cost_report(),
             "batch": self.batch_report(),
             "store": self.store.stats() if self.store is not None else {},
+            "trace": self.trace_report(),
         }
