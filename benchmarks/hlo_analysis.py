@@ -51,6 +51,27 @@ _OP_RE = re.compile(
 )
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an operand list on top-level commas only — older XLA prints
+    type-prefixed operands ("f32[256,256]{1,0} %x") whose shape literals
+    contain commas of their own."""
+    parts: List[str] = []
+    depth, cur = 0, []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
 def _parse_shape(txt: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
     m = _SHAPE_RE.search(txt)
     if not m or m.group(1) not in _DTYPE_BYTES:
@@ -139,7 +160,11 @@ def _analyze_comp(lines: List[str]) -> CompStats:
             args = re.findall(r"dot\(([^)]*)\)", rhs)
             lhs_shape = None
             if args:
-                ops_names = [a.strip().lstrip("%") for a in args[0].split(",")]
+                # operands print as "%name" on newer XLA but
+                # "f32[256,256]{1,0} %name" (type-prefixed) on older —
+                # the value name is always the last token
+                ops_names = [a.strip().split()[-1].lstrip("%")
+                             for a in _split_operands(args[0]) if a.strip()]
                 if ops_names:
                     lhs_shape = sym.get(ops_names[0])
             cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)

@@ -60,6 +60,8 @@ Reported rows:
     service.blockstore.*   late-partner retained reuse + tier ledger
     service.batchdecode.*  dispatch counts + wall, batched vs sequential
     service.trace.*        tracing overhead + stage attribution vs Fig. 2
+    service.kernels.roofline  rewritten-core rates vs the pre-rewrite
+                           anchor + ladder-vs-pow2 pad-waste bytes
 """
 
 from __future__ import annotations
@@ -548,6 +550,66 @@ def run_batchdecode(sf: float = 0.1) -> dict:
     }
 
 
+# Pre-rewrite decode-core rates: BENCH_service.json point 5 (c07f74a),
+# the last calibration before the RLE/DELTA/DICT core rewrite.  The
+# roofline row measures today's cores against this fixed anchor so the
+# speedup claim survives future bench points shifting the history.
+PRE_REWRITE_RATES_GBPS = {
+    "rle": 0.004586833545906182,
+    "delta": 0.01498013821972042,
+    "dict": 0.04571737105787406,
+    "bitpack": 0.0693417894320781,
+}
+
+
+def run_kernel_roofline() -> dict:
+    """Rewritten-core rates vs the pre-rewrite anchor, plus the two-size
+    ladder's pad-waste bytes against pow2 bucketing (launch counts are
+    identical by construction — one dispatch per batch call either way —
+    so pad bytes are the whole cost difference)."""
+    from repro.kernels import ops
+    from repro.lakeformat.encodings import PACK_BLOCK
+
+    cm = CostModel.calibrate(backend="ref", n=1 << 16, repeats=1)
+    speedup = {
+        enc: cm.rates.get(enc, 0.0) / old
+        for enc, old in PRE_REWRITE_RATES_GBPS.items()
+    }
+    # analytic pad sweep over the realistic multi-row-group range
+    # (1..64 blocks per bucket), int32 PACK_BLOCK payloads
+    blk_bytes = PACK_BLOCK * 4
+    pad_ladder = sum(
+        (ops.bucket_blocks(n, mode="ladder") - n) * blk_bytes
+        for n in range(1, 65)
+    )
+    pad_pow2 = sum(
+        (ops.bucket_blocks(n, mode="pow2") - n) * blk_bytes
+        for n in range(1, 65)
+    )
+    rates_fmt = ";".join(
+        f"{e}={cm.rates.get(e, 0.0):.4f}/{PRE_REWRITE_RATES_GBPS[e]:.4f}"
+        f" ({speedup[e]:.1f}x)"
+        for e in sorted(PRE_REWRITE_RATES_GBPS)
+    )
+    row("service.kernels.roofline", 0.0,
+        f"source={cm.source};backend={cm.backend};"
+        f"rates_new/old_gbps:{rates_fmt};"
+        f"pad_bytes_ladder={pad_ladder};pad_bytes_pow2={pad_pow2}"
+        f" ({pad_pow2 / max(pad_ladder, 1):.2f}x)")
+    return {
+        "source": cm.source,
+        "backend": cm.backend,
+        "rates_gbps": {e: cm.rates.get(e, 0.0)
+                       for e in sorted(PRE_REWRITE_RATES_GBPS)},
+        "pre_rewrite_rates_gbps": dict(PRE_REWRITE_RATES_GBPS),
+        "speedup": speedup,
+        "launch_overhead_s": cm.launch_overhead_s,
+        "pad_bytes_ladder": pad_ladder,
+        "pad_bytes_pow2": pad_pow2,
+        "pad_bytes_ratio": pad_pow2 / max(pad_ladder, 1),
+    }
+
+
 def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
     readers = setup(sf)
     plans = tenant_plans(n_tenants)
@@ -599,6 +661,7 @@ def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
     blockstore = run_blockstore(sf)
     batchdecode = run_batchdecode(sf)
     tracing = run_trace(sf)
+    kernels = run_kernel_roofline()
 
     return {
         "fairness": fairness,
@@ -606,6 +669,7 @@ def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
         "blockstore": blockstore,
         "batchdecode": batchdecode,
         "trace": tracing,
+        "kernels": kernels,
         "n_tenants": n_tenants,
         "independent_fresh_decoded_bytes": ind_fresh,
         "service_fresh_decoded_bytes": svc_fresh,

@@ -10,10 +10,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # baseline entries that now pass (the bar only moves up)
 TIER1_RATCHET=1 python scripts/check_tier1.py
 
-# cost-model calibration smoke: a fast per-encoding decode-rate table
-# (CostModel.calibrate falls back to the nominal table when kernels are
-# slow or unavailable, so this step can degrade but not fail CI)
-python -c "from repro.datapath.costmodel import main; import sys; sys.exit(main(['--n', '65536', '--repeats', '1', '--out', '/tmp/costmodel_ci.json']))"
+# cost-model calibration smoke: a fast per-encoding decode-rate table,
+# persisted as the per-backend JSON artifact ({"format": "per-backend",
+# "backends": {...}} — repeated runs merge, one entry per kernel backend).
+# CostModel.calibrate falls back to the nominal table when kernels are
+# slow or unavailable, so this step can degrade but not fail CI.
+python -c "from repro.datapath.costmodel import main; import sys; sys.exit(main(['--n', '65536', '--repeats', '1', '--out', 'calibration_ci.json']))"
 
 # service benchmark — includes the `fairness` sub-report (FIFO vs WFQ under
 # 1-elephant/3-mice, hold-window savings), the `costmodel` sub-report
@@ -25,8 +27,10 @@ python -c "from repro.datapath.costmodel import main; import sys; sys.exit(main(
 # fetch/decode pipelining), and the `trace` sub-report (flight-recorder
 # A/B on the skewed workload: wall overhead ratio, result bit-identity,
 # Chrome-trace event count, and the trace-derived decode/filter/rest
-# stage attribution against the paper's Fig. 2 46/17/37 split) —
-# appended to the perf trajectory
+# stage attribution against the paper's Fig. 2 46/17/37 split), and the
+# `kernels` sub-report (`service.kernels.roofline`: rewritten decode-core
+# rates vs the pre-rewrite point-5 anchor, ladder-vs-pow2 pad-waste
+# bytes) — appended to the perf trajectory
 python -m benchmarks.run --fast --only service --json BENCH_point.json
 python scripts/append_bench_point.py BENCH_point.json BENCH_service.json
 rm -f BENCH_point.json

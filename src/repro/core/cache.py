@@ -87,14 +87,17 @@ class BlockCache:
         tier: Optional[str] = None,
         encoding: Optional[str] = None,
         decode_work: Optional[Dict[str, int]] = None,
+        demote: Optional[Tuple[Hashable, Any]] = None,
     ) -> bool:
         """Persist one entry (never window-pinned, never ephemeral — the
         cache path is the promotion path).  `encoding` prices a decoded
         column's re-decode; `decode_work` prices a prefiltered result by
-        the ground-truth work that produced it."""
+        the ground-truth work that produced it; `demote` is the (key,
+        value) of the encoded pages an evicted decoded column falls back
+        to instead of dropping to zero."""
         return self.store.put(
             key, value, tier=tier or self._tier(key),
-            encoding=encoding, decode_work=decode_work,
+            encoding=encoding, decode_work=decode_work, demote=demote,
         )
 
     def promote(self, key: Hashable, value: Any,

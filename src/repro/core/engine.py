@@ -262,7 +262,14 @@ class DatapathEngine:
                 stats.kernel_launches += 1
         enc_name = col.encoding.value if col is not None else None
         if offload in ("preloaded", "prefiltered"):
-            self.cache.put(key, arr, encoding=enc_name)
+            # demote payload: under pressure the decoded column falls back
+            # to its encoded page (re-decode only) instead of dropping to
+            # zero (re-fetch AND re-decode)
+            self.cache.put(
+                key, arr, encoding=enc_name,
+                demote=(self.page_cache_key(reader, rg, name), col)
+                if col is not None else None,
+            )
         if pool is not None:
             self._pool_put(pool, key, arr, encoding=enc_name)
         if stats is not None:

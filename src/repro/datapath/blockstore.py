@@ -81,6 +81,7 @@ class TierStats:
     rejected_puts: int = 0
     evictions: int = 0
     expired: int = 0  # ephemeral window entries dropped at expiry
+    demotions: int = 0  # decoded victims demoted to their encoded pages
     redecode_saved_s: float = 0.0  # estimated re-creation seconds hits avoided
 
     def as_dict(self) -> dict:
@@ -100,6 +101,14 @@ class BlockEntry:
     pin_expires: int = -1  # last tick (inclusive) the window pin covers
     ephemeral: bool = False  # drop at pin expiry unless promoted
     owner: Optional[str] = None  # tenant whose decode pinned it
+    # eviction fallback: (key, value) of the encoded page(s) this decode
+    # came from — eviction demotes to the encoded tier (pay only the
+    # re-decode to get back) instead of dropping to zero (pay re-fetch
+    # AND re-decode)
+    demote: Optional[Tuple[Hashable, Any]] = None
+    # tenants observed benefiting from this entry (window hits); retention
+    # charges split across them instead of billing only the decoder
+    beneficiaries: set = dataclasses.field(default_factory=set)
 
     def pinned(self, tick: int) -> bool:
         return self.pin_expires >= tick
@@ -217,6 +226,7 @@ class BlockStore:
         pin_until: Optional[int] = None,
         ephemeral: bool = False,
         owner: Optional[str] = None,
+        demote: Optional[Tuple[Hashable, Any]] = None,
     ) -> bool:
         """Insert or refresh one entry; returns False when the entry could
         not be kept (bigger than the store, or the shortfall is pinned).
@@ -245,6 +255,7 @@ class BlockStore:
             old.encoding = encoding or old.encoding
             old.redecode_s = self._price(old.tier, nb, old.encoding, decode_work)
             old.seq = seq
+            old.demote = demote or old.demote
             # promotion clears the ephemeral flag; a window re-pin of a
             # persistent entry never re-taints it
             old.ephemeral = old.ephemeral and ephemeral
@@ -253,13 +264,17 @@ class BlockStore:
                 old.pin_expires = max(old.pin_expires, pin_until)
                 old.owner = owner or old.owner
                 self._pinned_keys.add(key)
+            if owner:
+                old.beneficiaries.add(owner)
             self._heap_push(old)
             return True
         entry = BlockEntry(
             key=key, value=value, tier=tier, nbytes=nb, encoding=encoding,
             redecode_s=self._price(tier, nb, encoding, decode_work), seq=seq,
-            ephemeral=ephemeral, owner=owner,
+            ephemeral=ephemeral, owner=owner, demote=demote,
         )
+        if owner:
+            entry.beneficiaries.add(owner)
         if pin_until is not None:
             entry.pin_tick = self.tick
             entry.pin_expires = pin_until
@@ -323,6 +338,37 @@ class BlockStore:
             heapq.heappush(self._heap, rec)
         return victim
 
+    def _demote(self, victim: BlockEntry) -> int:
+        """Re-insert an evicted decoded column as its source encoded
+        page(s) — getting it back then costs only the re-decode, not
+        re-fetch AND re-decode.  Returns the bytes the demoted entry
+        re-occupies (0 when demotion was skipped: no payload, source
+        pages still resident, or no footprint shrink).  Ephemeral (raw
+        window) victims never demote — raw leaves no persistent state."""
+        if victim.tier != "decoded" or not victim.demote or victim.ephemeral:
+            return 0
+        dkey, dval = victim.demote
+        if dkey in self._entries:
+            return 0  # the encoded pages are still resident on their own
+        nb = _nbytes(dval)
+        if nb >= victim.nbytes or self.used + nb > self.capacity:
+            return 0
+        entry = BlockEntry(
+            key=dkey, value=dval, tier="encoded", nbytes=nb,
+            encoding=victim.encoding,
+            redecode_s=self._price("encoded", nb, victim.encoding, None),
+            seq=next(self._seq), owner=victim.owner,
+            beneficiaries=set(victim.beneficiaries),
+        )
+        self._entries[dkey] = entry
+        self.used += nb
+        self._tier_stats["decoded"].demotions += 1
+        self._tier_stats["encoded"].puts += 1
+        self._heap_push(entry)
+        if trace._CUR is not None:
+            trace.event("demote", tier="encoded", nbytes=nb)
+        return nb
+
     def _evict(self, need_bytes: int, exclude: Optional[Hashable] = None) -> None:
         """Free at least `need_bytes` by evicting unpinned entries in
         cost-rank order (lowest re-creation seconds per byte first, LRU
@@ -330,7 +376,13 @@ class BlockStore:
         are never victims — and when the evictable entries cannot cover
         the shortfall, NOTHING is evicted: the caller's put will be
         refused anyway, and a doomed put must not flush the unpinned
-        working set on its way out."""
+        working set on its way out.
+
+        A decoded victim carrying a demote payload falls back to the
+        encoded tier instead of dropping to zero; the demoted entry is
+        itself unpinned, so coverage is preserved (the shortfall and the
+        evictable pool grow by the same re-occupied bytes) and the loop
+        still terminates (each demotion strictly shrinks the footprint)."""
         if self._evictable_bytes(exclude) < need_bytes:
             return
         while need_bytes > 0:
@@ -343,6 +395,7 @@ class BlockStore:
             self._tier_stats[victim.tier].evictions += 1
             if trace._CUR is not None:  # eviction forced by a traced slice
                 trace.event("evict", tier=victim.tier, nbytes=victim.nbytes)
+            need_bytes += self._demote(victim)
 
     def advance_tick(self, tick: int) -> None:
         """Move the window clock: pins whose window ended become evictable,
@@ -383,19 +436,29 @@ class BlockStore:
         return e is not None and e.tier == "decoded" and e.pinned(self.tick)
 
     def retention_charges(self) -> Dict[str, Tuple[int, float]]:
-        """Per-owner (pinned bytes, per-tick retention price) over window
+        """Per-tenant (pinned bytes, per-tick retention price) over window
         pins held ACROSS a tick boundary.  Each entry's price amortizes
         one full re-creation over its window, so holding a decode for its
-        whole hold window costs its owner exactly what re-decoding it
-        would have — window retention is paid for in the same WFQ
-        currency it saves."""
+        whole hold window costs exactly what re-decoding it would have —
+        window retention is paid for in the same WFQ currency it saves.
+
+        The price splits EQUALLY across the entry's observed beneficiaries
+        (tenants whose window lookups hit it, decoder included) instead of
+        billing only the tenant that happened to decode first: a coalesced
+        decode that three tenants reuse costs each a third, not the
+        decoder everything and the free-riders nothing."""
         out: Dict[str, Tuple[int, float]] = {}
         for e in self._entries.values():
-            if e.owner is None or not e.pinned(self.tick) or e.pin_tick >= self.tick:
+            if not e.pinned(self.tick) or e.pin_tick >= self.tick:
                 continue
-            b, s = out.get(e.owner, (0, 0.0))
-            out[e.owner] = (b + e.nbytes,
-                            s + e.redecode_s / max(e.pin_expires - e.pin_tick, 1))
+            who = sorted(e.beneficiaries) or ([e.owner] if e.owner else [])
+            if not who:
+                continue
+            share = 1.0 / len(who)
+            price = e.redecode_s / max(e.pin_expires - e.pin_tick, 1)
+            for t in who:
+                b, s = out.get(t, (0, 0.0))
+                out[t] = (b + int(e.nbytes * share), s + price * share)
         return out
 
     # ------------------------------------------------------------------
@@ -504,6 +567,10 @@ class StoreView:
             return default
         self.hits += 1
         self.hit_bytes += e.nbytes
+        if self.owner:
+            # observed beneficiary: retention charges split across every
+            # tenant that actually reused this decode, not just its owner
+            e.beneficiaries.add(self.owner)
         self.store.window_hits += 1
         self.store.window_hit_bytes += e.nbytes
         self.store.window_saved_s += e.redecode_s

@@ -11,6 +11,13 @@ estimated *device decode-seconds* instead:
              paths benchmarks/kernels_bench.py measures) into a
              per-encoding decoded-GB/s table, persistable as JSON with a
              nominal fallback when kernels are slow or unavailable.
+             Rates and launch overhead are PER BACKEND — the ref-jitted
+             and pallas paths differ wildly (and ref-eager historically by
+             ~100x) — so the persisted JSON is keyed by backend
+             (`{"backends": {"ref": {...}, "pallas": {...}}}`); `save`
+             merges into an existing file and `load`/`load_or_nominal`
+             pick the entry for the ACTIVE backend (kernels.ops dispatch
+             resolution), never pricing one backend with another's table.
   estimate   `estimate_row_groups()` reads true dtype widths + encodings
              from footer metadata via `engine.decode_footprint` (padded
              rows, fused predicate column never materialized) and converts
@@ -63,6 +70,35 @@ NOMINAL_RATES_GBPS: Dict[str, float] = {
 # path (one per bucket) are both priced honestly and reconciled against
 # `ScanStats.kernel_launches`.
 NOMINAL_LAUNCH_OVERHEAD_S = 0.0
+
+
+def active_backend() -> str:
+    """The kernel backend `kernels.ops` actually dispatches to for
+    backend='auto' right now — the key calibration tables are stored and
+    looked up under."""
+    from repro.kernels.ops import _resolve
+
+    return _resolve("auto")[0]
+
+
+# Process-default cost model: DatapathService registers its (possibly
+# calibrated) model here so DEFAULT-constructed netsim DecodeModels price
+# decode from the same table the scheduler charges with, instead of the
+# nominal constants (netsim.DecodeModel.__post_init__ reads this).
+_DEFAULT_MODEL: Optional["CostModel"] = None
+
+
+def set_default_cost_model(cm: Optional["CostModel"]) -> Optional["CostModel"]:
+    """Install `cm` as the process-default table; returns the previous one."""
+    global _DEFAULT_MODEL
+    prev, _DEFAULT_MODEL = _DEFAULT_MODEL, cm
+    return prev
+
+
+def default_cost_model() -> "CostModel":
+    """The registered process-default model, or a nominal table for the
+    active backend when none has been registered."""
+    return _DEFAULT_MODEL if _DEFAULT_MODEL is not None else CostModel()
 
 
 @dataclasses.dataclass
@@ -181,7 +217,7 @@ class CostModel:
         self,
         rates: Optional[Dict[str, float]] = None,
         source: str = "nominal",
-        backend: str = "ref",
+        backend: Optional[str] = None,
         link_bandwidth_gbps: float = 12.5,
         link_latency_us: float = 10.0,
         launch_overhead_s: float = NOMINAL_LAUNCH_OVERHEAD_S,
@@ -190,7 +226,7 @@ class CostModel:
         if rates:
             self.rates.update({k: float(v) for k, v in rates.items() if v and v > 0})
         self.source = source
-        self.backend = backend
+        self.backend = backend or active_backend()
         self.link_bandwidth_gbps = link_bandwidth_gbps
         self.link_latency_us = link_latency_us
         self.launch_overhead_s = max(0.0, float(launch_overhead_s))
@@ -277,15 +313,28 @@ class CostModel:
         }
 
     def save(self, path: str) -> str:
+        """Write this model's table under its backend key, MERGING into an
+        existing per-backend file (a pallas calibration must not clobber
+        the ref one — the two differ by orders of magnitude).  A legacy
+        flat-format file is folded in under its recorded backend."""
+        data: dict = {"format": "per-backend", "backends": {}}
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            if isinstance(old.get("backends"), dict):
+                data["backends"].update(old["backends"])
+            elif "rates_gbps" in old:
+                data["backends"][old.get("backend", "ref")] = old
+        except (OSError, ValueError):
+            pass
+        data["backends"][self.backend] = self.to_dict()
         with open(path, "w") as f:
-            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+            json.dump(data, f, indent=2, sort_keys=True)
             f.write("\n")
         return path
 
     @classmethod
-    def load(cls, path: str) -> "CostModel":
-        with open(path) as f:
-            d = json.load(f)
+    def _from_dict(cls, d: dict) -> "CostModel":
         return cls(
             rates=d.get("rates_gbps"),
             source=d.get("source", "calibrated"),
@@ -297,15 +346,33 @@ class CostModel:
         )
 
     @classmethod
-    def load_or_nominal(cls, path: Optional[str]) -> "CostModel":
-        """Best-effort load: a missing or corrupt table degrades to nominal
-        rates rather than failing service construction."""
+    def load(cls, path: str, backend: Optional[str] = None) -> "CostModel":
+        """Load the table for `backend` (default: the ACTIVE backend) from
+        a per-backend file; raises KeyError when that backend has no entry
+        — a table calibrated on another backend does not transfer.  Legacy
+        flat-format files load as-is (pre-per-backend artifacts)."""
+        with open(path) as f:
+            d = json.load(f)
+        if isinstance(d.get("backends"), dict):
+            be = backend or active_backend()
+            entry = d["backends"].get(be)
+            if entry is None:
+                raise KeyError(f"no calibration for backend {be!r} in {path}")
+            return cls._from_dict(entry)
+        return cls._from_dict(d)
+
+    @classmethod
+    def load_or_nominal(cls, path: Optional[str],
+                        backend: Optional[str] = None) -> "CostModel":
+        """Best-effort load of the active (or given) backend's table: a
+        missing file, corrupt JSON, or absent backend entry degrades to
+        nominal rates rather than failing service construction."""
         if path:
             try:
-                return cls.load(path)
+                return cls.load(path, backend=backend)
             except (OSError, ValueError, KeyError):
                 pass
-        return cls()
+        return cls(backend=backend)
 
 
 def main(argv=None) -> int:
@@ -314,23 +381,27 @@ def main(argv=None) -> int:
         python -m repro.datapath.costmodel --out calibration.json --n 65536
     """
     ap = argparse.ArgumentParser(description=main.__doc__)
-    ap.add_argument("--backend", default="ref")
+    ap.add_argument("--backend", default="auto",
+                    help="'auto' resolves to the active dispatch backend")
     ap.add_argument("--n", type=int, default=1 << 18)
     ap.add_argument("--repeats", type=int, default=3)
-    ap.add_argument("--out", default=None, help="write the table as JSON")
+    ap.add_argument("--out", default=None,
+                    help="write/merge the per-backend table as JSON")
     ap.add_argument("--nominal", action="store_true",
                     help="skip measurement, emit the nominal table")
     args = ap.parse_args(argv)
-    cm = (CostModel() if args.nominal
-          else CostModel.calibrate(backend=args.backend, n=args.n,
+    be = active_backend() if args.backend == "auto" else args.backend
+    cm = (CostModel(backend=be) if args.nominal
+          else CostModel.calibrate(backend=be, n=args.n,
                                    repeats=args.repeats))
     for enc in sorted(cm.rates):
-        print(f"costmodel.{enc},{cm.rates[enc]:.3f} GB/s,source={cm.source}")
+        print(f"costmodel.{enc},{cm.rates[enc]:.3f} GB/s,"
+              f"source={cm.source},backend={cm.backend}")
     print(f"costmodel.launch_overhead,{cm.launch_overhead_s * 1e6:.1f} us,"
-          f"source={cm.source}")
+          f"source={cm.source},backend={cm.backend}")
     if args.out:
         cm.save(args.out)
-        print(f"costmodel.saved,{args.out}")
+        print(f"costmodel.saved,{args.out},backend={cm.backend}")
     return 0
 
 

@@ -48,11 +48,32 @@ class DecodeModel:
     fall back to the scalar `decode_gbps`.  `launch_overhead_s` is the
     calibrated fixed cost per kernel dispatch (costmodel's per-launch
     term): the sequential scan pays it once per (row group, column), the
-    batched scan once per bucket — pass `launches` to bill it."""
+    batched scan once per bucket — pass `launches` to bill it.
 
-    decode_gbps: float = 20.0
+    A DEFAULT-constructed model resolves every field from the
+    process-default cost model's per-backend table (costmodel.
+    default_cost_model — the one DatapathService registers), NOT from a
+    stale module-level constant: after calibration, the simulated
+    fetch/decode overlap and what the scheduler charges come from ONE
+    table.  Passing `decode_gbps` explicitly keeps the old scalar-model
+    semantics (rates stays None unless given)."""
+
+    decode_gbps: Optional[float] = None
     rates: Optional[Dict[str, float]] = None
-    launch_overhead_s: float = 0.0
+    launch_overhead_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.decode_gbps is None:
+            from repro.datapath import costmodel as _cm  # avoid import cycle
+
+            cm = _cm.default_cost_model()
+            self.decode_gbps = cm.rate_gbps("plain")
+            if self.rates is None:
+                self.rates = dict(cm.rates)
+            if self.launch_overhead_s is None:
+                self.launch_overhead_s = cm.launch_overhead_s
+        elif self.launch_overhead_s is None:
+            self.launch_overhead_s = 0.0
 
     def rate_gbps(self, encoding: Optional[str] = None) -> float:
         if encoding is not None and self.rates:

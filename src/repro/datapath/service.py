@@ -172,6 +172,12 @@ class DatapathService:
         self.default_quota = default_quota or TenantQuota()
         self.policy = policy if policy is not None else AdaptiveOffloadPolicy()
         self.cost_model = cost_model or CostModel()
+        # register as the process-default table so default-constructed
+        # netsim models (DecodeModel()/PrefetchPipeline()) price decode
+        # from the same per-backend table the scheduler charges with
+        from repro.datapath import costmodel as _costmodel_mod
+
+        _costmodel_mod.set_default_cost_model(self.cost_model)
         self.reconcile = reconcile
         self.batch_decode = batch_decode
         # scheduler and netsim share one calibrated table unless the caller

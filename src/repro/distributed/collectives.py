@@ -28,10 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.distributed.compat import axis_size, shard_map_nocheck
 
 
 # ---------------------------------------------------------------------------
@@ -41,7 +38,7 @@ except AttributeError:  # pragma: no cover
 
 def hierarchical_psum(x: jax.Array, intra_axis: str, inter_axis: str) -> jax.Array:
     """Sum over both axes; cross-`inter_axis` traffic is 1/size(intra)."""
-    n = jax.lax.axis_size(intra_axis)
+    n = axis_size(intra_axis)
     pad = (-x.shape[0]) % n
     xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)) if pad else x
     shard = jax.lax.psum_scatter(xp, intra_axis, scatter_dimension=0, tiled=True)
@@ -99,10 +96,9 @@ def make_compressed_dp_fn(grad_fn: Callable, mesh: Mesh, pod_axis: str = "pod"):
             errs.append(ne)
         return jax.tree.unflatten(tdef, out), jax.tree.unflatten(tdef, errs)
 
-    return shard_map(
-        inner,
-        mesh=mesh,
-        in_specs=(P(pod_axis), P()),
-        out_specs=(P(), P()),
-        check_vma=False,
+    # replication checking off (jax names the flag check_vma or check_rep
+    # depending on version — the compat shim picks the right one): the
+    # error-feedback state is intentionally per-shard, not replicated
+    return shard_map_nocheck(
+        inner, mesh, (P(pod_axis), P()), (P(), P()),
     )

@@ -5,6 +5,13 @@ Value order within a 4096 block is v = s*128 + l, so the prefix sum
 decomposes into (a) a log2(128)-step shift/add scan along lanes and (b) a
 32-row carry ladder — both static VPU work, fused with the unpack so
 deltas never leave VMEM.
+
+Critical path: the row carries are derived from plain row SUMS (a log-depth
+tree reduction), not from the last lane of the materialized lane scan, so
+the carry ladder and the single full-width lane scan are independent
+dataflow — the old form ran `_lane_prefix_sum` twice with the second
+waiting on the first's materialization.  int32 addition is associative
+mod 2^32, so any association is bit-identical to the reference cumsum.
 """
 
 from __future__ import annotations
@@ -38,9 +45,10 @@ def _kernel(k: int, packed_ref, bases_ref, out_ref):
     d = jax.lax.shift_right_logical(zu, jnp.uint32(1)).astype(jnp.int32) ^ -(
         zu & jnp.uint32(1)
     ).astype(jnp.int32)
-    lane_cs = _lane_prefix_sum(d)  # (G,32,128)
-    row_tot = lane_cs[:, :, -1]  # (G,32)
+    # row totals via tree reduction — does NOT wait on the lane scan
+    row_tot = jnp.sum(d, axis=2)  # (G,32)
     row_carry = _lane_prefix_sum(row_tot) - row_tot  # exclusive over rows
+    lane_cs = _lane_prefix_sum(d)  # the single full-width lane scan
     out = lane_cs + row_carry[:, :, None] + bases_ref[...][:, :1, None]
     out_ref[...] = out.reshape(out_ref.shape)
 

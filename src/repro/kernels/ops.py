@@ -14,8 +14,14 @@ page-count-agnostic — BITPACK/DICT/DELTA pages are (nblocks, k, 128) and
 RLE pages are (nblk, 128) — so compatible pages from MANY row groups
 stack along the leading block axis and decode in ONE device dispatch.
 Inputs are stacked host (numpy) buffers; the leading axis is padded to a
-power-of-two bucket size BEFORE the jitted call, so the whole scan reuses
-a handful of compiled traces instead of re-tracing per row-group count.
+two-size-ladder bucket (see `bucket_blocks`) BEFORE the jitted call, so
+the whole scan reuses a handful of compiled traces instead of re-tracing
+per row-group count.
+
+Single-call entry points on the 'ref' backend route through jitted
+wrappers too: eager jnp issues one XLA executable per primitive, which
+made a single RLE block decode ~100x slower than the same math compiled —
+the dispatch-overhead wall the per-backend cost-model tables measure.
 The module-level dispatch counter underneath `dispatch_count()` is the
 benchmarks' device-dispatch metric: each public entry here counts the
 launches it issues (a batch call counts ONE however many pages it
@@ -77,11 +83,36 @@ def reset_dispatch_count() -> int:
     return n
 
 
-def bucket_blocks(n: int) -> int:
-    """Pad a stacked block count to its power-of-two bucket, so batch
-    launches hit a small, reused set of jit traces (shape-stable jit)."""
+BUCKET_MODE = "ladder"  # 'ladder' (default) or 'pow2' (legacy, kept for A/B)
+
+
+def set_bucket_mode(mode: str) -> str:
+    """Switch the batch-padding bucket scheme; returns the previous mode."""
+    global BUCKET_MODE
+    assert mode in ("ladder", "pow2"), mode
+    prev, BUCKET_MODE = BUCKET_MODE, mode
+    return prev
+
+
+def bucket_blocks(n: int, mode: Optional[str] = None) -> int:
+    """Pad a stacked block count to its bucket, so batch launches hit a
+    small, reused set of jit traces (shape-stable jit).
+
+    'ladder' (default): two rungs per octave — {2^m, 3*2^(m-1)}, i.e.
+    1, 2, 3, 4, 6, 8, 12, 16, 24, 32, ...  Worst-case pad waste drops
+    from pow2's ~100% (n = 2^m + 1 pads to 2^(m+1)) to a bounded ~50%
+    (~17% typical), at the cost of at most 2 compiled traces per octave
+    instead of 1.  Each batch call is still exactly ONE launch, so the
+    ladder never issues more dispatches than pow2 for the same workload
+    (tests/test_batch_decode.py pins the invariant).
+    'pow2': the legacy single-rung octave."""
     assert n > 0, n
-    return 1 << (n - 1).bit_length()
+    mode = mode or BUCKET_MODE
+    p = 1 << (n - 1).bit_length()  # next power of two >= n
+    if mode == "pow2" or p < 4:
+        return p
+    mid = 3 * (p // 4)  # the mid-octave rung 3*2^(m-2)
+    return mid if n <= mid else p
 
 
 def device_put(buf) -> jax.Array:
@@ -92,6 +123,32 @@ def device_put(buf) -> jax.Array:
     return jnp.asarray(buf)
 
 
+# Jitted single-call reference paths.  The ref backend used to run these
+# EAGERLY — one XLA executable per jnp primitive, so a single-page decode
+# paid dozens of dispatches and the calibrated RLE/DELTA/DICT rates sat
+# three orders of magnitude under PLAIN (BENCH_service.json point 5).
+# Compiling each (shape, k) once and replaying it is the same trick the
+# batch paths already used; the jit cache is keyed on page shape, which a
+# real workload draws from a handful of values.
+
+_ref_dict_decode = functools.partial(jax.jit, static_argnums=(2,))(ref.dict_decode)
+_ref_bloom_probe = functools.partial(jax.jit, static_argnums=(2,))(ref.bloom_probe)
+_ref_fused_scan = functools.partial(jax.jit, static_argnums=(1,))(ref.fused_scan)
+_ref_filter_compact = jax.jit(ref.filter_compact)
+
+
+@jax.jit
+def _ref_filter_compact_int(values, mask):
+    """Whole two-half int compaction fused into one executable."""
+    v = values.astype(jnp.int32)
+    hi16 = jax.lax.shift_right_arithmetic(v, 16)
+    lo16 = v & 0xFFFF
+    chi, cnt = ref.filter_compact(hi16, mask)
+    clo, _ = ref.filter_compact(lo16, mask)
+    out = jax.lax.shift_left(chi.astype(jnp.int32), 16) | clo.astype(jnp.int32)
+    return out, cnt
+
+
 def bitunpack(packed, k: int, n: Optional[int] = None, *, backend: str = "auto"):
     """(nblocks,k,128) uint32 -> flat (n,) int32 (or (nb,32,128) if n is None)."""
     backend, interp = _resolve(backend)
@@ -99,7 +156,7 @@ def bitunpack(packed, k: int, n: Optional[int] = None, *, backend: str = "auto")
     out = (
         bitunpack_pallas(packed, k, interpret=interp)
         if backend == "pallas"
-        else ref.bitunpack(packed, k)
+        else _ref_bitunpack_batch(packed, k)
     )
     return out if n is None else out.reshape(-1)[:n]
 
@@ -110,7 +167,7 @@ def dict_decode(packed, dictionary, k: int, n: Optional[int] = None, *, backend=
     out = (
         dict_decode_pallas(packed, dictionary, k, interpret=interp)
         if backend == "pallas"
-        else ref.dict_decode(packed, dictionary, k)
+        else _ref_dict_decode(packed, dictionary, k)
     )
     return out if n is None else out.reshape(-1)[:n]
 
@@ -121,7 +178,7 @@ def rle_decode(values, ends, n: Optional[int] = None, *, backend="auto"):
     out = (
         rle_decode_pallas(values, ends, interpret=interp)
         if backend == "pallas"
-        else ref.rle_decode(values, ends)
+        else _ref_rle_decode_batch(values, ends)
     )
     return out if n is None else out.reshape(-1)[:n]
 
@@ -132,7 +189,7 @@ def delta_decode(packed, bases, k: int, n: Optional[int] = None, *, backend="aut
     out = (
         delta_decode_pallas(packed, bases, k, interpret=interp)
         if backend == "pallas"
-        else ref.delta_decode(packed, bases, k)
+        else _ref_delta_decode_batch(packed, bases, k)
     )
     return out if n is None else out.reshape(-1)[:n]
 
@@ -144,22 +201,25 @@ def filter_compact(values, mask, *, backend="auto"):
     contraction stays exact.
     """
     backend, interp = _resolve(backend)
-    fn = (
-        (lambda v, m: filter_compact_pallas(v, m, interpret=interp))
-        if backend == "pallas"
-        else ref.filter_compact
-    )
     if jnp.issubdtype(values.dtype, jnp.integer):
+        # _count(2) on both backends: the pallas path launches two kernels,
+        # and the ref path prices the same two logical compactions even
+        # though jit fuses them into one executable
         _count(2)
+        if backend != "pallas":
+            out, cnt = _ref_filter_compact_int(values, mask)
+            return out.astype(values.dtype), cnt
         v = values.astype(jnp.int32)
         hi16 = jax.lax.shift_right_arithmetic(v, 16)
         lo16 = v & 0xFFFF
-        chi, cnt = fn(hi16, mask)
-        clo, _ = fn(lo16, mask)
+        chi, cnt = filter_compact_pallas(hi16, mask, interpret=interp)
+        clo, _ = filter_compact_pallas(lo16, mask, interpret=interp)
         out = jax.lax.shift_left(chi.astype(jnp.int32), 16) | clo.astype(jnp.int32)
         return out.astype(values.dtype), cnt
     _count()
-    return fn(values, mask)
+    if backend == "pallas":
+        return filter_compact_pallas(values, mask, interpret=interp)
+    return _ref_filter_compact(values, mask)
 
 
 def bloom_build(keys, n_bits: int, n_hashes: int = 4):
@@ -172,7 +232,7 @@ def bloom_probe(keys, bits, n_hashes: int = 4, *, backend="auto"):
     _count()
     if backend == "pallas":
         return bloom_probe_pallas(keys, bits, n_hashes=n_hashes, interpret=interp) > 0
-    return ref.bloom_probe(keys, bits, n_hashes)
+    return _ref_bloom_probe(keys, bits, n_hashes)
 
 
 def fused_scan(packed, k: int, lo, hi, dictionary=None, *, backend="auto"):
@@ -183,7 +243,7 @@ def fused_scan(packed, k: int, lo, hi, dictionary=None, *, backend="auto"):
     if backend == "pallas":
         mask, cnt = fused_scan_pallas(packed, k, lo, hi, dictionary, interpret=interp)
         return mask > 0, cnt
-    return ref.fused_scan(packed, k, lo, hi, dictionary)
+    return _ref_fused_scan(packed, k, lo, hi, dictionary)
 
 
 # ---------------------------------------------------------------------------

@@ -68,19 +68,19 @@ def dict_decode(packed: jax.Array, dictionary: jax.Array, k: int) -> jax.Array:
 def rle_decode(values: jax.Array, ends: jax.Array) -> jax.Array:
     """(nblk,128) run values + (nblk,128) exclusive ends -> (nblk,1024).
 
-    One-hot run-membership times values; exact for ints (integer accumulate)
-    and floats (f32 accumulate).
+    Rank lookup: position j belongs to the first run whose exclusive end
+    exceeds j, i.e. rank(j) = |{r : ends[r] <= j}|.  The writer pads the
+    run window with end=1024 repeats of the final value, so clipping the
+    rank into the window re-reads that value for any padded tail.  A
+    gather of the single owning run is exact for every dtype (no
+    accumulation at all), unlike the old dense (nblk,1024,128) one-hot
+    contraction it replaces — and it never materializes the cube.
     """
-    nblk = values.shape[0]
-    j = jnp.arange(RLE_OUT_BLOCK, dtype=jnp.int32)[None, :, None]  # (1,1024,1)
-    e = ends.astype(jnp.int32)[:, None, :]  # (nblk,1,128)
-    starts = jnp.concatenate([jnp.zeros((nblk, 1, 1), jnp.int32), e[..., :-1]], axis=-1)
-    member = (j >= starts) & (j < e)  # (nblk,1024,128)
-    if jnp.issubdtype(values.dtype, jnp.floating):
-        out = jnp.einsum("bjr,br->bj", member.astype(jnp.float32), values)
-        return out.astype(values.dtype)
-    out = jnp.sum(member.astype(jnp.int32) * values[:, None, :].astype(jnp.int32), axis=-1)
-    return out.astype(values.dtype)
+    e = ends.astype(jnp.int32)
+    j = jnp.arange(RLE_OUT_BLOCK, dtype=jnp.int32)
+    rank = jax.vmap(lambda eb: jnp.searchsorted(eb, j, side="right"))(e)
+    idx = jnp.minimum(rank, RLE_WINDOW - 1)
+    return jnp.take_along_axis(values, idx, axis=1)
 
 
 # ---------------------------------------------------------------------------

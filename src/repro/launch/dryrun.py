@@ -27,6 +27,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import ALIASES, get_config, list_archs  # noqa: E402
+from repro.distributed.compat import use_mesh  # noqa: E402
 from repro.distributed.sharding import ShardingCtx  # noqa: E402
 from repro.launch import specs as S  # noqa: E402
 from repro.launch.mesh import production_ctx  # noqa: E402
@@ -61,7 +62,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     pspecs = S.param_specs(cfg, ctx)
     t0 = time.time()
 
-    with jax.set_mesh(ctx.mesh):
+    with use_mesh(ctx.mesh):
         if info["kind"] == "train":
             from repro.train.loop import make_train_step
             from repro.train.optimizer import init_opt_state

@@ -30,10 +30,7 @@ from jax.sharding import PartitionSpec as P
 from repro.distributed.sharding import ShardingCtx, constrain
 from repro.models.config import ModelConfig
 
-try:  # jax >= 0.6 moved shard_map to the top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.distributed.compat import shard_map
 
 
 def _capacity(n_tokens: int, k: int, n_experts: int, factor: float) -> int:

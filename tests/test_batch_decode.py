@@ -238,10 +238,14 @@ def test_service_batched_equals_sequential(mixed):
         ScanPlan("mixed", ["price", "level"], Cmp("key", "le", 2000)),
         ScanPlan("mixed", ["ts", "price"], Cmp("ts", "between", (0, 4000))),
     ]
+    # tick budget sized so slices span multiple row groups: beneficiary-
+    # split retention billing interleaves tenants more finely than the old
+    # bill-the-decoder scheme, and at RG_ROWS*16 every slice degenerated
+    # to a single row group — leaving the batched path nothing to amortize
     svc_a, tk_a = _drain_service(mixed, False, plans, hold_ticks=2,
-                                 tick_bytes=RG_ROWS * 16)
+                                 tick_bytes=RG_ROWS * 32)
     svc_b, tk_b = _drain_service(mixed, True, plans, hold_ticks=2,
-                                 tick_bytes=RG_ROWS * 16)
+                                 tick_bytes=RG_ROWS * 32)
     for a, b in zip(tk_a, tk_b):
         assert a.status == b.status == "done"
         _assert_result_identical(b.result, a.result)
@@ -366,9 +370,18 @@ if HAVE_HYPOTHESIS:
 # batch kernel entry points: parity + bucketing
 # ---------------------------------------------------------------------------
 
-def test_bucket_blocks_powers_of_two():
-    assert [ops.bucket_blocks(n) for n in (1, 2, 3, 5, 8, 9, 64, 100)] == \
+def test_bucket_blocks_ladder_and_pow2():
+    # default mode: the two-rung ladder {2^m, 3*2^(m-1)}
+    assert [ops.bucket_blocks(n) for n in (1, 2, 3, 4, 5, 6, 7, 8, 9, 13, 17, 64, 100)] == \
+        [1, 2, 3, 4, 6, 6, 8, 8, 12, 16, 24, 64, 128]
+    # legacy pow2 mode, kept for A/B benching
+    assert [ops.bucket_blocks(n, mode="pow2") for n in (1, 2, 3, 5, 8, 9, 64, 100)] == \
         [1, 2, 4, 8, 8, 16, 64, 128]
+    for n in range(1, 2048):
+        lad = ops.bucket_blocks(n, mode="ladder")
+        p2 = ops.bucket_blocks(n, mode="pow2")
+        assert n <= lad <= p2  # ladder pads no more than pow2, ever
+        assert lad - n <= n  # bounded waste: never more than 2x the payload
 
 
 @pytest.mark.parametrize("backend", ["ref", "pallas"])

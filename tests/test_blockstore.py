@@ -152,6 +152,68 @@ def test_tier_pricing_encoded_vs_prefiltered():
         sum(cm.decode_seconds(b, e) for e, b in work.items()))
 
 
+def test_evicted_decode_demotes_to_its_encoded_page():
+    """Regression: evicting a decoded column used to drop it to zero, so
+    the next access paid re-fetch AND re-decode.  A decoded entry carrying
+    a demote payload now falls back to the encoded tier (re-decode only),
+    with the ledger billing the smaller encoded footprint."""
+    st = BlockStore(capacity_bytes=1000)
+    page = _arr(100)
+    assert st.put("dec", _arr(400), encoding="dict", demote=("pg", page))
+    assert st.put("filler", _arr(500), encoding="delta")
+    assert "pg" not in st
+    # pressure: DICT is the cheapest redecode/byte -> "dec" is the victim
+    assert st.put("new", _arr(400), encoding="delta")
+    assert "dec" not in st
+    e = st.peek("pg")
+    assert e is not None and e.tier == "encoded" and e.nbytes == 100
+    assert e.value is page
+    assert e.redecode_s == pytest.approx(
+        st.cost_model.link_model().fetch_seconds(100))
+    assert st.used == 1000  # 500 + 400 + the demoted 100, all billed
+    assert st.stats()["tiers"]["decoded"]["demotions"] == 1
+    # the source pages being resident already means nothing to preserve:
+    # evicting a later decode with the same payload demotes nothing
+    assert st.put("dec2", _arr(300), encoding="dict", demote=("pg", page))
+    assert st.put("new2", _arr(200), encoding="delta")
+    assert "dec2" not in st and st.peek("pg").nbytes == 100
+    assert st.stats()["tiers"]["decoded"]["demotions"] == 1
+
+
+def test_demotion_never_starves_the_triggering_put():
+    """The demoted entry re-occupies bytes, but it is itself unpinned, so
+    the eviction loop's coverage is preserved: the put that triggered the
+    pressure still lands (the demoted fallback is sacrificed if needed)."""
+    st = BlockStore(capacity_bytes=1000)
+    assert st.put("dec", _arr(900), encoding="dict", demote=("pg", _arr(800)))
+    assert st.put("new", _arr(900), encoding="delta")
+    assert "new" in st and st.used <= 1000
+
+
+def test_retention_charges_split_across_observed_beneficiaries():
+    """Regression: the tenant that happened to decode first used to be
+    billed the WHOLE window-retention price while free-riding coalescing
+    partners paid nothing.  Charges now split equally across the observed
+    beneficiaries, conserving the total."""
+    st = BlockStore(capacity_bytes=1 << 20)
+    view_a = st.window(expires_tick=4, owner="a")
+    view_a.put("k", _arr(1000), encoding="delta")
+    st.advance_tick(1)
+    full = st.retention_charges()
+    assert set(full) == {"a"}  # nobody else observed yet: 'a' pays all
+    nb_full, price_full = full["a"]
+    assert nb_full == 1000 and price_full > 0.0
+    # partner 'b' reuses the decode through its own window view
+    view_b = st.window(expires_tick=4, owner="b")
+    assert view_b.get("k") is not None
+    split = st.retention_charges()
+    assert set(split) == {"a", "b"}
+    assert split["a"][1] == pytest.approx(price_full / 2)
+    assert split["b"][1] == pytest.approx(price_full / 2)
+    assert split["a"][0] == split["b"][0] == 500
+    assert split["a"][1] + split["b"][1] == pytest.approx(price_full)
+
+
 # ---------------------------------------------------------------------------
 # hypothesis property sweep
 # ---------------------------------------------------------------------------

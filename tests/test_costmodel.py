@@ -51,14 +51,54 @@ def test_save_load_round_trip(tmp_path):
     cm = CostModel(rates={"plain": 33.0, "rle": 44.0}, source="calibrated",
                    backend="ref", link_bandwidth_gbps=5.0, link_latency_us=3.0)
     path = cm.save(str(tmp_path / "cal.json"))
-    back = CostModel.load(path)
+    back = CostModel.load(path)  # active backend is 'ref' on CPU
     assert back.rates == cm.rates
     assert back.source == "calibrated"
     assert back.link_model().bandwidth_gbps == 5.0
     assert back.link_model().latency_us == 3.0
-    # the persisted file is plain JSON with sorted keys (diffable in CI)
+    # the persisted file is per-backend JSON with sorted keys (diffable)
     d = json.loads(open(path).read())
-    assert list(d["rates_gbps"]) == sorted(d["rates_gbps"])
+    entry = d["backends"]["ref"]
+    assert list(entry["rates_gbps"]) == sorted(entry["rates_gbps"])
+
+
+def test_save_merges_per_backend_and_load_picks_the_active_one(tmp_path):
+    """ref-jitted and pallas tables live side by side in one file; saving
+    one backend must not clobber the other, and load() must refuse to
+    price one backend with another's table."""
+    path = str(tmp_path / "cal.json")
+    ref_cm = CostModel(rates={"rle": 1.0}, source="calibrated", backend="ref",
+                       launch_overhead_s=1e-5)
+    pal_cm = CostModel(rates={"rle": 100.0}, source="calibrated",
+                       backend="pallas", launch_overhead_s=1e-6)
+    ref_cm.save(path)
+    pal_cm.save(path)  # merge, not clobber
+    assert CostModel.load(path, backend="ref").rates["rle"] == 1.0
+    assert CostModel.load(path, backend="pallas").rates["rle"] == 100.0
+    assert CostModel.load(path, backend="pallas").launch_overhead_s == 1e-6
+    # no entry for an unknown backend -> KeyError, and load_or_nominal
+    # degrades to nominal instead of borrowing the wrong table
+    with pytest.raises(KeyError):
+        CostModel.load(path, backend="tpu-v9")
+    deg = CostModel.load_or_nominal(path, backend="tpu-v9")
+    assert deg.source == "nominal"
+    # default load resolves to the ACTIVE backend ('ref' off-TPU)
+    assert CostModel.load(path).rates["rle"] == 1.0
+
+
+def test_load_accepts_legacy_flat_format(tmp_path):
+    legacy = {"rates_gbps": {"plain": 9.0}, "source": "calibrated",
+              "backend": "ref", "launch_overhead_s": 2e-5}
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps(legacy))
+    back = CostModel.load(str(path))
+    assert back.rates["plain"] == 9.0
+    assert back.launch_overhead_s == 2e-5
+    # saving on top folds the legacy entry into the per-backend format
+    CostModel(rates={"plain": 5.0}, backend="pallas",
+              source="calibrated").save(str(path))
+    assert CostModel.load(str(path), backend="ref").rates["plain"] == 9.0
+    assert CostModel.load(str(path), backend="pallas").rates["plain"] == 5.0
 
 
 def test_load_or_nominal_degrades_gracefully(tmp_path):
@@ -212,6 +252,33 @@ def test_decode_model_is_encoding_aware():
     assert dm.decode_seconds(1 << 20, "rle") == pytest.approx(
         dm.decode_seconds(1 << 20) / 4)
     assert dm.decode_seconds(1 << 20, "bitpack") == dm.decode_seconds(1 << 20)
+
+
+def test_default_decode_model_reads_the_registered_table():
+    """A default-constructed DecodeModel/PrefetchPipeline must price from
+    the process-default per-backend cost model (the one the service
+    registers), not a stale module-level constant — after calibration the
+    simulated overlap and the scheduler's charges come from one table."""
+    from repro.datapath import costmodel as cmod
+
+    prev = cmod.set_default_cost_model(None)
+    try:
+        dm = DecodeModel()  # no registration: the nominal table
+        assert dm.rates == NOMINAL_RATES_GBPS
+        assert dm.decode_gbps == NOMINAL_RATES_GBPS["plain"]
+        cal = CostModel(rates={"plain": 3.0, "rle": 7.0}, source="calibrated",
+                        launch_overhead_s=5e-6)
+        cmod.set_default_cost_model(cal)
+        dm2 = DecodeModel()
+        assert dm2.rates == cal.rates
+        assert dm2.decode_gbps == 3.0
+        assert dm2.launch_overhead_s == 5e-6
+        assert PrefetchPipeline().decode.rates == cal.rates
+        # explicit scalar construction keeps the old scalar-model semantics
+        dm3 = DecodeModel(decode_gbps=10.0)
+        assert dm3.rates is None and dm3.launch_overhead_s == 0.0
+    finally:
+        cmod.set_default_cost_model(prev)
 
 
 def test_pipeline_decode_seconds_override():

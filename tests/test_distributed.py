@@ -21,21 +21,21 @@ def test_hierarchical_psum_exact():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.distributed.collectives import hierarchical_psum
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.distributed.compat import make_mesh, shard_map
+mesh = make_mesh((2, 4), ("pod", "data"))
 x = jnp.arange(8 * 6, dtype=jnp.float32).reshape(8, 6)
 
 def f(x):
     return hierarchical_psum(x, intra_axis="data", inter_axis="pod")
 
-y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(("pod","data"), None),
-                          out_specs=P(("pod","data"), None)))(x)
+y = jax.jit(shard_map(f, mesh=mesh, in_specs=P(("pod","data"), None),
+                      out_specs=P(("pod","data"), None)))(x)
 # every shard's local x summed over all 8 shards => each row group identical
 exp = x.reshape(8, 1, 6).sum(0, keepdims=True)  # local shards are rows
 # per-shard local value is its row; sum over all shards = column sum broadcast
 expected = np.tile(np.asarray(x).reshape(8,6).sum(0, keepdims=True)/1, (8,1))
 # compare via psum reference
-ref = jax.jit(jax.shard_map(lambda v: jax.lax.psum(v, ("pod","data")), mesh=mesh,
+ref = jax.jit(shard_map(lambda v: jax.lax.psum(v, ("pod","data")), mesh=mesh,
               in_specs=P(("pod","data"), None), out_specs=P(("pod","data"), None)))(x)
 assert np.allclose(np.asarray(y), np.asarray(ref)), (np.asarray(y)[:2], np.asarray(ref)[:2])
 print("HIER_OK")
@@ -51,14 +51,15 @@ def test_compressed_psum_error_feedback_converges():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.distributed.collectives import compressed_psum
-mesh = jax.make_mesh((8,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed.compat import make_mesh, shard_map
+mesh = make_mesh((8,), ("pod",))
 rng = np.random.default_rng(0)
 g = jnp.asarray(rng.standard_normal((8, 128)).astype(np.float32))
 
 def one(gl, err):
     return compressed_psum(gl, err, "pod")
 
-f = jax.jit(jax.shard_map(one, mesh=mesh, in_specs=(P("pod", None), P("pod", None)),
+f = jax.jit(shard_map(one, mesh=mesh, in_specs=(P("pod", None), P("pod", None)),
             out_specs=(P("pod", None), P("pod", None))))
 err = jnp.zeros((8, 128), jnp.float32)
 exact = np.asarray(g).reshape(8, 1, 128).sum(0)
@@ -85,6 +86,7 @@ def test_moe_2d_ep_matches_single_device():
         """
 import jax, jax.numpy as jnp, numpy as np, dataclasses
 from repro.configs import get_smoke_config
+from repro.distributed.compat import make_mesh, use_mesh
 from repro.distributed.sharding import ShardingCtx
 from repro.models.moe import moe_ffn
 from repro.models.model import init_params
@@ -100,10 +102,9 @@ for moe_ff, tag in [(48, "2d"), (48, "resident")]:
     x = jnp.asarray(rng.standard_normal((8, 16, cfg.d_model)).astype(np.float32)*0.3,
                     jnp.bfloat16)
     y_ref, _ = moe_ffn(x, moe_params, cfg, ShardingCtx(mesh=None))
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     ctx = ShardingCtx(mesh=mesh, strategy="fsdp_ep")
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         y2d, _ = jax.jit(lambda x, p: moe_ffn(x, p, cfg, ctx))(x, moe_params)
     d = jnp.abs(y_ref.astype(jnp.float32) - y2d.astype(jnp.float32))
     frac = float(jnp.mean(d > 1e-2))
@@ -120,6 +121,7 @@ def test_moe_ep_matches_single_device():
         """
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_smoke_config
+from repro.distributed.compat import make_mesh, use_mesh
 from repro.distributed.sharding import ShardingCtx
 from repro.models.moe import moe_ffn
 from repro.models.model import init_params
@@ -138,10 +140,9 @@ x = jnp.asarray(rng.standard_normal((4, 16, cfg.d_model)).astype(np.float32) * 0
 y_ref, aux_ref = moe_ffn(x, moe_params, cfg, ShardingCtx(mesh=None))
 
 # EP over (data=2, model=4): 2 experts per shard
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 ctx = ShardingCtx(mesh=mesh)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     y_ep, aux_ep = jax.jit(lambda x, p: moe_ffn(x, p, cfg, ctx))(x, moe_params)
 err = float(jnp.max(jnp.abs(y_ref.astype(jnp.float32) - y_ep.astype(jnp.float32))))
 # capacity per shard differs from the single-device capacity, so token drops

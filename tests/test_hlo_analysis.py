@@ -10,6 +10,7 @@ def test_scan_and_nested_and_collectives():
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from hlo_analysis import analyze_compiled
+from repro.distributed.compat import make_mesh, use_mesh
 
 M=K=N=256
 def g(a, bs):
@@ -20,7 +21,9 @@ c = jax.jit(g).lower(jax.ShapeDtypeStruct((M,K),jnp.float32),
 r = analyze_compiled(c)
 assert abs(r.flops/(12*2*M*K*N) - 1) < 1e-6, r.flops
 # raw XLA undercounts scans (body counted once): our analyzer must not
-assert c.cost_analysis()["flops"] < r.flops / 5
+ca = c.cost_analysis()
+ca = ca[0] if isinstance(ca, (list, tuple)) else ca  # older jax: per-device list
+assert ca["flops"] < r.flops / 5
 
 def h(a, ws):
     def outer(x, wrow):
@@ -31,12 +34,12 @@ c = jax.jit(h).lower(jax.ShapeDtypeStruct((M,K),jnp.float32),
                      jax.ShapeDtypeStruct((3,4,K,N),jnp.float32)).compile()
 assert abs(analyze_compiled(c).flops/(12*2*M*K*N) - 1) < 1e-6
 
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("x",))
 def f4(a, bs):
     def body(x, w):
         return jax.lax.with_sharding_constraint(x @ w, NamedSharding(mesh, P())), None
     return jax.lax.scan(body, a, bs)[0]
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     sa = jax.ShapeDtypeStruct((M,K), jnp.float32, sharding=NamedSharding(mesh, P(None,"x")))
     sb = jax.ShapeDtypeStruct((5,K,N), jnp.float32, sharding=NamedSharding(mesh, P(None,"x",None)))
     c = jax.jit(f4).lower(sa,sb).compile()
