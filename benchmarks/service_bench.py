@@ -62,6 +62,13 @@ Reported rows:
     service.trace.*        tracing overhead + stage attribution vs Fig. 2
     service.kernels.roofline  rewritten-core rates vs the pre-rewrite
                            anchor + ladder-vs-pow2 pad-waste bytes
+    service.fabric.*       pod-sharded fleet: aggregate simulated
+                           throughput at 1/2/4 pods (makespan = max
+                           per-pod busy seconds), scale-out peer-fetch
+                           bytes vs the storage-hop equivalent, fleet
+                           Jain index with the WFQ re-level on vs
+                           per-pod local clocks, kill-one-pod
+                           drain/replay with bit-identity
 """
 
 from __future__ import annotations
@@ -610,6 +617,223 @@ def run_kernel_roofline() -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# fabric sub-report: pod-sharded fleet — scaling, peer fetch, fairness, drain
+# ---------------------------------------------------------------------------
+
+FABRIC_RG_ROWS = 2048  # small groups so every fleet size splits the table
+
+
+def fabric_setup(sf: float = 0.1):
+    d = os.path.join(DATA_DIR, f"tpch_fabric_sf{sf}")
+    if not os.path.exists(os.path.join(d, "lineitem.lake")):
+        tpch.write_tables(d, sf=sf, seed=0, sorted_data=True,
+                          row_group_size=FABRIC_RG_ROWS)
+    return LakeReader(os.path.join(d, "lineitem.lake"))
+
+
+def _fabric_busy_s(fab) -> dict:
+    """Per-pod occupancy in SIMULATED seconds — the same scheduled +
+    reconciled + retention currency the WFQ clocks charge.  Fleet
+    makespan is the max (pods run concurrently in real deployments even
+    though the bench ticks them serially)."""
+    return {
+        pid: (sum(fab.pods[pid].telemetry.tenant_sched_seconds.values())
+              + sum(fab.pods[pid].telemetry.tenant_recon_seconds.values())
+              + sum(fab.pods[pid].telemetry.tenant_retained_seconds.values()))
+        for pid in fab.live_pods
+    }
+
+
+def _run_fleet(reader, n_pods: int) -> dict:
+    from repro.datapath import ScanFabric
+
+    fab = ScanFabric(n_pods=n_pods, policy=StaticPolicy("raw"))
+    plans = [ScanPlan("lineitem", ["l_extendedprice", "l_quantity"]),
+             ScanPlan("lineitem", ["l_discount", "l_tax"]),
+             ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+                      Cmp("l_quantity", "le", 25))]
+    for t, plan in enumerate(plans):
+        fab.submit(f"tenant{t}", reader, plan)
+    fab.drain()
+    busy = _fabric_busy_s(fab)
+    makespan = max(busy.values()) if busy else 0.0
+    decoded = sum(sum(fab.pods[p].telemetry.tenant_decoded_bytes.values())
+                  for p in fab.live_pods)
+    return {
+        "busy_s": busy,
+        "makespan_s": makespan,
+        "decoded_bytes": int(decoded),
+        "throughput_gbps": decoded / max(makespan, 1e-12) / 1e9,
+    }
+
+
+def _run_fabric_peer(reader) -> dict:
+    """Scale-out reuse: a 2-pod fleet warms its decoded/encoded tiers, a
+    third pod joins and steals arcs — its cold misses pull warm blocks
+    from the old owners over the inter-pod hop instead of re-fetching
+    storage, and the hop is billed into the tenant's WFQ clock."""
+    from repro.datapath import ScanFabric
+
+    cm = CostModel()
+    fab = ScanFabric(n_pods=2, policy=StaticPolicy("preloaded"),
+                     cost_model=cm)
+    plan = ScanPlan("lineitem", ["l_extendedprice", "l_quantity"],
+                    Cmp("l_quantity", "le", 25))
+    fab.scan(reader, plan)  # warm the original owners
+    new_pid = fab.add_pod()
+    res = fab.scan(reader, plan)  # stolen arcs peer-fetch
+    store = fab.pods[new_pid].store
+    peer_bytes = int(store.peer_hit_bytes)
+    peer_s = float(store.peer_hit_seconds)
+    # storage equivalent pays the round trip PER BLOCK, same as the peer
+    # hop does (fetch_seconds is affine, so hits * latency + bytes / bw
+    # is the exact per-block sum)
+    lm = cm.link_model()
+    storage_equiv_s = (store.peer_hits * lm.latency_us * 1e-6
+                       + peer_bytes / (lm.bandwidth_gbps * 1e9))
+    return {
+        "peer_hits": int(store.peer_hits),
+        "peer_bytes": peer_bytes,
+        "peer_s": peer_s,
+        "storage_equiv_s": storage_equiv_s,
+        "hop_speedup": storage_equiv_s / max(peer_s, 1e-12),
+        "billed_bytes": int(res.stats.peer_bytes),
+        "billed_to_wfq": float(
+            fab.pods[new_pid].telemetry.tenant_peer_seconds.get("default", 0.0)
+        ) > 0.0,
+    }
+
+
+def _run_fabric_skew(reader, relevel: bool) -> dict:
+    """1 elephant / 3 mice across a 2-pod fleet.  Without the fleet-level
+    re-level, each pod's WFQ clock sees only LOCAL consumption, so a
+    tenant spread over N pods gets up to N fresh clocks; the re-level
+    charges queued tenants their foreign occupancy every tick."""
+    from repro.datapath import ScanFabric, jain_index
+
+    fab = ScanFabric(n_pods=2, policy=StaticPolicy("raw"),
+                     tick_bytes=int(FABRIC_RG_ROWS * 4 * 2 * 1.5),
+                     reconcile_fairness=relevel)
+    fab.submit("elephant", reader,
+               ScanPlan("lineitem", ["l_extendedprice", "l_quantity"]))
+    fab.submit("elephant", reader,
+               ScanPlan("lineitem", ["l_discount", "l_tax"]))
+    mice = [fab.submit(f"mouse{i}", reader,
+                       ScanPlan("lineitem", ["l_extendedprice"],
+                                Cmp("l_shipdate", "between", (d, d + 200))))
+            for i, d in enumerate((300, 900, 1500))]
+    done_tick = {}
+    ticks = 0
+    while fab.active:
+        ticks += 1
+        fab.tick()
+        for i, m in enumerate(mice):
+            if m.status == "done" and i not in done_tick:
+                done_tick[i] = ticks
+    occ = {}
+    for pid in fab.live_pods:
+        tel = fab.pods[pid].telemetry
+        for t in tel.known_tenants():
+            occ[t] = (occ.get(t, 0.0)
+                      + tel.tenant_decoded_bytes.get(t, 0.0)
+                      + tel.tenant_retained_bytes.get(t, 0.0))
+    charged = sum(fab.pods[p].telemetry.counters.get("fleet_vtime_seconds", 0.0)
+                  for p in fab.live_pods)
+    return {
+        "jain": jain_index(list(occ.values())),
+        "tenant_bytes": {k: int(v) for k, v in sorted(occ.items())},
+        "mice_p99_ticks": max(done_tick.values()) if done_tick else 0,
+        "total_ticks": ticks,
+        "fleet_vtime_charged_s": charged,
+        # the mechanism itself: with the re-level each pod's elephant
+        # clock carries the elephant's FLEET-wide consumption, not just
+        # the local slice
+        "elephant_vtime_s": max(
+            fab.pods[p]._vtime.get("elephant", 0.0) for p in fab.live_pods
+        ),
+    }
+
+
+def _run_fabric_drain(reader) -> dict:
+    """Kill one of three pods mid-scan; the fabric re-partitions only the
+    dead pod's uncollected sub-scans and the merged result must still be
+    bit-identical to the single-node engine."""
+    import numpy as np
+
+    from repro.datapath import ScanFabric
+
+    plan = ScanPlan("lineitem", ["l_extendedprice", "l_quantity"],
+                    Cmp("l_quantity", "le", 25))
+    want = DatapathEngine(backend="ref").scan(reader, plan)
+    fab = ScanFabric(n_pods=3, policy=StaticPolicy("raw"),
+                     tick_bytes=1 << 16)
+    t = fab.submit("t0", reader, plan)
+    fab.tick()
+    victims = [s.pod_id for s in t.subs.values() if s.ticket.status == "queued"]
+    if victims:
+        fab.fail_pod(victims[0])
+    fab.drain()
+    identical = (
+        int(t.result.count) == int(want.count)
+        and np.array_equal(np.asarray(t.result.mask), np.asarray(want.mask))
+        and all(np.array_equal(np.asarray(t.result.columns[c]),
+                               np.asarray(want.columns[c]))
+                for c in want.columns)
+    )
+    d = fab.report()["drains"]
+    return {
+        "killed": victims[0] if victims else None,
+        "reassigned": d[-1]["reassigned"] if d else 0,
+        "replayed": d[-1]["replayed"] if d else 0,
+        "replays": t.replays,
+        "bit_identical": bool(identical),
+    }
+
+
+def run_fabric(sf: float = 0.1) -> dict:
+    reader = fabric_setup(sf)
+    scaling = {n: _run_fleet(reader, n) for n in (1, 2, 4)}
+    base = scaling[1]["throughput_gbps"]
+    row("service.fabric.scaling", 0.0,
+        ";".join(f"pods{n}={s['throughput_gbps']:.3f}GBps"
+                 f" ({s['throughput_gbps'] / max(base, 1e-12):.2f}x)"
+                 for n, s in sorted(scaling.items()))
+        + f";rgs={reader.n_row_groups}")
+
+    peer = _run_fabric_peer(reader)
+    row("service.fabric.peer", peer["peer_s"],
+        f"peer_bytes={peer['peer_bytes']};hits={peer['peer_hits']};"
+        f"peer_s={peer['peer_s']:.6f}"
+        f"/storage_equiv_s={peer['storage_equiv_s']:.6f}"
+        f" ({peer['hop_speedup']:.2f}x);"
+        f"billed_to_wfq={peer['billed_to_wfq']}")
+
+    skew_on = _run_fabric_skew(reader, relevel=True)
+    skew_off = _run_fabric_skew(reader, relevel=False)
+    row("service.fabric.fairness", 0.0,
+        f"mice_p99_ticks_relevel={skew_on['mice_p99_ticks']}"
+        f"/local_clocks={skew_off['mice_p99_ticks']};"
+        f"jain={skew_on['jain']:.4f};"
+        f"elephant_vtime_relevel={skew_on['elephant_vtime_s']:.6f}"
+        f"/local={skew_off['elephant_vtime_s']:.6f};"
+        f"fleet_vtime_charged_s={skew_on['fleet_vtime_charged_s']:.6f}")
+
+    drain = _run_fabric_drain(reader)
+    row("service.fabric.drain", 0.0,
+        f"killed={drain['killed']};reassigned={drain['reassigned']};"
+        f"replayed={drain['replayed']};bit_identical={drain['bit_identical']}")
+
+    return {
+        "scaling": {f"pods{n}": s for n, s in sorted(scaling.items())},
+        "throughput_speedup_4pod": scaling[4]["throughput_gbps"] / max(base, 1e-12),
+        "peer": peer,
+        "fairness_relevel": skew_on,
+        "fairness_local_clocks": skew_off,
+        "drain": drain,
+    }
+
+
 def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
     readers = setup(sf)
     plans = tenant_plans(n_tenants)
@@ -662,8 +886,10 @@ def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
     batchdecode = run_batchdecode(sf)
     tracing = run_trace(sf)
     kernels = run_kernel_roofline()
+    fabric = run_fabric(sf)
 
     return {
+        "fabric": fabric,
         "fairness": fairness,
         "costmodel": costmodel,
         "blockstore": blockstore,

@@ -30,7 +30,10 @@ python -c "from repro.datapath.costmodel import main; import sys; sys.exit(main(
 # stage attribution against the paper's Fig. 2 46/17/37 split), and the
 # `kernels` sub-report (`service.kernels.roofline`: rewritten decode-core
 # rates vs the pre-rewrite point-5 anchor, ladder-vs-pow2 pad-waste
-# bytes) — appended to the perf trajectory
+# bytes), and the `fabric` sub-report (pod-sharded fleet: aggregate
+# simulated throughput at 1/2/4 pods, scale-out peer-fetch vs storage
+# bytes, fleet Jain fairness with the WFQ re-level on/off, kill-one-pod
+# drain/replay bit-identity) — appended to the perf trajectory
 python -m benchmarks.run --fast --only service --json BENCH_point.json
 python scripts/append_bench_point.py BENCH_point.json BENCH_service.json
 rm -f BENCH_point.json

@@ -42,6 +42,11 @@ class BlockCache:
 
             store = BlockStore(capacity_bytes=capacity_bytes)
         self.store = store
+        # Fabric hook: a blockstore.PeerFetcher consulted when a COUNTING
+        # get misses locally — a sibling pod's encoded/decoded tier serves
+        # a copy over the inter-pod link.  None on single-node services;
+        # probes (__contains__/plan_fetch) never cross pods either way.
+        self.peer = None
 
     @staticmethod
     def _tier(key: Hashable) -> str:
@@ -77,8 +82,15 @@ class BlockCache:
         """Presence check without touching LRU order or hit/miss counters."""
         return key in self.store
 
-    def get(self, key: Hashable):
-        return self.store.get(key, tier=self._tier(key))
+    def get(self, key: Hashable, stats=None):
+        """Counting lookup.  On a local miss a fabric peer (if installed)
+        may serve the block over the inter-pod hop; `stats` (a ScanStats)
+        then receives the transferred bytes so the slice that triggered
+        the fetch is the one WFQ bills for the hop."""
+        v = self.store.get(key, tier=self._tier(key))
+        if v is None and self.peer is not None:
+            v = self.peer.fetch(key, self.store, stats=stats)
+        return v
 
     def put(
         self,

@@ -118,6 +118,11 @@ class ScanStats:
     # Batched-path shape telemetry: blocks of pure padding added to reach
     # each bucket's power-of-two size (the price of shape-stable jit).
     batch_pad_blocks: int = 0
+    # Fabric peer fetches: bytes this scan pulled from a sibling pod's
+    # block store instead of storage (cache.BlockCache.get threads the
+    # stats object down to the PeerFetcher).  Priced per slice over the
+    # inter-pod link at WFQ reconcile; always 0 on single-node services.
+    peer_bytes: int = 0
 
 
 @dataclasses.dataclass
@@ -241,7 +246,7 @@ class DatapathEngine:
                     stats.pool_hit_bytes += int(hit.nbytes)
                 return hit, True
         if offload in ("preloaded", "prefiltered"):
-            hit = self.cache.get(key)
+            hit = self.cache.get(key, stats=stats)
             if hit is not None:
                 if pool is not None:
                     self._pool_put(pool, key, hit)
@@ -409,7 +414,8 @@ class DatapathEngine:
         if mode in ("preloaded", "prefiltered"):
             missing = []
             for name in need:
-                page = self.cache.get(self.page_cache_key(reader, rg, name))
+                page = self.cache.get(self.page_cache_key(reader, rg, name),
+                                      stats=stats)
                 if page is None:
                     missing.append(name)
                 else:
@@ -450,11 +456,18 @@ class DatapathEngine:
     # service hooks (metadata only — used by repro.datapath for admission
     # control and the adaptive offload policy)
     # ------------------------------------------------------------------
-    def plan_cache_key(self, reader, plan: ScanPlan, blooms: Optional[Dict] = None):
+    def plan_cache_key(self, reader, plan: ScanPlan, blooms: Optional[Dict] = None,
+                       tag=None):
         """Prefiltered-cache key for a whole scan: plan signature + backend +
         a digest of any probe-side bloom filters.  Blooms are per-caller
         state that the plan signature cannot see — leaving them out would
-        let one tenant's semijoin result answer another tenant's probe."""
+        let one tenant's semijoin result answer another tenant's probe.
+
+        `tag` scopes the key beyond the plan: the scan fabric tags each
+        pod sub-request with its owned row-group subset, so a cached
+        sub-result can never answer a DIFFERENT subset of the same plan
+        (e.g. after a drain re-hashes ownership).  None (every single-node
+        caller) leaves the key exactly as before."""
         key = ("scan", reader.path, plan.signature(), self.backend)
         if blooms:
             digest = tuple(
@@ -464,6 +477,8 @@ class DatapathEngine:
                 )
             )
             key += (digest,)
+        if tag is not None:
+            key += (tag,)
         return key
 
     def estimate_selectivity(self, reader, plan: ScanPlan) -> float:
@@ -743,15 +758,15 @@ class DatapathEngine:
                 for name in proj:
                     arr, _ = self._decode_column(
                         reader, rg, name, enc[name], L, offload=offload,
-                        pool=pool, stats=stats, precomputed=decoded.get((rg, name)),
+                        pool=pool, stats=stats, precomputed=decoded.get((0, rg, name)),
                     )
                     cols[name] = arr
-                mask = fmasks[rg]
+                mask = fmasks[(0, rg)]
             else:
                 for name in need:
                     arr, _ = self._decode_column(
                         reader, rg, name, enc[name], L, offload=offload,
-                        pool=pool, stats=stats, precomputed=decoded.get((rg, name)),
+                        pool=pool, stats=stats, precomputed=decoded.get((0, rg, name)),
                     )
                     cols[name] = arr
                 mask = self._eval_mask(pred, cols, blooms, L, rg)
@@ -779,7 +794,8 @@ class DatapathEngine:
             # bytes, NOT encoded_bytes (nothing re-crosses the hop, so
             # netsim must not price a transfer)
             if mode in ("preloaded", "prefiltered"):
-                col = self.cache.get(self.page_cache_key(reader, rg, name))
+                col = self.cache.get(self.page_cache_key(reader, rg, name),
+                                     stats=stats)
                 if col is not None:
                     stats.page_hits += 1
                     stats.page_hit_bytes += col.encoded_bytes()
@@ -804,19 +820,31 @@ class DatapathEngine:
     def _launch_buckets(self, slots, pred, stats):
         """Group every pending (row group, column) page by its launch
         signature and decode each bucket in ONE device dispatch.  Returns
-        ({(rg, name): decoded (L,) array}, {rg: fused mask})."""
+        ({(item, rg, name): decoded (L,) array}, {(item, rg): fused mask}).
+
+        Slots from a single scan leave `item`/`pred`/`stats` unset (they
+        default to 0 and the arguments).  The cross-request group path
+        (`scan_group_batched`) sets all three per slot: pages from MANY
+        requests stack into the same buckets, each slot's fusability uses
+        its own predicate, and a bucket's launch/pad counters are charged
+        to the stats of its first contributing request (reconciliation
+        refunds the others their share — kernel_launches is the one field
+        batching is allowed to move)."""
         buckets: Dict[tuple, List[dict]] = {}
         fused_items: Dict[int, List[dict]] = {}
         for slot in slots:
             if slot["resident"]:
                 continue
             rg, L = slot["rg"], slot["L"]
+            item = slot.get("item", 0)
+            spred = slot.get("pred", pred)
+            sstats = slot.get("stats", stats)
             if slot["fuse"] is not None:
-                col = slot["enc"][pred.column]
+                col = slot["enc"][spred.column]
                 lo, hi = slot["fuse"]
                 fused_items.setdefault(col.k, []).append(
                     {"rg": rg, "L": L, "packed": col.buffers["packed"],
-                     "lo": lo, "hi": hi}
+                     "lo": lo, "hi": hi, "item": item, "stats": sstats}
                 )
             for name in slot["decode"]:
                 col = slot["enc"][name]
@@ -834,29 +862,32 @@ class DatapathEngine:
                 else:
                     bkey = ("rle", str(col.buffers["rle_values"].dtype))
                 buckets.setdefault(bkey, []).append(
-                    {"rg": rg, "name": name, "col": col, "L": L}
+                    {"rg": rg, "name": name, "col": col, "L": L,
+                     "item": item, "stats": sstats}
                 )
 
         be = self.backend
         decoded: Dict[tuple, jax.Array] = {}
         for bkey, items in buckets.items():
+            bstats = items[0]["stats"]
             tr = _tr()
             if tr is not None:
-                launches0 = stats.kernel_launches
-                pad0 = stats.batch_pad_blocks
+                launches0 = bstats.kernel_launches
+                pad0 = bstats.batch_pad_blocks
                 tr.begin("decode_launch",
                          bucket="/".join(str(p) for p in bkey),
                          pages=len(items))
-            decoded.update(self._decode_bucket(bkey, items, be, stats))
+            decoded.update(self._decode_bucket(bkey, items, be, bstats))
             if tr is not None:
                 tr.end(name="decode_launch",
-                       launches=stats.kernel_launches - launches0,
-                       pad_blocks=stats.batch_pad_blocks - pad0)
-        fmasks: Dict[int, jax.Array] = {}
+                       launches=bstats.kernel_launches - launches0,
+                       pad_blocks=bstats.batch_pad_blocks - pad0)
+        fmasks: Dict[tuple, jax.Array] = {}
         for k, items in sorted(fused_items.items()):
+            bstats = items[0]["stats"]
             tr = _tr()
             if tr is not None:
-                pad0 = stats.batch_pad_blocks
+                pad0 = bstats.batch_pad_blocks
                 tr.begin("decode_launch", bucket=f"fused/k{k}",
                          pages=len(items), fused=True)
             packed = np.concatenate([it["packed"] for it in items], axis=0)
@@ -866,15 +897,15 @@ class DatapathEngine:
             hi = np.concatenate(
                 [np.full(b, it["hi"], np.int32) for b, it in zip(blocks, items)])
             mask = ops.fused_scan_batch(packed, k, lo, hi, backend=be)
-            stats.kernel_launches += 1
-            stats.batch_pad_blocks += ops.bucket_blocks(packed.shape[0]) - packed.shape[0]
+            bstats.kernel_launches += 1
+            bstats.batch_pad_blocks += ops.bucket_blocks(packed.shape[0]) - packed.shape[0]
             s = 0
             for b, it in zip(blocks, items):
-                fmasks[it["rg"]] = mask[s:s + b].reshape(-1)[: it["L"]]
+                fmasks[(it["item"], it["rg"])] = mask[s:s + b].reshape(-1)[: it["L"]]
                 s += b
             if tr is not None:
                 tr.end(name="decode_launch", launches=1,
-                       pad_blocks=stats.batch_pad_blocks - pad0)
+                       pad_blocks=bstats.batch_pad_blocks - pad0)
         return decoded, fmasks
 
     @staticmethod
@@ -888,7 +919,7 @@ class DatapathEngine:
             L = it["L"]
             if flat.shape[0] < L:
                 flat = jnp.pad(flat, (0, L - flat.shape[0]))
-            res[(it["rg"], it["name"])] = flat[:L]
+            res[(it.get("item", 0), it["rg"], it["name"])] = flat[:L]
             s += b
         return res
 
@@ -909,7 +940,7 @@ class DatapathEngine:
             stats.kernel_launches += 1
             res, s = {}, 0
             for it in items:
-                res[(it["rg"], it["name"])] = out[s:s + it["L"]]
+                res[(it.get("item", 0), it["rg"], it["name"])] = out[s:s + it["L"]]
                 s += it["L"]
             return res
         stats.kernel_launches += 1
@@ -950,6 +981,183 @@ class DatapathEngine:
             out = ops.rle_decode_batch(values, ends, backend=be)
         stats.batch_pad_blocks += ops.bucket_blocks(sum(blocks)) - sum(blocks)
         return self._split_flat(out, items, blocks)
+
+    # ------------------------------------------------------------------
+    # cross-request bucket stacking (DESIGN.md §15)
+    # ------------------------------------------------------------------
+    def scan_group_batched(self, items, pool=None):
+        """Decode the slices of SEVERAL coalesced scans over one table in
+        a single bucketed launch pass.
+
+        Each item is one request's slice: {"reader", "rgs", "plan",
+        "pred", "blooms", "stats", "offload", "owner", "trace"} — the
+        per-request state `ResumableScan.advance_batched` would have
+        passed to `scan_row_groups_batched`.  Returns [(per_rg, fetched)]
+        aligned with items, each element carrying that request's own
+        columns/masks and fetched row groups, ready for
+        `ResumableScan.ingest_batched`.
+
+        Where this beats per-request batching: before this entry point,
+        same-tick requests over the same table launched their buckets
+        separately and shared decodes only through pool hits at finalize
+        time.  Here every request's pages stack into ONE set of buckets
+        (fewer dispatches), and a page two requests both need decodes
+        exactly once — the later request skips it in phase A (`pending`)
+        and serves it as a pool hit at its finalize, which is precisely
+        the accounting the sequential order would have produced.
+
+        Attribution rules: `pool.owner` and the trace slice context are
+        rebound per item around its phase-A and finalize work, so window
+        billing and the flight recorder see per-request activity; a
+        stacked bucket's launch is charged to its first contributor's
+        stats (WFQ reconciliation refunds the difference)."""
+        tr_mod = TRACE
+
+        def _ctx(it):
+            if tr_mod is not None:
+                t = it.get("trace")
+                tr_mod.set_slice(*(t if t else (None, None)))
+
+        def _owner(it):
+            if pool is not None and hasattr(pool, "owner"):
+                pool.owner = it.get("owner", pool.owner)
+
+        if self.backend == "host":
+            # the host baseline has no device launches to stack: run each
+            # request through the normal batched entry (which itself falls
+            # back to sequential on host), sharing only the pool
+            out = []
+            for it in items:
+                _owner(it)
+                _ctx(it)
+                out.append(self.scan_row_groups_batched(
+                    it["reader"], it["rgs"], it["plan"], it["pred"],
+                    it["blooms"], it["stats"], pool=pool, offload=it["offload"],
+                ))
+            if tr_mod is not None:
+                tr_mod.set_slice(None, None)
+            return out
+
+        # -- phase A per item, in order: residency / page tier / fetch ----
+        slots_by_item: List[List[dict]] = []
+        fetched_by_item: List[List[int]] = [[] for _ in items]
+        pending: set = set()  # keys an EARLIER item decodes in this pass
+        for i, it in enumerate(items):
+            reader, plan, pred = it["reader"], it["plan"], it["pred"]
+            mode = it["offload"] or self.offload
+            stats = it["stats"]
+            need = plan.all_columns()
+            proj = plan.columns
+            _owner(it)
+            _ctx(it)
+            slots = []
+            for rg in it["rgs"]:
+                keys = [self.rg_cache_key(reader, rg, name) for name in need]
+                if (pool is not None
+                        and all(k in pool or k in pending for k in keys)
+                        and any(k in pending for k in keys)):
+                    # every needed column is pooled or scheduled by an
+                    # earlier request in THIS pass: by this item's
+                    # finalize (strict item order) they are pool entries
+                    # — the same full residency the sequential order
+                    # would have seen after the earlier request's puts
+                    n = reader.row_group_meta(rg)["n"]
+                    slots.append({"rg": rg, "n": n, "L": padded_rows(n),
+                                  "resident": True, "enc": {}, "fuse": None,
+                                  "decode": [], "item": i, "pred": pred,
+                                  "stats": stats})
+                    continue
+                n, L, resident, enc, fuse, did_fetch = self._prepare_row_group(
+                    reader, rg, plan, pred, mode, stats, pool=pool
+                )
+                slot = {"rg": rg, "n": n, "L": L, "resident": resident,
+                        "enc": enc, "fuse": fuse, "decode": [],
+                        "item": i, "pred": pred, "stats": stats}
+                slots.append(slot)
+                if did_fetch:
+                    fetched_by_item[i].append(rg)
+                if resident:
+                    continue
+                for name in (proj if fuse is not None else need):
+                    key = self.rg_cache_key(reader, rg, name)
+                    if pool is not None and key in pool:
+                        continue
+                    if mode in ("preloaded", "prefiltered") and key in self.cache:
+                        continue
+                    if pool is not None and key in pending:
+                        continue  # an earlier request decodes it; our
+                        # finalize serves it as a pool hit
+                    slot["decode"].append(name)
+                    pending.add(key)
+            slots_by_item.append(slots)
+
+        # -- phase B: ONE bucket pass across every request's pages --------
+        # (bucket launch spans attribute to the first traced item)
+        if tr_mod is not None:
+            first = next((it.get("trace") for it in items if it.get("trace")),
+                         None)
+            tr_mod.set_slice(*(first if first else (None, None)))
+        all_slots = [s for slots in slots_by_item for s in slots]
+        decoded, fmasks = self._launch_buckets(all_slots, None, None)
+
+        # -- finalize per item, in order: hits, puts, stats, masks --------
+        out = []
+        for i, it in enumerate(items):
+            reader, plan, pred = it["reader"], it["plan"], it["pred"]
+            blooms, stats = it["blooms"], it["stats"]
+            mode = it["offload"] or self.offload
+            offload = it["offload"]
+            need = plan.all_columns()
+            proj = plan.columns
+            _owner(it)
+            _ctx(it)
+            per_rg = []
+            for slot in slots_by_item[i]:
+                rg, n, L = slot["rg"], slot["n"], slot["L"]
+                if slot["resident"]:
+                    cols = {}
+                    for name in need:
+                        cols[name] = self._serve_resident(
+                            reader, rg, name, L, mode, offload, pool, stats,
+                            fetched_by_item[i],
+                        )
+                    mask = self._eval_mask(pred, cols, blooms, L, rg)
+                    per_rg.append((cols, mask & (jnp.arange(L) < n)))
+                    continue
+                enc = slot["enc"]
+                cols = {}
+                if slot["fuse"] is not None:
+                    stats.fused = True
+                    fe = enc[pred.column].encoding.value
+                    stats.decode_work[fe] = (
+                        stats.decode_work.get(fe, 0)
+                        + L * self._fused_width(reader, rg, pred)
+                    )
+                    for name in proj:
+                        arr, _ = self._decode_column(
+                            reader, rg, name, enc[name], L, offload=offload,
+                            pool=pool, stats=stats,
+                            precomputed=decoded.get((i, rg, name)),
+                        )
+                        cols[name] = arr
+                    mask = fmasks[(i, rg)]
+                else:
+                    for name in need:
+                        arr, _ = self._decode_column(
+                            reader, rg, name, enc[name], L, offload=offload,
+                            pool=pool, stats=stats,
+                            precomputed=decoded.get((i, rg, name)),
+                        )
+                        cols[name] = arr
+                    mask = self._eval_mask(pred, cols, blooms, L, rg)
+                mask = mask & (jnp.arange(L) < n)
+                for name in need:
+                    cols.setdefault(name, None)
+                per_rg.append((cols, mask))
+            out.append((per_rg, fetched_by_item[i]))
+        if tr_mod is not None:
+            tr_mod.set_slice(None, None)
+        return out
 
     def scan(
         self,
@@ -1044,6 +1252,7 @@ class ResumableScan:
         blooms: Optional[Dict[str, jax.Array]] = None,
         offload: Optional[str] = None,
         row_groups=None,
+        scan_tag=None,
     ):
         assert offload in (None, "raw", "preloaded", "prefiltered"), offload
         self.engine = engine
@@ -1051,11 +1260,15 @@ class ResumableScan:
         self.plan = plan
         self.offload = offload or engine.offload
         self.blooms = blooms or {}
+        # fabric sub-requests tag their prefiltered key with the owned
+        # row-group subset (plan_cache_key `tag`): identical subsets hit,
+        # different subsets (e.g. post-drain re-hash) can never collide
+        self.scan_tag = scan_tag
         self.stats = ScanStats(row_groups_total=reader.n_row_groups, rows_total=reader.n_rows)
         self.result: Optional[ScanResult] = None
 
         if self.offload == "prefiltered":
-            key = engine.plan_cache_key(reader, plan, self.blooms)
+            key = engine.plan_cache_key(reader, plan, self.blooms, tag=scan_tag)
             hit = engine.cache.get(key)
             if hit is not None:
                 self.stats.cache_hit = True
@@ -1131,6 +1344,28 @@ class ResumableScan:
             self._finish()
         return self.result, fetched
 
+    def ingest_batched(self, row_groups, per_rg):
+        """Fold in a slice the engine already scanned on this request's
+        behalf via `scan_group_batched` (cross-request bucket stacking).
+        Same preemption contract as `advance_batched` — the groups must be
+        the next pending ones in order — but the per-row-group work
+        happened inside the shared group pass, so this only does the
+        fold + finish half.  Returns the final result once complete."""
+        assert self.result is None, "scan already complete"
+        for rg in row_groups:
+            assert self._pending and rg == self._pending[0], (
+                f"row group {rg} dispatched out of order (next is "
+                f"{self._pending[0] if self._pending else None})"
+            )
+            self._pending.pop(0)
+        for cols, mask in per_rg:
+            for name in self._need:
+                self._per_rg_cols[name].append(cols[name])
+            self._per_rg_mask.append(mask)
+        if not self._pending:
+            self._finish()
+        return self.result
+
     def _finish(self) -> None:
         proj = self.plan.columns
         if not self._rgs:  # everything pruned — never cached (nothing scanned)
@@ -1163,7 +1398,8 @@ class ResumableScan:
             # truth work that produced it (re-creating the result costs at
             # least that much again)
             self.engine.cache.put(
-                self.engine.plan_cache_key(self.reader, self.plan, self.blooms),
+                self.engine.plan_cache_key(self.reader, self.plan, self.blooms,
+                                           tag=self.scan_tag),
                 result, tier="prefiltered", decode_work=dict(self.stats.decode_work),
             )
         self.result = result

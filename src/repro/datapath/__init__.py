@@ -1,8 +1,14 @@
 """datapath — the SmartNIC as a shared, scheduled, multi-tenant service.
 
-service.py    DatapathService: bounded queue, admission control, quotas,
-              per-tenant WFQ virtual time + actual-cost reconciliation,
-              auto-tuned coalescing hold window
+service.py    Pod (née DatapathService): bounded queue, admission control,
+              quotas, per-tenant WFQ virtual time + actual-cost
+              reconciliation, auto-tuned coalescing hold window
+fabric.py     ScanFabric: N pods behind consistent-hash row-group
+              ownership — routed sub-scans, bit-identical global merge,
+              peer block-store fetch over the inter-pod link, fleet WFQ
+              re-leveling, heartbeat-driven drain/replay
+catalog.py    shared table registry with per-scan snapshot pins
+              (monotonic version; mid-scan DDL is invisible in flight)
 blockstore.py unified tiered BlockStore (encoded pages / decoded columns
               / prefiltered results): one byte ledger, cost-aware
               eviction priced by the cost model, window-scoped decode
@@ -41,8 +47,10 @@ from repro.datapath.blockstore import (  # noqa: F401
     BlockEntry,
     BlockStore,
     DecodePool,
+    PeerFetcher,
     StoreView,
 )
+from repro.datapath.catalog import Catalog, Snapshot  # noqa: F401
 from repro.datapath.costmodel import (  # noqa: F401
     NOMINAL_RATES_GBPS,
     CostModel,
@@ -60,9 +68,11 @@ from repro.datapath.policy import (  # noqa: F401
     StaticPolicy,
     coalesce_compatible,
 )
+from repro.datapath.fabric import FabricTicket, ScanFabric  # noqa: F401
 from repro.datapath.scheduler import form_batch, run_tick  # noqa: F401
 from repro.datapath.service import (  # noqa: F401
     DatapathService,
+    Pod,
     QueueFull,
     QuotaExceeded,
     ScanRequest,

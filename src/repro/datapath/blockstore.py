@@ -151,6 +151,16 @@ class BlockStore:
         self.window_hits = 0
         self.window_hit_bytes = 0
         self.window_saved_s = 0.0
+        # fabric peer-fetch accounting: entries this store pulled from a
+        # sibling pod's store (hits) and served to one (serves).  The
+        # seconds are the inter-pod hop price — what the scheduler folds
+        # into WFQ actuals, and what the bench compares against the
+        # storage link to show the remote tier is the cheaper source.
+        self.peer_hits = 0
+        self.peer_hit_bytes = 0
+        self.peer_hit_seconds = 0.0
+        self.peer_serves = 0
+        self.peer_serve_bytes = 0
 
     # ------------------------------------------------------------------
     # pricing
@@ -493,7 +503,80 @@ class BlockStore:
             "window_hits": self.window_hits,
             "window_hit_bytes": self.window_hit_bytes,
             "window_saved_s": self.window_saved_s,
+            "peer_hits": self.peer_hits,
+            "peer_hit_bytes": self.peer_hit_bytes,
+            "peer_hit_seconds": self.peer_hit_seconds,
+            "peer_serves": self.peer_serves,
+            "peer_serve_bytes": self.peer_serve_bytes,
         }
+
+
+class PeerFetcher:
+    """Peer-to-peer block-store fetch for the scan fabric (DESIGN.md §15).
+
+    Installed on a pod's BlockCache (`cache.peer`); consulted only when a
+    COUNTING get misses the local store.  A sibling pod that already holds
+    the page/decoded column serves a copy over the inter-pod link — wider
+    and shallower than the storage hop, and a decoded-tier hit also skips
+    the decode — and the copy is installed into the local store at the
+    same tier so subsequent lookups are plain local hits.
+
+    Scope rules keeping the fabric bit-identical and honestly priced:
+      * only 'page' (encoded) and 'rg' (decoded) keys cross pods — whole
+        prefiltered results stay pod-local (their keys carry the pod's
+        row-group-subset scan tag, so a cross-pod hit could never match
+        a different subset anyway);
+      * residency PROBES (`__contains__`, `plan_fetch`) stay local-only:
+        the policy and scheduler see exactly what single-node pods see,
+        and peer traffic happens only when work actually runs;
+      * window-pinned / ephemeral state never transfers — the serving
+        side is read via `peek` (non-mutating), the local install is an
+        ordinary unpinned put.
+
+    `peers` is a zero-arg callable yielding live (pod_id, BlockStore)
+    siblings — the fabric rebinds it on drain so a dead pod's store is
+    never consulted."""
+
+    PEER_KINDS = ("page", "rg")
+
+    def __init__(self, pod_id: str, peers, link=None):
+        from repro.datapath.netsim import interpod_link
+
+        self.pod_id = pod_id
+        self.peers = peers
+        self.link = link or interpod_link()
+
+    def fetch(self, key: Hashable, into: BlockStore, stats=None):
+        """Probe siblings for `key`; on a hit, bill the hop, install a
+        local copy, and return the value.  `stats` (a ScanStats) receives
+        the transferred bytes so the scheduler can price THIS request's
+        peer traffic into its WFQ reconcile."""
+        kind = key[0] if isinstance(key, tuple) and key else None
+        if kind not in self.PEER_KINDS:
+            return None
+        for pid, store in self.peers():
+            if store is into:
+                continue
+            e = store.peek(key)
+            if e is None or e.tier == "prefiltered" or e.ephemeral:
+                # ephemeral = a raw scan's window-pinned decode; raw mode
+                # leaves no persistent state, and peering must not turn
+                # another pod's transient window into a durable copy
+                continue
+            secs = self.link.fetch_seconds(e.nbytes)
+            store.peer_serves += 1
+            store.peer_serve_bytes += e.nbytes
+            into.peer_hits += 1
+            into.peer_hit_bytes += e.nbytes
+            into.peer_hit_seconds += secs
+            if stats is not None:
+                stats.peer_bytes += e.nbytes
+            if trace._CUR is not None:
+                trace.event("peer_fetch", tier=e.tier, nbytes=e.nbytes,
+                            source=pid, hop_s=secs)
+            into.put(key, e.value, tier=e.tier, encoding=e.encoding)
+            return e.value
+        return None
 
 
 class StoreView:

@@ -46,7 +46,13 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.datapath.netsim import DecodeModel, LinkModel, PrefetchPipeline
+from repro.datapath.netsim import (
+    INTERPOD_BANDWIDTH_GBPS,
+    INTERPOD_LATENCY_US,
+    DecodeModel,
+    LinkModel,
+    PrefetchPipeline,
+)
 
 # Decoded-output GB/s per encoding when no calibration is available.
 # Loosely ordered by work per output byte on the jnp reference path; any
@@ -221,6 +227,8 @@ class CostModel:
         link_bandwidth_gbps: float = 12.5,
         link_latency_us: float = 10.0,
         launch_overhead_s: float = NOMINAL_LAUNCH_OVERHEAD_S,
+        interpod_bandwidth_gbps: float = INTERPOD_BANDWIDTH_GBPS,
+        interpod_latency_us: float = INTERPOD_LATENCY_US,
     ):
         self.rates = dict(NOMINAL_RATES_GBPS)
         if rates:
@@ -230,6 +238,8 @@ class CostModel:
         self.link_bandwidth_gbps = link_bandwidth_gbps
         self.link_latency_us = link_latency_us
         self.launch_overhead_s = max(0.0, float(launch_overhead_s))
+        self.interpod_bandwidth_gbps = interpod_bandwidth_gbps
+        self.interpod_latency_us = interpod_latency_us
 
     # -- pricing -----------------------------------------------------------
     def rate_gbps(self, encoding: str = "plain") -> float:
@@ -276,6 +286,22 @@ class CostModel:
         return LinkModel(bandwidth_gbps=self.link_bandwidth_gbps,
                          latency_us=self.link_latency_us)
 
+    def interpod_link_model(self) -> LinkModel:
+        """The pod<->pod hop a fabric peer fetch pays — wider and shallower
+        than the storage link, so a remote pod's tier is ALWAYS a cheaper
+        source than re-fetching from disaggregated storage."""
+        return LinkModel(bandwidth_gbps=self.interpod_bandwidth_gbps,
+                         latency_us=self.interpod_latency_us)
+
+    def peer_fetch_seconds(self, nbytes: int) -> float:
+        """Price one slice's peer-fetched bytes over the inter-pod hop.
+        This is what the scheduler folds into a slice's ACTUAL seconds at
+        reconcile time, so WFQ vtime stays honest when a pod's scan is fed
+        by its neighbors' block stores (latency billed once per slice)."""
+        if nbytes <= 0:
+            return 0.0
+        return self.interpod_link_model().fetch_seconds(nbytes)
+
     def pipeline(self) -> PrefetchPipeline:
         return PrefetchPipeline(link=self.link_model(), decode=self.decode_model())
 
@@ -310,6 +336,8 @@ class CostModel:
             "link_bandwidth_gbps": self.link_bandwidth_gbps,
             "link_latency_us": self.link_latency_us,
             "launch_overhead_s": self.launch_overhead_s,
+            "interpod_bandwidth_gbps": self.interpod_bandwidth_gbps,
+            "interpod_latency_us": self.interpod_latency_us,
         }
 
     def save(self, path: str) -> str:
@@ -343,6 +371,10 @@ class CostModel:
             link_latency_us=d.get("link_latency_us", 10.0),
             launch_overhead_s=d.get("launch_overhead_s",
                                     NOMINAL_LAUNCH_OVERHEAD_S),
+            interpod_bandwidth_gbps=d.get("interpod_bandwidth_gbps",
+                                          INTERPOD_BANDWIDTH_GBPS),
+            interpod_latency_us=d.get("interpod_latency_us",
+                                      INTERPOD_LATENCY_US),
         )
 
     @classmethod

@@ -37,6 +37,23 @@ class LinkModel:
         return self.latency_us * 1e-6 + nbytes / (self.bandwidth_gbps * 1e9)
 
 
+# Inter-pod hop (fabric peer block-store fetch): pods share a rack-local
+# switch, so pod<->pod transfers run wider and shallower than the
+# storage->NIC hop (400 GbE-class, ~2us).  Pulling a row group from a
+# peer's tier is therefore strictly cheaper than re-fetching it from
+# disaggregated storage at ANY size — and a peer's DECODED tier also
+# skips the decode entirely.  costmodel.CostModel persists these per
+# backend next to the storage-link parameters.
+INTERPOD_BANDWIDTH_GBPS = 50.0
+INTERPOD_LATENCY_US = 2.0
+
+
+def interpod_link(bandwidth_gbps: float = INTERPOD_BANDWIDTH_GBPS,
+                  latency_us: float = INTERPOD_LATENCY_US) -> LinkModel:
+    """The pod<->pod hop the ScanFabric prices peer fetches with."""
+    return LinkModel(bandwidth_gbps=bandwidth_gbps, latency_us=latency_us)
+
+
 @dataclasses.dataclass
 class DecodeModel:
     """On-device decode rate in decoded-output gigabytes/s.

@@ -76,21 +76,27 @@ class AdaptiveOffloadPolicy:
         blooms=None,
         row_groups=None,
         selectivity: float = None,
+        scan_tag=None,
     ) -> str:
         """`row_groups`/`selectivity` let the service reuse its admission-time
-        metadata walk; without them the policy recomputes from zone maps."""
+        metadata walk; without them the policy recomputes from zone maps.
+        `scan_tag` is the request's prefiltered-cache disambiguator (fabric
+        sub-scans tag with their row-group subset) — the whole-scan reuse
+        probe must look up the SAME key the scan would hit."""
         sig = plan.signature()
         seen = self._note(sig)
-        mode = self._choose(engine, reader, plan, seen, blooms, row_groups, selectivity)
+        mode = self._choose(engine, reader, plan, seen, blooms, row_groups,
+                            selectivity, scan_tag)
         self.decisions[mode] += 1
         return mode
 
-    def _choose(self, engine, reader, plan, seen, blooms, row_groups, selectivity) -> str:
+    def _choose(self, engine, reader, plan, seen, blooms, row_groups,
+                selectivity, scan_tag=None) -> str:
         # 1) whole-scan reuse: cached result, or a recurring signature worth
         #    caching (the key folds in bloom digests, so per-caller semijoin
         #    state can never serve another caller's probe).  Residency is
         #    read straight from the store's prefiltered tier.
-        scan_key = engine.plan_cache_key(reader, plan, blooms)
+        scan_key = engine.plan_cache_key(reader, plan, blooms, tag=scan_tag)
         cached, _ = engine.cache.plan_fetch([scan_key], tier="prefiltered")
         if cached or seen >= self.repeat_k:
             return "prefiltered"

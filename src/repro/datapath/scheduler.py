@@ -40,7 +40,12 @@ the one-launch-per-(row group, column) sequential loop, bit-identically.
 Reconciliation then re-bills each slice by the launches it REALLY made
 (`ScanStats.kernel_launches` priced at the calibrated per-launch
 overhead), so the batched path's dispatch savings flow back through the
-same honesty loop as decode bytes.
+same honesty loop as decode bytes.  When a tick coalesces SEVERAL
+requests over one table, their slices stack into a single cross-request
+bucket pass (`engine.scan_group_batched` via `_run_group_stacked`): a
+page two requests both need decodes once and launches drop again by the
+stacking factor, with per-request attribution and fault isolation
+preserved.
 
 The storage->NIC fetch for the row groups actually read this tick (store
 hits — decoded, window-pinned, or encoded-page — fetch nothing and skip
@@ -112,7 +117,8 @@ def form_batch(service) -> List[Tuple[object, List[int]]]:
             or req.held_ticks >= service.hold_ticks  # deadline reached
             # a prefiltered-cache-resident answer decodes nothing — waiting
             # for a decode partner cannot pay (non-mutating presence check)
-            or service.engine.plan_cache_key(req.reader, req.plan, req.blooms)
+            or service.engine.plan_cache_key(req.reader, req.plan, req.blooms,
+                                             tag=req.scan_tag)
             in service.engine.cache
             or any(o is not req and coalesce_compatible(req, o) for o in active)
         ):
@@ -302,6 +308,14 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
             tel.inc("coalesced_groups")
             tel.inc("coalesced_requests", len(group))
         fetches: List[Tuple[object, List[int], int]] = []
+        if service.batch_decode and len(group) > 1:
+            # cross-request bucket stacking: every coalesced request's
+            # pages decode through ONE bucket pass (engine.
+            # scan_group_batched) instead of per-request launches that
+            # meet only at the pool
+            _run_group_stacked(service, group, pool, fetches)
+            _finish_group(service, pool, fetches)
+            continue
         for req, rgs in group:
             pool.owner = req.tenant  # retained pins bill their decoder
             # flight recorder: the slice span, plus the engine-side slice
@@ -320,16 +334,19 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
                             service.engine, req.reader, req.plan, req.blooms,
                             row_groups=req.row_groups,
                             selectivity=req.est_rows / max(req.reader.n_rows, 1),
+                            scan_tag=req.scan_tag,
                         )
                         tel.inc(f"offload_{mode}")
                         req.mode = mode
                         req.rs = ResumableScan(
                             service.engine, req.reader, req.plan, blooms=req.blooms,
                             offload=mode, row_groups=req.row_groups,
+                            scan_tag=req.scan_tag,
                         )
                     rs = req.rs
                     work0 = dict(rs.stats.decode_work)
                     launches0 = rs.stats.kernel_launches
+                    peer0 = rs.stats.peer_bytes
                     if rs.result is None and rgs:
                         dec0 = rs.stats.decoded_bytes
                         fetched: List[int] = []
@@ -377,7 +394,9 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
                         tel.inc("decode_slice_rgs", len(rgs))  # both dispatch modes
                         if rt is not None:
                             tracer.begin(rt, "reconcile")
-                        actual_s = _reconcile_slice(service, req, work, launches)
+                        actual_s = _reconcile_slice(
+                            service, req, work, launches,
+                            peer_bytes=rs.stats.peer_bytes - peer0)
                         if rt is not None:
                             tracer.end(rt, name="reconcile",
                                        launches=launches, actual_s=actual_s)
@@ -398,18 +417,164 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
                 if rt is not None:
                     trace.set_slice(None, None)
                     tracer.end(rt, name="slice_dispatch", mode=req.mode or "")
-        tel.inc("decoded_bytes_saved", pool.hit_bytes)
-        if pool.retained_hits:  # served from a PREVIOUS tick's window pins
-            tel.inc("retained_hits", pool.retained_hits)
-            tel.inc("retained_reuse_bytes", pool.retained_hit_bytes)
-            tel.inc("retained_redecode_saved_s", pool.retained_saved_s)
-        if pool.rejected_puts:
-            tel.inc("pool_rejected_puts", pool.rejected_puts)
-
-        _simulate_fetch(service, fetches)
+        _finish_group(service, pool, fetches)
 
 
-def _reconcile_slice(service, req, work: Dict[str, int], launches: int = 0) -> float:
+def _finish_group(service, pool, fetches) -> None:
+    """Per-group tick epilogue shared by both dispatch paths: pool reuse
+    telemetry + the storage->NIC fetch simulation."""
+    tel = service.telemetry
+    tel.inc("decoded_bytes_saved", pool.hit_bytes)
+    if pool.retained_hits:  # served from a PREVIOUS tick's window pins
+        tel.inc("retained_hits", pool.retained_hits)
+        tel.inc("retained_reuse_bytes", pool.retained_hit_bytes)
+        tel.inc("retained_redecode_saved_s", pool.retained_saved_s)
+    if pool.rejected_puts:
+        tel.inc("pool_rejected_puts", pool.rejected_puts)
+
+    _simulate_fetch(service, fetches)
+
+
+def _run_group_stacked(service, group, pool, fetches) -> None:
+    """Dispatch one table's coalesced requests as a SINGLE cross-request
+    bucket pass.
+
+    Before this path, same-tick same-table requests each launched their
+    own (encoding, k, dtype) buckets and shared decodes only through pool
+    hits at finalize time.  Here the whole group's pages stack into one
+    set of buckets (engine.scan_group_batched): a page two requests both
+    need decodes once, launches drop again by the stacking factor, and
+    the engine's strict item ordering keeps results AND accounting
+    bit-identical to the sequential per-request dispatch.  If the group
+    pass itself fails, every request falls back to its own
+    `advance_batched` (per-request fault isolation is preserved either
+    way — one poisoned request never takes down its partners)."""
+    tel = service.telemetry
+    tracer = service.tracer
+    engine = service.engine
+
+    # -- per request: open the slice span, pin mode, create the scan ----
+    live = []  # (req, rgs, rt, work0, launches0, dec0, peer0)
+    items: List[dict] = []
+    item_of: Dict[int, int] = {}  # req_id -> index into the group output
+    for req, rgs in group:
+        pool.owner = req.tenant  # retained pins bill their decoder
+        rt = tracer.live(req.req_id) if tracer is not None else None
+        if rt is not None:
+            tracer.end_wait(rt)  # waiting ends the moment we dispatch
+            tracer.begin(rt, "slice_dispatch", tick=service._tick,
+                         rgs=len(rgs))
+            trace.set_slice(tracer, rt)
+        try:
+            if req.rs is None:  # first dispatch: pin the offload mode
+                mode = service.policy.choose(
+                    engine, req.reader, req.plan, req.blooms,
+                    row_groups=req.row_groups,
+                    selectivity=req.est_rows / max(req.reader.n_rows, 1),
+                    scan_tag=req.scan_tag,
+                )
+                tel.inc(f"offload_{mode}")
+                req.mode = mode
+                req.rs = ResumableScan(
+                    engine, req.reader, req.plan, blooms=req.blooms,
+                    offload=mode, row_groups=req.row_groups,
+                    scan_tag=req.scan_tag,
+                )
+        except Exception as e:  # noqa: BLE001 — isolate faulty requests
+            req.ticket.error = e
+            tel.inc("failed")
+            if rt is not None:
+                trace.set_slice(None, None)
+                tracer.end(rt, name="slice_dispatch", mode=req.mode or "")
+            continue
+        finally:
+            if rt is not None:
+                trace.set_slice(None, None)
+        rs = req.rs
+        live.append((req, rgs, rt, dict(rs.stats.decode_work),
+                     rs.stats.kernel_launches, rs.stats.decoded_bytes,
+                     rs.stats.peer_bytes))
+        if rs.result is None and rgs:
+            item_of[req.req_id] = len(items)
+            items.append({
+                "reader": req.reader, "rgs": list(rgs), "plan": rs.plan,
+                "pred": rs.pred, "blooms": rs.blooms, "stats": rs.stats,
+                "offload": rs.offload, "owner": req.tenant,
+                "trace": (tracer, rt) if rt is not None else None,
+            })
+
+    # -- ONE bucket pass across every request's slice -------------------
+    results = None
+    if items:
+        try:
+            results = engine.scan_group_batched(items, pool=pool)
+            tel.inc("xreq_groups")
+            tel.inc("xreq_requests", len(items))
+        except Exception:  # noqa: BLE001 — fall back to per-request dispatch
+            results = None
+            tel.inc("xreq_fallback")
+
+    # -- finalize per request, in dispatch order ------------------------
+    for req, rgs, rt, work0, launches0, dec0, peer0 in live:
+        pool.owner = req.tenant
+        rs = req.rs
+        if rt is not None:
+            trace.set_slice(tracer, rt)
+        try:
+            try:
+                idx = item_of.get(req.req_id)
+                if idx is not None:
+                    if results is not None:
+                        per_rg, fetched = results[idx]
+                        rs.ingest_batched(rgs, per_rg)
+                    else:  # group pass failed: this request runs alone
+                        _, fetched = rs.advance_batched(rgs, pool=pool)
+                    tel.inc("batch_slices")
+                    tel.inc("batch_slice_rgs", len(rgs))
+                    tel.observe_tenant_bytes(
+                        req.tenant, rs.stats.decoded_bytes - dec0)
+                    if fetched:
+                        fetches.append(
+                            (req, fetched,
+                             rs.stats.kernel_launches - launches0))
+                if rgs:
+                    work = {
+                        e: b - work0.get(e, 0)
+                        for e, b in rs.stats.decode_work.items()
+                        if b - work0.get(e, 0)
+                    }
+                    launches = rs.stats.kernel_launches - launches0
+                    tel.inc("decode_launches", launches)
+                    tel.inc("decode_slice_rgs", len(rgs))
+                    if rt is not None:
+                        tracer.begin(rt, "reconcile")
+                    actual_s = _reconcile_slice(
+                        service, req, work, launches,
+                        peer_bytes=rs.stats.peer_bytes - peer0)
+                    if rt is not None:
+                        tracer.end(rt, name="reconcile",
+                                   launches=launches, actual_s=actual_s)
+            except Exception as e:  # noqa: BLE001 — isolate faulty requests
+                req.ticket.error = e
+                tel.inc("failed")
+                continue
+            if rs.result is not None:
+                res = rs.result
+                req.ticket.result = res
+                tel.inc("decoded_bytes", res.stats.decoded_bytes)
+                tel.inc("decoded_bytes_fresh", res.stats.decoded_bytes_fresh)
+                tel.inc("encoded_bytes", res.stats.encoded_bytes)
+                tel.inc("rows_out", res.stats.rows_out)
+                if res.stats.cache_hit:
+                    tel.inc("prefiltered_hits")
+        finally:
+            if rt is not None:
+                trace.set_slice(None, None)
+                tracer.end(rt, name="slice_dispatch", mode=req.mode or "")
+
+
+def _reconcile_slice(service, req, work: Dict[str, int], launches: int = 0,
+                     peer_bytes: int = 0) -> float:
     """Close the loop on one completed slice: compare the decode-seconds
     charged at dispatch against the slice's actual cost and re-bill the
     tenant's virtual time (service._vreconcile).
@@ -422,13 +587,22 @@ def _reconcile_slice(service, req, work: Dict[str, int], launches: int = 0) -> f
     to exactly zero; a batched slice is refunded the launch overhead its
     buckets amortized; a 4x under-estimating request is re-billed 4x in
     the same tick it decoded (and its tenant's future dispatches are
-    re-priced); a pool/cache-fed slice is refunded."""
+    re-priced); a pool/cache-fed slice is refunded.
+
+    `peer_bytes` is what this slice pulled over the inter-pod hop (fabric
+    peer block-store fetches): the transfer is billed to the tenant whose
+    miss triggered it at the calibrated inter-pod link rate — cheaper
+    than the storage hop, but never free."""
     charged_s, raw_s = req.charged_s, req.charged_raw_s
     req.charged_s = req.charged_raw_s = 0.0
     actual_s = sum(
         service.cost_model.decode_seconds(nbytes, encoding)
         for encoding, nbytes in work.items()
     ) + service.cost_model.launch_seconds(launches)
+    if peer_bytes:
+        peer_s = service.cost_model.peer_fetch_seconds(peer_bytes)
+        actual_s += peer_s
+        service.telemetry.observe_peer(req.tenant, peer_bytes, peer_s)
     service._vreconcile(req.tenant, charged_s, raw_s, actual_s,
                         table=req.reader.path)
     return actual_s

@@ -1,8 +1,15 @@
-"""DatapathService — the SmartNIC as a shared, multi-tenant appliance.
+"""Pod — the SmartNIC as a shared, multi-tenant appliance.
 
 The seed engine was a synchronous per-caller library (`engine.scan()`);
 the paper's vision is a device on the network datapath serving MANY
-queries at once.  This module is that service layer:
+queries at once.  This module is that service layer.  Since the fabric
+refactor the single-node core is the `Pod` class — one scheduler, one
+block store, one netsim clock, one telemetry sink — and
+`DatapathService` is a back-compat alias (a one-pod deployment IS the
+old service, bit for bit).  `datapath/fabric.py` composes N pods behind
+consistent-hash row-group ownership; each pod stays deterministically
+single-threaded, which is what keeps fabric results bit-identical to
+single-node scans.
 
   submit()  bounded-queue admission with per-tenant byte/row quotas,
             estimated from footer metadata only (zone maps + encoded
@@ -125,9 +132,18 @@ class ScanRequest:
     first_tick: int = 0  # tick of the first dispatched slice
     mode: Optional[str] = None  # offload mode pinned at first dispatch
     rs: object = None  # ResumableScan, created at first dispatch
+    # fabric: disambiguates a sub-scan's prefiltered-cache identity from the
+    # whole-table scan (and from other row-group subsets after a drain
+    # re-partitions ownership) — threaded into every plan_cache_key
+    scan_tag: object = None
 
 
-class DatapathService:
+class Pod:
+    """One single-node scan service: scheduler + block store + netsim
+    clock + telemetry behind an admission-controlled queue.  `pod_id`
+    names the pod inside a ScanFabric (peer-fetch attribution, hash-ring
+    membership); a standalone pod keeps the default and never notices."""
+
     def __init__(
         self,
         engine: Optional[DatapathEngine] = None,
@@ -161,8 +177,10 @@ class DatapathService:
         trace_sample_rate: float = 1.0,
         trace_capacity: int = 64,
         tracer: Optional[Tracer] = None,
+        pod_id: str = "pod0",
     ):
         assert scheduler in ("wfq", "fifo"), scheduler
+        self.pod_id = pod_id
         assert hold_ticks == "auto" or int(hold_ticks) >= 0, hold_ticks
         self.engine = engine or DatapathEngine(backend="ref", cache=BlockCache())
         self.max_queue_depth = max_queue_depth
@@ -312,9 +330,18 @@ class DatapathService:
                 prev_t = self._est_scale_table.get((tenant, table), 1.0)
                 self._est_scale_table[(tenant, table)] = (1.0 - a) * prev_t + a * target
 
-    def submit(self, tenant: str, reader, plan: ScanPlan, blooms: Optional[Dict] = None) -> Ticket:
+    def submit(self, tenant: str, reader, plan: ScanPlan, blooms: Optional[Dict] = None,
+               row_groups=None, scan_tag=None) -> Ticket:
         """Admit one scan request or raise (QueueFull / QuotaExceeded).
-        Cost estimates are metadata-only — no data bytes move on rejection."""
+        Cost estimates are metadata-only — no data bytes move on rejection.
+
+        `row_groups` restricts the scan to a subset of the table's row
+        groups (the fabric routes each pod only the groups it owns);
+        pruning still runs first and the pruned order is preserved, so a
+        restricted scan decodes exactly the intersection.  `scan_tag`
+        disambiguates the request's prefiltered-cache identity — fabric
+        sub-scans tag with their row-group subset so a cached sub-result
+        can never serve a DIFFERENT subset after a drain re-partitions."""
         tr = self.tracer
         t_tr0 = tr.clock() if tr is not None else 0.0  # trace time base
         self.telemetry.inc("submitted")
@@ -327,8 +354,17 @@ class DatapathService:
         pred = bind_expr(plan.predicate, reader)
         rgs, selectivity = prune_and_estimate(reader, pred)
         rgs = tuple(rgs)
+        if row_groups is not None:
+            allowed = frozenset(row_groups)
+            rgs = tuple(rg for rg in rgs if rg in allowed)
         est_bytes = self.engine.estimate_scan_bytes(reader, plan, row_groups=rgs)
-        est_rows = int(selectivity * reader.n_rows)
+        if row_groups is None:
+            est_rows = int(selectivity * reader.n_rows)
+        else:
+            # estimate against the restricted slice of the table, not the
+            # whole file — a pod owning 1/N of the groups budgets ~1/N rows
+            rows_in = sum(reader.row_group_meta(rg)["n"] for rg in rgs)
+            est_rows = int(selectivity * rows_in)
         quota, state = self._quota(tenant), self._state(tenant)
         over_bytes = state.used_bytes + est_bytes > quota.max_bytes
         over_rows = state.used_rows + est_rows > quota.max_rows
@@ -381,7 +417,8 @@ class DatapathService:
                         rg_costs=tuple(c.seconds for c in rg_costs),
                         rg_bytes=tuple(c.nbytes for c in rg_costs),
                         rg_set=frozenset(rgs),
-                        col_set=frozenset(plan.all_columns()))
+                        col_set=frozenset(plan.all_columns()),
+                        scan_tag=scan_tag)
         )
         self.telemetry.inc("admitted")
         # flight recorder: open the request's root span at submit entry,
@@ -513,13 +550,19 @@ class DatapathService:
         return ServiceClient(self, tenant)
 
 
+class DatapathService(Pod):
+    """The historical single-node name.  A one-pod deployment is exactly
+    the old service — same defaults, same scheduling, same bit-identical
+    results — so existing callers and tests keep constructing this."""
+
+
 class ServiceClient:
     """Engine-compatible facade: `.scan(reader, plan, blooms)` routes the
     scan through the shared service, so any code written against
     DatapathEngine (all six queries in core/queries.py) runs through the
     multi-tenant path unchanged."""
 
-    def __init__(self, service: DatapathService, tenant: str):
+    def __init__(self, service: Pod, tenant: str):
         self.service = service
         self.tenant = tenant
 

@@ -67,6 +67,11 @@ class Telemetry:
         # across tick boundaries, and the virtual-time it was billed for them
         self.tenant_retained_bytes: Dict[str, float] = collections.defaultdict(float)
         self.tenant_retained_seconds: Dict[str, float] = collections.defaultdict(float)
+        # fabric peer-fetch ledger: bytes a tenant's slices pulled over the
+        # inter-pod hop (a sibling pod's block store served a local miss)
+        # and the link seconds WFQ billed for them
+        self.tenant_peer_bytes: Dict[str, float] = collections.defaultdict(float)
+        self.tenant_peer_seconds: Dict[str, float] = collections.defaultdict(float)
         # the unified BlockStore, registered by the service so snapshots
         # carry the per-tier hit/eviction/retained ledger
         self.store = None
@@ -124,6 +129,15 @@ class Telemetry:
         self.inc("retained_byte_ticks", nbytes)
         self.inc("retained_charge_seconds", charge_s)
 
+    def observe_peer(self, tenant: str, nbytes: float, seconds: float) -> None:
+        """One slice's inter-pod peer-fetch bill: bytes a sibling pod's
+        block store served into this pod for `tenant`'s scan, and the
+        modeled link seconds reconciliation added to its virtual time."""
+        self.tenant_peer_bytes[tenant] += nbytes
+        self.tenant_peer_seconds[tenant] += seconds
+        self.inc("peer_fetch_bytes", nbytes)
+        self.inc("peer_fetch_seconds", seconds)
+
     # -- reading -----------------------------------------------------------
     def tenant_latency(self, tenant: str) -> Dict[str, float]:
         xs = list(self._tenant_latency.get(tenant, ()))
@@ -149,6 +163,7 @@ class Telemetry:
             | set(self.tenant_actual_seconds)
             | set(self.tenant_recon_seconds)
             | set(self.tenant_retained_bytes)
+            | set(self.tenant_peer_bytes)
             | set(self._tenant_latency)
         )
 
@@ -211,6 +226,7 @@ class Telemetry:
         return {
             "tenant_decoded_bytes": decoded,
             "tenant_retained_bytes": dict(sorted(retained.items())),
+            "tenant_peer_bytes": dict(sorted(self.tenant_peer_bytes.items())),
             "tenant_sched_bytes": dict(sorted(self.tenant_sched_bytes.items())),
             "tenant_sched_seconds": dict(sorted(self.tenant_sched_seconds.items())),
             "tenant_share": shares,

@@ -1,8 +1,16 @@
 """Distributed runtime: sharding rules, collectives, fault tolerance."""
 
+from repro.distributed.fault_tolerance import (  # noqa: F401
+    HeartbeatMonitor,
+    PodDrainPlan,
+    StragglerDetector,
+    plan_pod_drain,
+)
 from repro.distributed.sharding import (  # noqa: F401
+    HashRing,
     ShardingCtx,
     constrain,
     local_ctx,
+    rg_key,
     spec_for,
 )

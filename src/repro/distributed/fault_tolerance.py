@@ -76,6 +76,42 @@ def plan_elastic_mesh(n_hosts_alive: int, old_mesh: Tuple[int, int],
     return (new_data, model)
 
 
+@dataclasses.dataclass
+class PodDrainPlan:
+    """What the scan fabric must do when a pod dies (DESIGN.md §15).
+
+    `reassigned` maps each row-group key the dead pod owned to its new
+    owner on the post-removal ring; `replay` lists the in-flight scan ids
+    that had uncollected work on the dead pod and must re-submit their
+    remaining row groups to the survivors.  Collected sub-results are
+    fabric-held and survive — replay granularity is the pod sub-scan, so
+    a scan resumes from its last *completed* slice, never from scratch."""
+
+    dead: str
+    survivors: List[str]
+    reassigned: Dict[str, str]  # row-group key -> new owner pod
+    replay: List[object]        # in-flight scan ids to re-submit
+
+
+def plan_pod_drain(dead: str, ring, owned_keys: List[str],
+                   in_flight: List[object]) -> PodDrainPlan:
+    """Drain a dead pod: remove it from the ring (minimal moved arc —
+    only ITS keys re-home), then map every key it owned to the survivor
+    that now owns it.  `ring` is mutated (the fabric's live ring).
+    Raises if the dead pod was the last one: there is nowhere to drain."""
+    ring.remove_node(dead)
+    if not ring.nodes:
+        raise RuntimeError(f"pod {dead!r} was the last node; cannot drain")
+    reassigned = {k: ring.owner(k) for k in owned_keys}
+    assert all(o != dead for o in reassigned.values())
+    return PodDrainPlan(
+        dead=dead,
+        survivors=list(ring.nodes),
+        reassigned=reassigned,
+        replay=list(in_flight),
+    )
+
+
 class StragglerDetector:
     def __init__(self, factor: float = 2.0, min_samples: int = 5,
                  policy: str = "observe"):

@@ -1,4 +1,6 @@
-"""Sharding rules: logical tensor dims -> mesh PartitionSpecs.
+"""Sharding rules: logical tensor dims -> mesh PartitionSpecs, plus the
+datapath fabric's consistent-hash ring (`HashRing`) mapping row groups to
+pod owners.
 
 Every tensor in the framework is described by *logical* dims ('batch',
 'seq', 'd', 'ff', 'heads', 'vocab', 'experts', ...).  `spec_for` maps them
@@ -22,8 +24,10 @@ active, and is a no-op in single-device smoke tests.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import Optional, Sequence, Tuple
+import hashlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -137,6 +141,80 @@ def constrain(x: jax.Array, dims: Sequence[Optional[str]], ctx: ShardingCtx) -> 
         return x
     spec = spec_for(dims, ctx, x.shape, activation=True)
     return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def rg_key(path: str, rg: int) -> str:
+    """Canonical ring key for a row group: ownership is per (table file,
+    row group), so one table's groups spread across the whole fleet."""
+    return f"{path}#rg{rg}"
+
+
+class HashRing:
+    """Consistent-hash ring mapping keys -> node ids (fabric pods).
+
+    Each node is hashed onto the ring at `replicas` virtual points
+    (sha1 of "node#i" — NEVER Python `hash()`, which is salted per
+    process and would re-shuffle ownership on every restart).  A key
+    is owned by the first virtual point clockwise from its hash.
+
+    Properties the fabric relies on (tests/test_sharding_ring.py):
+      * deterministic: same nodes -> same ownership, any process
+      * minimal movement: removing a node re-homes ONLY the arcs that
+        node owned; adding one steals only the arcs it now owns —
+        every other key keeps its owner (the drain/replay path re-hashes
+        a dead pod's row groups without touching survivors' caches)
+      * balanced: virtual points smooth per-node load to ~1/N
+    """
+
+    def __init__(self, nodes: Iterable[str] = (), replicas: int = 64):
+        assert replicas >= 1
+        self.replicas = replicas
+        self._points: List[int] = []       # sorted virtual-point hashes
+        self._owner_at: Dict[int, str] = {}  # point hash -> node id
+        self.nodes: List[str] = []
+        for n in nodes:
+            self.add_node(n)
+
+    @staticmethod
+    def _hash(s: str) -> int:
+        return int.from_bytes(hashlib.sha1(s.encode()).digest()[:8], "big")
+
+    def _vpoints(self, node: str) -> List[int]:
+        return [self._hash(f"{node}#{i}") for i in range(self.replicas)]
+
+    def add_node(self, node: str):
+        if node in self.nodes:
+            return
+        self.nodes.append(node)
+        for h in self._vpoints(node):
+            # sha1 collisions across 8 bytes are not a practical concern;
+            # last-add wins keeps the structure consistent regardless
+            if h not in self._owner_at:
+                bisect.insort(self._points, h)
+            self._owner_at[h] = node
+
+    def remove_node(self, node: str):
+        if node not in self.nodes:
+            return
+        self.nodes.remove(node)
+        for h in self._vpoints(node):
+            if self._owner_at.get(h) == node:
+                del self._owner_at[h]
+                i = bisect.bisect_left(self._points, h)
+                if i < len(self._points) and self._points[i] == h:
+                    del self._points[i]
+
+    def owner(self, key: str) -> str:
+        if not self._points:
+            raise ValueError("HashRing has no nodes")
+        h = self._hash(key)
+        i = bisect.bisect_right(self._points, h)
+        if i == len(self._points):
+            i = 0  # wrap: first point clockwise
+        return self._owner_at[self._points[i]]
+
+    def owners(self, keys: Iterable[str]) -> Dict[str, str]:
+        return {k: self.owner(k) for k in keys}
 
 
 def tree_shardings(param_dims, ctx: ShardingCtx, param_shapes):

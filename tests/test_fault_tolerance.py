@@ -5,6 +5,7 @@ from repro.distributed.fault_tolerance import (
     HeartbeatMonitor,
     StragglerDetector,
     plan_elastic_mesh,
+    plan_pod_drain,
 )
 
 
@@ -60,3 +61,50 @@ def test_straggler_detection_and_policy():
     assert det.action_for("h0") == "none"
     rep = det.report()
     assert rep["h2"]["median_s"] > 3 and rep["stragglers"] == ["h2"]
+
+
+# ---------------------------------------------------------------------------
+# pod drain planning (the scan-fabric death path, in isolation)
+# ---------------------------------------------------------------------------
+
+def _ring(nodes):
+    from repro.distributed.sharding import HashRing
+
+    return HashRing(nodes)
+
+
+def test_plan_pod_drain_reassigns_only_dead_arcs():
+    from repro.distributed.sharding import rg_key
+
+    ring = _ring(["pod0", "pod1", "pod2"])
+    keys = [rg_key("/lake/l.lake", rg) for rg in range(64)]
+    before = ring.owners(keys)
+    owned = [k for k, o in before.items() if o == "pod1"]
+    plan = plan_pod_drain("pod1", ring, owned, in_flight=[7, 9])
+    assert plan.dead == "pod1"
+    assert plan.survivors == ["pod0", "pod2"]
+    assert plan.replay == [7, 9]
+    # every dead-owned key re-homed to a survivor...
+    assert set(plan.reassigned) == set(owned)
+    assert all(o in ("pod0", "pod2") for o in plan.reassigned.values())
+    # ...and the ring was mutated minimally: survivors keep their arcs
+    after = ring.owners(keys)
+    for k in keys:
+        if before[k] != "pod1":
+            assert after[k] == before[k], k
+        else:
+            assert after[k] == plan.reassigned[k]
+
+
+def test_plan_pod_drain_last_pod_raises():
+    import pytest
+
+    ring = _ring(["pod0"])
+    with pytest.raises(RuntimeError):
+        plan_pod_drain("pod0", ring, [], [])
+
+
+def test_plan_pod_drain_empty_workload():
+    plan = plan_pod_drain("pod0", _ring(["pod0", "pod1"]), [], [])
+    assert plan.reassigned == {} and plan.replay == []
+    assert plan.survivors == ["pod1"]

@@ -1,0 +1,72 @@
+"""HashRing stability: the three properties the fabric's drain/replay
+path leans on (sharding.py docstring) — determinism across processes,
+rough balance at 64 virtual replicas, and minimal moved arc under node
+add/remove (survivor-owned keys NEVER change owner)."""
+
+from repro.distributed.sharding import HashRing, rg_key
+
+KEYS = [rg_key(f"/lake/t{t}.lake", rg) for t in range(4) for rg in range(128)]
+
+
+def test_ring_deterministic_across_instances():
+    a = HashRing(["pod0", "pod1", "pod2"])
+    b = HashRing(["pod0", "pod1", "pod2"])
+    assert a.owners(KEYS) == b.owners(KEYS)
+    # insertion order of nodes must not matter either
+    c = HashRing(["pod2", "pod0", "pod1"])
+    assert a.owners(KEYS) == c.owners(KEYS)
+
+
+def test_ring_balance():
+    ring = HashRing([f"pod{i}" for i in range(4)])
+    owners = ring.owners(KEYS)
+    counts = {n: 0 for n in ring.nodes}
+    for o in owners.values():
+        counts[o] += 1
+    # 512 keys over 4 nodes -> expect ~128 each; virtual points keep the
+    # worst node within a loose 3x band of fair share and none starved
+    for n, c in counts.items():
+        assert 0 < c < 3 * len(KEYS) // 4, (n, c, counts)
+
+
+def test_ring_minimal_movement_on_remove():
+    ring = HashRing(["pod0", "pod1", "pod2"])
+    before = ring.owners(KEYS)
+    ring.remove_node("pod1")
+    after = ring.owners(KEYS)
+    for k in KEYS:
+        if before[k] != "pod1":
+            assert after[k] == before[k], k  # survivors keep their arcs
+        else:
+            assert after[k] != "pod1"  # dead arcs re-home to survivors
+
+
+def test_ring_minimal_movement_on_add():
+    ring = HashRing(["pod0", "pod1"])
+    before = ring.owners(KEYS)
+    ring.add_node("pod2")
+    after = ring.owners(KEYS)
+    moved = [k for k in KEYS if after[k] != before[k]]
+    # every moved key moved TO the new node, and it stole a real arc
+    assert moved and all(after[k] == "pod2" for k in moved)
+    # add + remove round-trips to the original ownership
+    ring.remove_node("pod2")
+    assert ring.owners(KEYS) == before
+
+
+def test_ring_add_is_idempotent_and_remove_unknown_is_noop():
+    ring = HashRing(["pod0", "pod1"])
+    before = ring.owners(KEYS)
+    ring.add_node("pod0")
+    ring.remove_node("nope")
+    assert ring.owners(KEYS) == before and ring.nodes == ["pod0", "pod1"]
+
+
+def test_ring_empty_raises():
+    ring = HashRing()
+    try:
+        ring.owner("k")
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("expected ValueError on empty ring")
