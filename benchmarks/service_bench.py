@@ -59,6 +59,9 @@ Reported rows:
     service.costmodel.*    calibrated rates + 4x-under-estimator shares
     service.blockstore.*   late-partner retained reuse + tier ledger
     service.batchdecode.*  dispatch counts + wall, batched vs sequential
+    service.pushdown       fused decode→aggregate vs scan-then-aggregate:
+                           result-DMA bytes, wall, dispatch counts,
+                           bit-identity of the grouped answer
     service.trace.*        tracing overhead + stage attribution vs Fig. 2
     service.kernels.roofline  rewritten-core rates vs the pre-rewrite
                            anchor + ladder-vs-pow2 pad-waste bytes
@@ -834,6 +837,102 @@ def run_fabric(sf: float = 0.1) -> dict:
     }
 
 
+def run_pushdown(sf: float = 0.1) -> dict:
+    """Fused operator pushdown (DESIGN.md §16) vs scan-then-aggregate on
+    a grouped revenue sum: the fused path DMAs only the (n_groups,)
+    accumulator set where the post-scan path ships the filtered value +
+    group columns and mask across the hop and aggregates on the consumer
+    side with the SAME kernel — result-DMA bytes are the paper's
+    PCIe-hop currency, and because both paths launch the same decode
+    buckets plus one aggregate kernel, the dispatch count must not
+    grow."""
+    import time as _time
+
+    import numpy as np
+
+    from repro.core import agg
+    from repro.core.plan import AggSpec
+    from repro.kernels import ops
+
+    from repro.lakeformat.encodings import PACK_BLOCK
+
+    reader = setup(sf)["lineitem"]
+    pred = Cmp("l_shipdate", "between", (365, 729))
+    aplan = ScanPlan(
+        "lineitem", [], pred,
+        aggregates=(AggSpec("sum", "l_extendedprice"), AggSpec("count")),
+        group_by="l_returnflag",
+    )
+    rplan = ScanPlan("lineitem", ["l_extendedprice", "l_returnflag"], pred)
+    eng = DatapathEngine(backend="ref")
+    n_groups = len(reader.string_dicts["l_returnflag"])
+
+    def fused():
+        return eng.scan(reader, aplan, batched=True)
+
+    def post_scan():
+        """Same aggregation math and launch count, but DOWNSTREAM of the
+        result DMA: the scan ships filtered value + group columns + mask,
+        then one grouped_agg_batch launch reduces them consumer-side with
+        the canonical per-row-group fold (so the answer is bit-identical
+        and the only difference is WHERE the hop sits)."""
+        res = eng.scan(reader, rplan, batched=True)
+        L = int(np.asarray(res.mask).shape[0])
+        nb = L // PACK_BLOCK
+        vals = np.asarray(res.columns["l_extendedprice"]).reshape(nb, PACK_BLOCK)
+        gids = np.asarray(res.columns["l_returnflag"]).astype(np.int32).reshape(nb, PACK_BLOCK)
+        m2 = np.asarray(res.mask).astype(np.int32).reshape(nb, PACK_BLOCK)
+        planes = ops.grouped_agg_batch(vals, gids, m2, n_groups, backend="ref")
+        from repro.core.engine import padded_rows
+        from repro.core.zonemap import prune_row_groups
+        from repro.core.plan import bind_expr
+        rgs = prune_row_groups(reader, bind_expr(pred, reader))
+        segs = [padded_rows(reader.row_group_meta(rg)["n"]) // PACK_BLOCK
+                for rg in rgs]
+        parts, off = [], 0
+        for seg in segs:
+            parts.append(agg.fold_blocks(
+                tuple(np.asarray(p)[off:off + seg] for p in planes), True))
+            off += seg
+        merged = {"l_extendedprice": agg.merge_partials(parts)}
+        return res, agg.finalize(aplan.aggregates, merged, n_groups)
+
+    fused(); post_scan()  # warmup: jit compiles + file cache
+    d0 = ops.dispatch_count()
+    t0 = _time.perf_counter()
+    fres = fused()
+    t_fused = _time.perf_counter() - t0
+    d_fused = ops.dispatch_count() - d0
+
+    d0 = ops.dispatch_count()
+    t0 = _time.perf_counter()
+    rres, host_aggs = post_scan()
+    t_post = _time.perf_counter() - t0
+    d_post = ops.dispatch_count() - d0
+
+    # the comparison is only meaningful if both answer identically
+    identical = all(
+        np.array_equal(np.asarray(fres.aggregates[k]), host_aggs[k])
+        for k in host_aggs)
+    dma_ratio = rres.stats.result_bytes / max(fres.stats.result_bytes, 1)
+    row("service.pushdown", t_fused,
+        f"dma_fused={fres.stats.result_bytes}"
+        f"/post_scan={rres.stats.result_bytes} ({dma_ratio:.0f}x less);"
+        f"dispatch_fused={d_fused}/post_scan={d_post};"
+        f"wall_fused_s={t_fused:.4f}/post_scan_s={t_post:.4f};"
+        f"bit_identical={identical}")
+    return {
+        "result_bytes_fused": int(fres.stats.result_bytes),
+        "result_bytes_post_scan": int(rres.stats.result_bytes),
+        "dma_reduction": float(dma_ratio),
+        "dispatch_fused": d_fused,
+        "dispatch_post_scan": d_post,
+        "wall_fused_s": t_fused,
+        "wall_post_scan_s": t_post,
+        "bit_identical": bool(identical),
+    }
+
+
 def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
     readers = setup(sf)
     plans = tenant_plans(n_tenants)
@@ -884,12 +983,14 @@ def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
     costmodel = run_costmodel(sf)
     blockstore = run_blockstore(sf)
     batchdecode = run_batchdecode(sf)
+    pushdown = run_pushdown(sf)
     tracing = run_trace(sf)
     kernels = run_kernel_roofline()
     fabric = run_fabric(sf)
 
     return {
         "fabric": fabric,
+        "pushdown": pushdown,
         "fairness": fairness,
         "costmodel": costmodel,
         "blockstore": blockstore,

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import agg as agg_merge
 from repro.core.cache import BlockCache
 from repro.core.plan import (
     And,
@@ -56,6 +57,7 @@ from repro.core.plan import (
     Or,
     ScanPlan,
     bind_expr,
+    expr_columns,
     pred_int_bounds,
 )
 from repro.core.zonemap import estimate_selectivity, prune_row_groups
@@ -105,6 +107,11 @@ class ScanStats:
     page_hit_bytes: int = 0  # encoded bytes that skipped the storage->NIC hop
     rows_total: int = 0
     rows_out: int = 0
+    # Bytes the scan's RESULT hands to the consumer (the result-DMA size):
+    # projection columns + survivor mask for row scans; the finalized
+    # (n_groups,) accumulator arrays for pushed-down aggregations — the
+    # number operator pushdown exists to shrink (DESIGN.md §16).
+    result_bytes: int = 0
     fused: bool = False
     cache_hit: bool = False
     # Device dispatches on the DECODE path only (column decodes, PLAIN device
@@ -131,6 +138,47 @@ class ScanResult:
     mask: jax.Array  # (L,) bool — predicate & row-validity
     count: jax.Array  # scalar int32 — surviving rows
     stats: ScanStats
+    # Operator pushdown (plans with `aggregates`): `aggregates` maps each
+    # AggSpec.out_name() to its finalized (n_groups,) array; `agg_partials`
+    # keeps the per-row-group ColPartials (core/agg.py) so the scan fabric
+    # can merge pod sub-results in global row-group order bit-identically.
+    # Both None for ordinary row scans; `columns`/`mask` are empty for
+    # aggregate scans (nothing row-shaped crosses the result DMA).
+    aggregates: Optional[Dict[str, np.ndarray]] = None
+    agg_partials: Optional[Dict[int, dict]] = None
+
+
+def _expr_blooms(e: Optional[Expr]) -> List[BloomProbe]:
+    """Every BloomProbe node in a predicate tree, document order."""
+    if e is None:
+        return []
+    if isinstance(e, BloomProbe):
+        return [e]
+    if isinstance(e, (And, Or)):
+        out: List[BloomProbe] = []
+        for c in e.children:
+            out.extend(_expr_blooms(c))
+        return out
+    return []
+
+
+def group_domain(reader, column: str) -> int:
+    """Dense group-id domain size for a pushed-down GROUP BY column,
+    from footer metadata alone.  String DICT columns decode to globally
+    stable int codes (the writer grows one map across row groups), so the
+    dictionary length IS the domain; int columns use the zone-map maximum
+    (values must be small non-negative ids — asserted, not assumed)."""
+    d = reader.string_dicts.get(column)
+    if d is not None:
+        return max(len(d), 1)
+    zms = reader.zonemaps(column)
+    lo = min(zm["min"] for zm in zms)
+    hi = max(zm["max"] for zm in zms)
+    assert lo >= 0, (
+        f"group_by column {column!r} has negative values (min {lo}); "
+        "pushdown grouping needs a dense non-negative id domain"
+    )
+    return int(hi) + 1
 
 
 class DatapathEngine:
@@ -141,7 +189,12 @@ class DatapathEngine:
         cache: Optional[BlockCache] = None,
     ):
         assert backend in ("ref", "pallas", "host", "auto")
-        assert offload in ("raw", "preloaded", "prefiltered")
+        # 'pre-aggregated' (DESIGN.md §16) is the fourth offload mode: an
+        # aggregate plan's tiny accumulator result is cached whole (same
+        # tier as prefiltered), but decoded row-group columns are NOT —
+        # pushdown exists to avoid materializing them, so seeding the
+        # decoded tier with them would waste the store.
+        assert offload in ("raw", "preloaded", "prefiltered", "pre-aggregated")
         self.backend = backend
         self.offload = offload
         self.cache = cache if cache is not None else BlockCache()
@@ -287,7 +340,8 @@ class DatapathEngine:
     # ------------------------------------------------------------------
     # predicate evaluation (on decoded device columns)
     # ------------------------------------------------------------------
-    def _eval(self, e: Expr, cols: Dict[str, jax.Array], blooms: Dict[str, jax.Array]):
+    def _eval(self, e: Expr, cols: Dict[str, jax.Array], blooms: Dict[str, jax.Array],
+              bmasks: Optional[Dict] = None):
         if isinstance(e, Cmp):
             v = cols[e.column]
             if e.op == "between":
@@ -309,6 +363,15 @@ class DatapathEngine:
                 m = m | (v == val)
             return m
         if isinstance(e, BloomProbe):
+            # the batched bucket pass pre-probes every slice page's keys in
+            # ONE stacked ops.bloom_probe per filter (`_batch_bloom_probe`)
+            # and hands the per-row-group slice down here — bit-identical
+            # (the probe is elementwise per key), one dispatch instead of
+            # one per row group
+            if bmasks is not None:
+                hit = bmasks.get((e.name, e.column))
+                if hit is not None:
+                    return hit
             keys = cols[e.column].astype(jnp.int32)
             L = keys.shape[0]
             pad = (-L) % RLE_OUT_BLOCK
@@ -322,26 +385,29 @@ class DatapathEngine:
             )
             return m.reshape(-1)[:L]
         if isinstance(e, And):
-            m = self._eval(e.children[0], cols, blooms)
+            m = self._eval(e.children[0], cols, blooms, bmasks)
             for c in e.children[1:]:
-                m = m & self._eval(c, cols, blooms)
+                m = m & self._eval(c, cols, blooms, bmasks)
             return m
         if isinstance(e, Or):
-            m = self._eval(e.children[0], cols, blooms)
+            m = self._eval(e.children[0], cols, blooms, bmasks)
             for c in e.children[1:]:
-                m = m | self._eval(c, cols, blooms)
+                m = m | self._eval(c, cols, blooms, bmasks)
             return m
         raise TypeError(e)
 
-    def _eval_mask(self, pred: Optional[Expr], cols, blooms, L: int, rg: int):
+    def _eval_mask(self, pred: Optional[Expr], cols, blooms, L: int, rg: int,
+                   bmasks: Optional[Dict] = None):
         """Predicate eval wrapped in a `filter` span (no predicate: an
-        all-true validity mask, not filter work, so no span)."""
+        all-true validity mask, not filter work, so no span).  `bmasks`
+        maps (bloom name, column) -> this row group's pre-probed (L,)
+        membership mask from the batched path's stacked probe."""
         if pred is None:
             return jnp.ones((L,), jnp.bool_)
         tr = _tr()
         if tr is not None:
             tr.begin("filter", rg=rg, rows=L)
-        mask = self._eval(pred, cols, blooms)
+        mask = self._eval(pred, cols, blooms, bmasks)
         if tr is not None:
             tr.end(name="filter")
         return mask
@@ -440,8 +506,52 @@ class DatapathEngine:
                                    tier="encoded")
         fuse = None
         if self.backend in ("ref", "pallas", "auto"):
-            fuse = self._fusable(pred, enc, plan.columns)
+            fuse = self._fusable(pred, enc, plan.materialized_columns())
         return n, L, False, enc, fuse, fetched
+
+    def _agg_skip(self, plan: ScanPlan, pred: Optional[Expr],
+                  enc: Dict[str, EncodedColumn]) -> frozenset:
+        """Aggregate value columns eligible for the fully-fused
+        decode→aggregate kernel (ops.fused_agg_batch): BITPACK pages whose
+        decoded values nothing else consumes — not projected, not the
+        group key, not referenced by the predicate.  Those pages skip the
+        decode bucket entirely; the unpack happens inside the aggregate
+        kernel and the value column never exists outside VMEM.  Ungrouped
+        plans only (the fused kernel has no group-id input), device
+        backends only — the host baseline decodes then reduces."""
+        if not plan.aggregates or plan.group_by is not None:
+            return frozenset()
+        if self.backend not in ("ref", "pallas", "auto"):
+            return frozenset()
+        keep = set(plan.columns) | set(expr_columns(pred))
+        out = set()
+        for spec in plan.aggregates:
+            c = spec.column
+            if c is None or c in keep:
+                continue
+            col = enc.get(c)
+            if col is not None and col.encoding == Encoding.BITPACK:
+                out.add(c)
+        return frozenset(out)
+
+    def _agg_skip_meta(self, plan: ScanPlan, pred: Optional[Expr],
+                       meta_cols: Dict) -> frozenset:
+        """`_agg_skip` predicted from footer metadata alone — the cost
+        estimator's mirror (decode_footprint), column for column."""
+        if not plan.aggregates or plan.group_by is not None:
+            return frozenset()
+        if self.backend not in ("ref", "pallas", "auto"):
+            return frozenset()
+        keep = set(plan.columns) | set(expr_columns(pred))
+        out = set()
+        for spec in plan.aggregates:
+            c = spec.column
+            if c is None or c in keep:
+                continue
+            cm = meta_cols.get(c)
+            if cm is not None and cm.get("encoding") == "bitpack":
+                out.add(c)
+        return frozenset(out)
 
     @staticmethod
     def _fused_width(reader, rg: int, pred) -> int:
@@ -451,6 +561,16 @@ class DatapathEngine:
         hardcoded 4)."""
         cm = reader.row_group_meta(rg)["columns"][pred.column]
         return np.dtype(cm["dtype"]).itemsize
+
+    @staticmethod
+    def _charge_agg_page(stats: ScanStats, col: EncodedColumn, L: int) -> None:
+        """Book a fused-aggregate page's processed-but-never-materialized
+        decode work — the in-kernel unpack, charged at the decoded int32
+        width under the page's encoding, exactly like the fused predicate
+        column.  No decode launch: the aggregate launch is counted where
+        it happens (ResumableScan._fold_agg)."""
+        e = col.encoding.value
+        stats.decode_work[e] = stats.decode_work.get(e, 0) + L * 4
 
     # ------------------------------------------------------------------
     # service hooks (metadata only — used by repro.datapath for admission
@@ -539,23 +659,62 @@ class DatapathEngine:
         if pred is None:
             pred = bind_expr(plan.predicate, reader)
         need = plan.all_columns()
-        proj = plan.columns
+        proj = plan.materialized_columns()
+        pred_cols = set(expr_columns(pred))
+        # aggregate pushdown eligibility is metadata-visible: a group-by
+        # domain over the kernels' MAX_GROUPS ceiling falls back to
+        # scan-then-host-aggregate, which does no in-datapath agg work
+        agg_push = bool(plan.aggregates) and (
+            plan.group_by is None
+            or group_domain(reader, plan.group_by) <= ops.MAX_GROUPS
+        )
+        agg_srcs = agg_merge.agg_sources(plan.aggregates) if agg_push else []
         out = []
         for rg in row_groups:
             meta = reader.row_group_meta(rg)
             cols = meta["columns"]
             L = padded_rows(meta["n"])
             fused_col = self.fused_column_meta(pred, cols, proj)
+            askip = self._agg_skip_meta(plan, pred, cols) if agg_push else frozenset()
             fp = {}
             for c in need:
                 if c not in cols:
                     continue
                 cm = cols[c]
+                if c == plan.group_by:
+                    role = "group-key"
+                elif c in {s for s in agg_srcs if s is not None}:
+                    role = "agg-source"
+                elif c in plan.columns:
+                    role = "output"
+                else:
+                    role = "pred"  # decoded for the mask, dropped pre-DMA
                 fp[c] = {
                     "nbytes": L * np.dtype(cm["dtype"]).itemsize,
                     "encoded_bytes": cm.get("encoded_bytes", 0),
                     "encoding": cm.get("encoding", "plain"),
-                    "materialized": c != fused_col,
+                    # fused predicate columns and fused-aggregate pages are
+                    # processed in-kernel, never materialized
+                    "materialized": c != fused_col and c not in askip,
+                    "role": role,
+                }
+            # one aggregate-launch pseudo-column per DECODED source (the
+            # fused `askip` pages' reduction rides their entry above):
+            # encoded_bytes 0 (nothing crosses the hop), nbytes L*4 of
+            # processed-not-materialized work at the 'agg' rate + one
+            # launch — exactly what ResumableScan._fold_agg books per
+            # source per row group on the sequential path
+            for src in agg_srcs:
+                if src in askip:
+                    continue
+                if src is not None and src not in cols:
+                    continue
+                fp[f"agg:{src or '*'}"] = {
+                    "nbytes": L * 4,
+                    "encoded_bytes": 0,
+                    "encoding": "agg",
+                    "materialized": False,
+                    "role": "agg",
                 }
             out.append({"rg": rg, "n": meta["n"], "rows": L, "columns": fp})
         return out
@@ -578,12 +737,14 @@ class DatapathEngine:
         scheduler drives.  `pred` must already be bound (bind_expr).
 
         Returns (cols, mask): `cols` maps each needed column to its decoded
-        array — or None for a predicate-only column skipped under fusion —
+        array — None for a predicate-only column skipped under fusion, or
+        the raw EncodedColumn for an aggregate value page the fused
+        decode→aggregate kernel consumes without decoding (`_agg_skip`) —
         and `mask` is (L,) bool including row validity.  `pool` is an
         optional tick-level decode pool shared across coalesced scans.
         """
         need = plan.all_columns()
-        proj = plan.columns
+        proj = plan.materialized_columns()
         mode = offload or self.offload
         # front half (resident probe / page tier / fetch / fusability) is
         # the exact code the batched path runs — _prepare_row_group
@@ -604,6 +765,7 @@ class DatapathEngine:
             mask = mask & (jnp.arange(L) < n)
             return cols, mask
 
+        askip = self._agg_skip(plan, pred, enc)
         cols: Dict[str, Optional[jax.Array]] = {}
         if fuse is not None:
             stats.fused = True
@@ -631,6 +793,10 @@ class DatapathEngine:
                 tr.end(name="decode_launch")
             fmask = fmask.reshape(-1)[:L]
             for name in proj:
+                if name in askip:
+                    self._charge_agg_page(stats, enc[name], L)
+                    cols[name] = enc[name]
+                    continue
                 arr, _ = self._decode_column(
                     reader, rg, name, enc[name], L, offload=offload, pool=pool, stats=stats
                 )
@@ -638,6 +804,10 @@ class DatapathEngine:
             mask = fmask
         else:
             for name in need:
+                if name in askip:
+                    self._charge_agg_page(stats, enc[name], L)
+                    cols[name] = enc[name]
+                    continue
                 arr, _ = self._decode_column(
                     reader, rg, name, enc[name], L, offload=offload, pool=pool, stats=stats
                 )
@@ -701,7 +871,7 @@ class DatapathEngine:
             return per_rg, fetched
 
         need = plan.all_columns()
-        proj = plan.columns
+        proj = plan.materialized_columns()
 
         # -- phase A: residency, page-tier fetch, fusability (rg order) ----
         # the front half is _prepare_row_group — the SAME code the
@@ -712,8 +882,9 @@ class DatapathEngine:
             n, L, resident, enc, fuse, did_fetch = self._prepare_row_group(
                 reader, rg, plan, pred, mode, stats, pool=pool
             )
+            askip = self._agg_skip(plan, pred, enc) if not resident else frozenset()
             slot = {"rg": rg, "n": n, "L": L, "resident": resident,
-                    "enc": enc, "fuse": fuse, "decode": []}
+                    "enc": enc, "fuse": fuse, "askip": askip, "decode": []}
             slots.append(slot)
             if did_fetch:
                 fetched.append(rg)
@@ -721,8 +892,12 @@ class DatapathEngine:
                 continue
             # columns needing a fresh decode — non-mutating residency peek
             # (presence checks touch no LRU order and count no hits; the
-            # counting lookups run in the finalize pass, in order)
+            # counting lookups run in the finalize pass, in order).  Fused-
+            # aggregate pages (`askip`) never enter the decode buckets: the
+            # aggregate kernel unpacks them in VMEM.
             for name in (proj if fuse is not None else need):
+                if name in askip:
+                    continue
                 key = self.rg_cache_key(reader, rg, name)
                 if pool is not None and key in pool:
                     continue
@@ -732,6 +907,10 @@ class DatapathEngine:
 
         # -- phase B: bucket compatible pages, one launch per bucket -------
         decoded, fmasks = self._launch_buckets(slots, pred, stats)
+
+        # bloom semijoin probes ride the batched pass too: every slice
+        # page's keys probe in ONE stacked launch per bloom filter
+        bloom_by_rg = self._batch_bloom_probe(slots, pred, blooms, decoded)
 
         # -- finalize (strict rg order): hits, puts, stats, masks ----------
         per_rg = []
@@ -747,6 +926,7 @@ class DatapathEngine:
                 per_rg.append((cols, mask & (jnp.arange(L) < n)))
                 continue
             enc = slot["enc"]
+            askip = slot["askip"]
             cols = {}
             if slot["fuse"] is not None:
                 stats.fused = True
@@ -756,6 +936,10 @@ class DatapathEngine:
                     + L * self._fused_width(reader, rg, pred)
                 )
                 for name in proj:
+                    if name in askip:
+                        self._charge_agg_page(stats, enc[name], L)
+                        cols[name] = enc[name]
+                        continue
                     arr, _ = self._decode_column(
                         reader, rg, name, enc[name], L, offload=offload,
                         pool=pool, stats=stats, precomputed=decoded.get((0, rg, name)),
@@ -764,17 +948,62 @@ class DatapathEngine:
                 mask = fmasks[(0, rg)]
             else:
                 for name in need:
+                    if name in askip:
+                        self._charge_agg_page(stats, enc[name], L)
+                        cols[name] = enc[name]
+                        continue
                     arr, _ = self._decode_column(
                         reader, rg, name, enc[name], L, offload=offload,
                         pool=pool, stats=stats, precomputed=decoded.get((0, rg, name)),
                     )
                     cols[name] = arr
-                mask = self._eval_mask(pred, cols, blooms, L, rg)
+                mask = self._eval_mask(pred, cols, blooms, L, rg,
+                                       bmasks=bloom_by_rg.get((0, rg)))
             mask = mask & (jnp.arange(L) < n)
             for name in need:
                 cols.setdefault(name, None)
             per_rg.append((cols, mask))
         return per_rg, fetched
+
+    def _batch_bloom_probe(self, slots, pred, blooms, decoded) -> Dict[tuple, Dict]:
+        """Stack every freshly-decoded slice page's keys and probe each
+        bloom filter in ONE `ops.bloom_probe` dispatch (the semijoin leg
+        of the fused bucket pass).  Returns {(item, rg): {(name, column):
+        (L,) mask}} for `_eval` to consume; pages served from the pool or
+        cache at finalize time are absent and fall back to the per-row-
+        group probe — bit-identical either way, the probe is elementwise.
+        """
+        if pred is None or self.backend == "host" or not blooms:
+            return {}
+        probes = {(p.name, p.column): p for p in _expr_blooms(pred)
+                  if p.name in blooms}
+        out: Dict[tuple, Dict] = {}
+        for (name, column), probe in sorted(probes.items()):
+            entries = []  # (item, rg, L, nblk)
+            keys = []
+            for slot in slots:
+                if slot["resident"] or slot["fuse"] is not None:
+                    continue
+                item = slot.get("item", 0)
+                arr = decoded.get((item, slot["rg"], column))
+                if arr is None:
+                    continue  # pool/cache-served at finalize: per-rg probe
+                L = slot["L"]
+                entries.append((item, slot["rg"], L, L // RLE_OUT_BLOCK))
+                keys.append(arr.astype(jnp.int32).reshape(-1, RLE_OUT_BLOCK))
+            if not entries:
+                continue
+            m = ops.bloom_probe(
+                jnp.concatenate(keys, axis=0), blooms[name], probe.n_hashes,
+                backend=self.backend,
+            )
+            s = 0
+            for item, rg, L, nblk in entries:
+                out.setdefault((item, rg), {})[(name, column)] = (
+                    m[s:s + nblk].reshape(-1)[:L]
+                )
+                s += nblk
+        return out
 
     def _serve_resident(self, reader, rg, name, L, mode, offload, pool, stats,
                         fetched):
@@ -1047,7 +1276,7 @@ class DatapathEngine:
             mode = it["offload"] or self.offload
             stats = it["stats"]
             need = plan.all_columns()
-            proj = plan.columns
+            proj = plan.materialized_columns()
             _owner(it)
             _ctx(it)
             slots = []
@@ -1064,14 +1293,15 @@ class DatapathEngine:
                     n = reader.row_group_meta(rg)["n"]
                     slots.append({"rg": rg, "n": n, "L": padded_rows(n),
                                   "resident": True, "enc": {}, "fuse": None,
-                                  "decode": [], "item": i, "pred": pred,
-                                  "stats": stats})
+                                  "askip": frozenset(), "decode": [],
+                                  "item": i, "pred": pred, "stats": stats})
                     continue
                 n, L, resident, enc, fuse, did_fetch = self._prepare_row_group(
                     reader, rg, plan, pred, mode, stats, pool=pool
                 )
+                askip = self._agg_skip(plan, pred, enc) if not resident else frozenset()
                 slot = {"rg": rg, "n": n, "L": L, "resident": resident,
-                        "enc": enc, "fuse": fuse, "decode": [],
+                        "enc": enc, "fuse": fuse, "askip": askip, "decode": [],
                         "item": i, "pred": pred, "stats": stats}
                 slots.append(slot)
                 if did_fetch:
@@ -1079,6 +1309,8 @@ class DatapathEngine:
                 if resident:
                     continue
                 for name in (proj if fuse is not None else need):
+                    if name in askip:
+                        continue  # fused-aggregate page: unpacked in-kernel
                     key = self.rg_cache_key(reader, rg, name)
                     if pool is not None and key in pool:
                         continue
@@ -1108,7 +1340,7 @@ class DatapathEngine:
             mode = it["offload"] or self.offload
             offload = it["offload"]
             need = plan.all_columns()
-            proj = plan.columns
+            proj = plan.materialized_columns()
             _owner(it)
             _ctx(it)
             per_rg = []
@@ -1125,6 +1357,7 @@ class DatapathEngine:
                     per_rg.append((cols, mask & (jnp.arange(L) < n)))
                     continue
                 enc = slot["enc"]
+                askip = slot["askip"]
                 cols = {}
                 if slot["fuse"] is not None:
                     stats.fused = True
@@ -1134,6 +1367,10 @@ class DatapathEngine:
                         + L * self._fused_width(reader, rg, pred)
                     )
                     for name in proj:
+                        if name in askip:
+                            self._charge_agg_page(stats, enc[name], L)
+                            cols[name] = enc[name]
+                            continue
                         arr, _ = self._decode_column(
                             reader, rg, name, enc[name], L, offload=offload,
                             pool=pool, stats=stats,
@@ -1143,6 +1380,10 @@ class DatapathEngine:
                     mask = fmasks[(i, rg)]
                 else:
                     for name in need:
+                        if name in askip:
+                            self._charge_agg_page(stats, enc[name], L)
+                            cols[name] = enc[name]
+                            continue
                         arr, _ = self._decode_column(
                             reader, rg, name, enc[name], L, offload=offload,
                             pool=pool, stats=stats,
@@ -1254,7 +1495,8 @@ class ResumableScan:
         row_groups=None,
         scan_tag=None,
     ):
-        assert offload in (None, "raw", "preloaded", "prefiltered"), offload
+        assert offload in (None, "raw", "preloaded", "prefiltered",
+                           "pre-aggregated"), offload
         self.engine = engine
         self.reader = reader
         self.plan = plan
@@ -1267,14 +1509,35 @@ class ResumableScan:
         self.stats = ScanStats(row_groups_total=reader.n_row_groups, rows_total=reader.n_rows)
         self.result: Optional[ScanResult] = None
 
-        if self.offload == "prefiltered":
+        # operator pushdown (DESIGN.md §16): the scan reduces to per-group
+        # accumulators instead of rows.  Beyond the kernels' MAX_GROUPS
+        # ceiling it falls back to accumulating the decoded value rows and
+        # reducing host-side at finish — through the same block math and
+        # fold order, so results stay bit-identical either way.
+        self._agg = bool(plan.aggregates)
+        if self._agg:
+            assert not plan.compact, "aggregate scans return no rows to compact"
+            self._n_groups = (
+                group_domain(reader, plan.group_by)
+                if plan.group_by is not None else 1
+            )
+            self._agg_push = self._n_groups <= ops.MAX_GROUPS
+            # src -> {rg: ColPartial}; None source = bare count(*)
+            self._agg_parts: Dict[Optional[str], Dict[int, object]] = {}
+        else:
+            self._agg_push = False
+        if self.offload in ("prefiltered", "pre-aggregated"):
             key = engine.plan_cache_key(reader, plan, self.blooms, tag=scan_tag)
             hit = engine.cache.get(key)
             if hit is not None:
                 self.stats.cache_hit = True
                 self.stats.rows_out = int(hit.count)
+                self.stats.result_bytes = hit.stats.result_bytes
                 self._pending: List[int] = []
-                self.result = ScanResult(hit.columns, hit.mask, hit.count, self.stats)
+                self.result = ScanResult(
+                    hit.columns, hit.mask, hit.count, self.stats,
+                    aggregates=hit.aggregates, agg_partials=hit.agg_partials,
+                )
                 return
 
         self.pred = bind_expr(plan.predicate, reader)
@@ -1309,9 +1572,7 @@ class ResumableScan:
                 self.reader, rg, self.plan, self.pred, self.blooms, self.stats,
                 pool=pool, offload=self.offload,
             )
-            for name in self._need:
-                self._per_rg_cols[name].append(cols[name])
-            self._per_rg_mask.append(mask)
+            self._fold([rg], [(cols, mask)])
         if not self._pending:
             self._finish()
         return self.result
@@ -1336,10 +1597,7 @@ class ResumableScan:
             self.reader, rgs, self.plan, self.pred, self.blooms, self.stats,
             pool=pool, offload=self.offload,
         )
-        for cols, mask in per_rg:
-            for name in self._need:
-                self._per_rg_cols[name].append(cols[name])
-            self._per_rg_mask.append(mask)
+        self._fold(rgs, per_rg)
         if not self._pending:
             self._finish()
         return self.result, fetched
@@ -1358,15 +1616,127 @@ class ResumableScan:
                 f"{self._pending[0] if self._pending else None})"
             )
             self._pending.pop(0)
-        for cols, mask in per_rg:
-            for name in self._need:
-                self._per_rg_cols[name].append(cols[name])
-            self._per_rg_mask.append(mask)
+        self._fold(list(row_groups), per_rg)
         if not self._pending:
             self._finish()
         return self.result
 
+    def _fold(self, rgs: List[int], per_rg) -> None:
+        """Fold one advanced slice into the accumulated partial result.
+        Row scans (and the >MAX_GROUPS aggregate fallback) stash decoded
+        columns and masks per row group; pushed-down aggregates reduce the
+        slice to (n_groups,) partials right here and keep nothing
+        row-shaped."""
+        if self._agg and self._agg_push:
+            self._fold_agg(rgs, per_rg)
+            return
+        for cols, mask in per_rg:
+            for name in self._need:
+                self._per_rg_cols[name].append(cols[name])
+            self._per_rg_mask.append(mask)
+
+    def _fold_agg(self, rgs: List[int], per_rg) -> None:
+        """Reduce an advanced slice to per-row-group ColPartials — ONE
+        aggregate launch per value source per call.  Sequential `advance`
+        passes single row groups (a launch per rg, mirroring its one-
+        launch-per-page decodes); the batched paths pass whole slices, so
+        every row group's blocks stack into one launch per source exactly
+        like the decode buckets (WFQ reconciliation refunds the
+        difference).  Splitting the stacked planes back per row group
+        before folding keeps the canonical per-rg fold boundary, so both
+        cadences produce bit-identical partials."""
+        be = self.engine.backend if self.engine.backend != "host" else "ref"
+        # per-rg block counts, 2-d group ids and survivor masks
+        metas = []  # (nblk, gids2d, mask2d)
+        for cols, mask in per_rg:
+            L = int(mask.shape[0])
+            nblk = L // PACK_BLOCK
+            if self.plan.group_by is not None:
+                gids = cols[self.plan.group_by].astype(jnp.int32).reshape(
+                    nblk, PACK_BLOCK)
+            else:
+                gids = jnp.zeros((nblk, PACK_BLOCK), jnp.int32)
+            metas.append((nblk, gids, mask.astype(jnp.int32).reshape(
+                nblk, PACK_BLOCK)))
+        tr = _tr()
+        for src in agg_merge.agg_sources(self.plan.aggregates):
+            # partition the slice: decoded pages (and the gids-as-values
+            # bare count) stack into one grouped launch; never-decoded
+            # BITPACK pages (`_agg_skip`) into one in-kernel-unpack launch
+            # per k.  Blocks reduce independently, so stacking cannot
+            # change any per-block accumulator row.
+            dec: List[int] = []
+            fused: Dict[int, List[int]] = {}
+            for i, (cols, _m) in enumerate(per_rg):
+                v = cols[src] if src is not None else None
+                if isinstance(v, EncodedColumn):
+                    fused.setdefault(v.k, []).append(i)
+                else:
+                    dec.append(i)
+            planes_by_i: Dict[int, tuple] = {}
+            fdtype: Dict[int, np.dtype] = {}
+            if dec:
+                vals = jnp.concatenate([
+                    (per_rg[i][0][src] if src is not None else metas[i][1])
+                    .reshape(metas[i][0], PACK_BLOCK)
+                    for i in dec
+                ], axis=0)
+                gids = jnp.concatenate([metas[i][1] for i in dec], axis=0)
+                m2 = jnp.concatenate([metas[i][2] for i in dec], axis=0)
+                if tr is not None:
+                    tr.begin("agg_launch", source=src or "*", pages=len(dec),
+                             rows=int(vals.shape[0]) * PACK_BLOCK)
+                planes = ops.grouped_agg_batch(
+                    vals, gids, m2, self._n_groups, backend=be)
+                if tr is not None:
+                    tr.end(name="agg_launch")
+                self.stats.kernel_launches += 1
+                nb = int(vals.shape[0])
+                self.stats.batch_pad_blocks += ops.bucket_blocks(nb) - nb
+                s = 0
+                for i in dec:
+                    planes_by_i[i] = tuple(p[s:s + metas[i][0]] for p in planes)
+                    fdtype[i] = np.dtype(vals.dtype)
+                    s += metas[i][0]
+                    # the in-launch reduction processes the decoded values
+                    # once more — ground-truth work the cost model prices
+                    # under its own 'agg' rate (decode_footprint mirrors
+                    # this as an agg:{src} pseudo-column)
+                    self.stats.decode_work["agg"] = (
+                        self.stats.decode_work.get("agg", 0)
+                        + metas[i][0] * PACK_BLOCK * 4
+                    )
+            for k, idxs in sorted(fused.items()):
+                packed = np.concatenate([
+                    np.asarray(per_rg[i][0][src].buffers["packed"])
+                    for i in idxs
+                ], axis=0)
+                m2 = jnp.concatenate([metas[i][2] for i in idxs], axis=0)
+                if tr is not None:
+                    tr.begin("agg_launch", source=src, pages=len(idxs),
+                             fused=True, rows=int(packed.shape[0]) * PACK_BLOCK)
+                planes = ops.fused_agg_batch(packed, k, m2, backend=be)
+                if tr is not None:
+                    tr.end(name="agg_launch")
+                self.stats.kernel_launches += 1
+                nb = int(packed.shape[0])
+                self.stats.batch_pad_blocks += ops.bucket_blocks(nb) - nb
+                s = 0
+                for i in idxs:
+                    planes_by_i[i] = tuple(p[s:s + metas[i][0]] for p in planes)
+                    fdtype[i] = np.dtype(np.int32)
+                    s += metas[i][0]
+            parts = self._agg_parts.setdefault(src, {})
+            for i, rg in enumerate(rgs):
+                parts[rg] = agg_merge.fold_blocks(
+                    planes_by_i[i],
+                    np.issubdtype(fdtype[i], np.floating),
+                )
+
     def _finish(self) -> None:
+        if self._agg:
+            self._finish_agg()
+            return
         proj = self.plan.columns
         if not self._rgs:  # everything pruned — never cached (nothing scanned)
             # Empty columns must keep the schema's decoded dtypes (float32
@@ -1391,12 +1761,87 @@ class ResumableScan:
             out_cols, mask, count = self.engine._compact(out_cols, mask)
             if tr is not None:
                 tr.end(name="filter")
+        # result-DMA size: the projected columns + survivor mask actually
+        # handed to the consumer (pred-only columns were dropped above —
+        # decode→project)
+        self.stats.result_bytes = (
+            sum(int(a.nbytes) for a in out_cols.values()) + int(mask.nbytes)
+        )
         result = ScanResult(out_cols, mask, count, self.stats)
         self.stats.rows_out = int(count)
         if self.offload == "prefiltered":
             # decode_work prices the entry's eviction rank by the ground-
             # truth work that produced it (re-creating the result costs at
             # least that much again)
+            self.engine.cache.put(
+                self.engine.plan_cache_key(self.reader, self.plan, self.blooms,
+                                           tag=self.scan_tag),
+                result, tier="prefiltered", decode_work=dict(self.stats.decode_work),
+            )
+        self.result = result
+
+    def _finish_agg(self) -> None:
+        """Assemble an aggregate scan's result: merge per-row-group
+        partials in global row-group order (the canonical fold), finalize
+        to (n_groups,) arrays, and hand over ONLY the accumulators — the
+        result DMA is their footprint, not the value column's."""
+        sources = agg_merge.agg_sources(self.plan.aggregates)
+        if not self._rgs:
+            # everything pruned: pure merge identities per source
+            parts_by_rg: Dict[int, dict] = {}
+            merged = {
+                src: agg_merge.identity_partial(
+                    self._n_groups,
+                    self.reader.decoded_dtype(src) if src is not None
+                    else np.int32,
+                )
+                for src in sources
+            }
+        elif self._agg_push:
+            parts_by_rg = {
+                rg: {src: self._agg_parts[src][rg] for src in sources}
+                for rg in self._rgs
+            }
+            merged = {
+                src: agg_merge.merge_partials(
+                    [self._agg_parts[src][rg] for rg in self._rgs])
+                for src in sources
+            }
+        else:
+            # >MAX_GROUPS host fallback: the value rows were accumulated
+            # like a row scan; reduce them through the same block math and
+            # per-rg fold boundaries (segments) host-side
+            cols = {
+                c: jnp.concatenate(v)
+                for c, v in self._per_rg_cols.items()
+                if v and v[0] is not None
+            }
+            mask = jnp.concatenate(self._per_rg_mask)
+            segments = [int(m.shape[0]) // PACK_BLOCK for m in self._per_rg_mask]
+            by_src = agg_merge.rows_partials(
+                cols, mask, self.plan.aggregates, self.plan.group_by,
+                self._n_groups, segments=segments,
+            )
+            parts_by_rg = {
+                rg: {src: by_src[src][j] for src in sources}
+                for j, rg in enumerate(self._rgs)
+            }
+            merged = {
+                src: agg_merge.merge_partials(parts)
+                for src, parts in by_src.items()
+            }
+        aggs = agg_merge.finalize(self.plan.aggregates, merged, self._n_groups)
+        count = int(next(iter(merged.values())).cnt.sum())
+        self.stats.rows_out = count
+        self.stats.result_bytes = sum(int(a.nbytes) for a in aggs.values())
+        result = ScanResult(
+            {}, jnp.zeros((0,), jnp.bool_), jnp.int32(count), self.stats,
+            aggregates=aggs, agg_partials=parts_by_rg,
+        )
+        if self.offload in ("prefiltered", "pre-aggregated"):
+            # the pre-aggregated tier caches the WHOLE accumulator result:
+            # a few KB answering a scan that would otherwise re-read and
+            # re-reduce every row group (DESIGN.md §16)
             self.engine.cache.put(
                 self.engine.plan_cache_key(self.reader, self.plan, self.blooms,
                                            tag=self.scan_tag),

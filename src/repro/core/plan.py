@@ -81,6 +81,30 @@ def expr_columns(e: Optional[Expr]) -> List[str]:
     return cols
 
 
+AGG_OPS = ("sum", "min", "max", "count")
+
+
+@dataclasses.dataclass(frozen=True)
+class AggSpec:
+    """One pushed-down aggregate: `op` over `column` (None for a bare row
+    count).  The engine reduces these per block inside the bucket launch
+    and only partial accumulators — never the value column — cross the
+    result DMA."""
+
+    op: str  # 'sum' | 'min' | 'max' | 'count'
+    column: Optional[str] = None  # None only for count
+    name: Optional[str] = None  # result key override
+
+    def __post_init__(self):
+        assert self.op in AGG_OPS, self.op
+        assert self.column is not None or self.op == "count", self
+
+    def out_name(self) -> str:
+        if self.name is not None:
+            return self.name
+        return f"{self.op}({self.column})" if self.column else "count(*)"
+
+
 @dataclasses.dataclass
 class ScanPlan:
     """One pushed-down table scan."""
@@ -89,24 +113,49 @@ class ScanPlan:
     columns: List[str]  # projection the consumer needs (post-filter)
     predicate: Optional[Expr] = None
     compact: bool = False  # materialize survivors packed to the front
+    # operator pushdown (DESIGN.md §16): when `aggregates` is set the scan
+    # returns (n_groups,) accumulators instead of row columns, optionally
+    # keyed by `group_by` (a DICT/string column whose decoded form is
+    # already a dense int code — groups never require decoding strings)
+    aggregates: Optional[Tuple[AggSpec, ...]] = None
+    group_by: Optional[str] = None
 
     def all_columns(self) -> List[str]:
         seen = dict.fromkeys(self.columns)
+        for spec in self.aggregates or ():
+            if spec.column is not None:
+                seen.setdefault(spec.column)
+        if self.group_by is not None:
+            seen.setdefault(self.group_by)
         for c in expr_columns(self.predicate):
             seen.setdefault(c)
         return list(seen)
 
+    def materialized_columns(self) -> List[str]:
+        """Columns whose decoded VALUES the scan consumes (projection +
+        aggregate inputs + group key) — as opposed to predicate-only
+        columns, which exist solely to produce the mask and are dropped
+        before the result DMA (decode→project)."""
+        seen = dict.fromkeys(self.columns)
+        for spec in self.aggregates or ():
+            if spec.column is not None:
+                seen.setdefault(spec.column)
+        if self.group_by is not None:
+            seen.setdefault(self.group_by)
+        return list(seen)
+
     def signature(self) -> str:
         """Stable id for prefiltered-cache keys."""
-        blob = json.dumps(
-            {
-                "table": self.table,
-                "columns": self.columns,
-                "pred": _expr_repr(self.predicate),
-                "compact": self.compact,
-            },
-            sort_keys=True,
-        )
+        sig = {
+            "table": self.table,
+            "columns": self.columns,
+            "pred": _expr_repr(self.predicate),
+            "compact": self.compact,
+        }
+        if self.aggregates:
+            sig["aggs"] = [[s.op, s.column, s.name] for s in self.aggregates]
+            sig["group_by"] = self.group_by
+        blob = json.dumps(sig, sort_keys=True)
         return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
 

@@ -74,37 +74,80 @@ def _eq_frac(lo: float, hi: float, v: float, width: float) -> float:
     return 1.0 / (width + 1.0) if width >= 1.0 else _EQ_NARROW
 
 
+def _range_frac(zm: dict, a: float, b: float) -> float:
+    """P(a <= value <= b) within one row group.  Uses the footer's
+    equi-width histogram when present — full bins contribute their true
+    mass, the two boundary bins prorate uniformly within the bin — and
+    degrades to uniform-over-[min,max] for legacy files without one."""
+    lo, hi = float(zm["min"]), float(zm["max"])
+    width = hi - lo
+    if width <= 0:
+        return 1.0 if a <= lo <= b else 0.0
+    a2, b2 = max(a, lo), min(b, hi)
+    if a2 > b2:
+        return 0.0
+    hist = zm.get("hist")
+    if hist:
+        total = float(sum(hist)) or 1.0
+        bw = width / len(hist)
+        acc = 0.0
+        for i, c in enumerate(hist):
+            if not c:
+                continue
+            ov = min(lo + (i + 1) * bw, b2) - max(lo + i * bw, a2)
+            if ov > 0:
+                acc += c * min(1.0, ov / bw)
+        return min(1.0, acc / total)
+    return (b2 - a2) / width
+
+
+def _eq_frac_zm(zm: dict, v: float) -> float:
+    """P(value == v): the containing histogram bin's mass spread over the
+    bin's distinct values; uniform-assumption fallback without a hist."""
+    lo, hi = float(zm["min"]), float(zm["max"])
+    width = hi - lo
+    if width <= 0:
+        return 1.0 if v == lo else 0.0
+    if not (lo <= v <= hi):
+        return 0.0
+    hist = zm.get("hist")
+    if hist:
+        total = float(sum(hist)) or 1.0
+        bw = width / len(hist)
+        i = min(int((v - lo) / bw), len(hist) - 1)
+        mass = hist[i] / total
+        return mass / (bw + 1.0) if bw >= 1.0 else mass
+    return _eq_frac(lo, hi, v, width)
+
+
 def _frac_true(e: Expr, zonemaps: dict, rg: int) -> float:
-    """Estimated fraction of rows in row group `rg` satisfying e, assuming
-    values uniform over [min, max].  Cheap and rough by design — it only has
-    to rank requests for the offload policy, not be an optimizer."""
+    """Estimated fraction of rows in row group `rg` satisfying e, from the
+    footer's per-row-group value histograms (uniform over [min, max] for
+    files without them).  Cheap and rough by design — it only has to rank
+    requests for the offload policy, not be an optimizer."""
     if isinstance(e, Cmp):
         zm = zonemaps[e.column][rg]
-        lo, hi = float(zm["min"]), float(zm["max"])
-        width = hi - lo
         v = e.value
-        if width <= 0:
+        if float(zm["max"]) - float(zm["min"]) <= 0:
             return 1.0 if _maybe_true(e, zonemaps, rg) else 0.0
         if e.op == "between":
-            a, b = float(v[0]), float(v[1])
-            return max(0.0, min(hi, b) - max(lo, a)) / width
+            return _range_frac(zm, float(v[0]), float(v[1]))
         v = float(v)
         if e.op in ("lt", "le"):
-            return min(1.0, max(0.0, (v - lo) / width))
+            return _range_frac(zm, float("-inf"), v)
         if e.op in ("gt", "ge"):
-            return min(1.0, max(0.0, (hi - v) / width))
+            return _range_frac(zm, v, float("inf"))
         if e.op == "eq":
-            return _eq_frac(lo, hi, v, width)
+            return _eq_frac_zm(zm, v)
         if e.op == "ne":
-            return 1.0 - _eq_frac(lo, hi, v, width)
+            return 1.0 - _eq_frac_zm(zm, v)
         raise ValueError(e.op)
     if isinstance(e, InSet):
         zm = zonemaps[e.column][rg]
         lo, hi = float(zm["min"]), float(zm["max"])
-        width = hi - lo
-        if width <= 0:
+        if hi - lo <= 0:
             return 1.0 if any(lo <= float(v) <= hi for v in e.values) else 0.0
-        return min(1.0, sum(_eq_frac(lo, hi, float(v), width) for v in e.values))
+        return min(1.0, sum(_eq_frac_zm(zm, float(v)) for v in e.values))
     if isinstance(e, BloomProbe):
         return _BLOOM_SELECTIVITY
     if isinstance(e, And):

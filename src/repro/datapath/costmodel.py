@@ -64,6 +64,10 @@ NOMINAL_RATES_GBPS: Dict[str, float] = {
     "bitpack": 10.0,
     "dict": 8.0,
     "delta": 6.0,
+    # pushed-down aggregate reduction (ops.grouped_agg_batch /
+    # ops.fused_agg_batch), priced per PROCESSED value byte — the values
+    # are reduced in-kernel and never materialized (DESIGN.md §16)
+    "agg": 8.0,
 }
 
 # Fixed per-kernel-launch overhead when no calibration is available.

@@ -44,8 +44,11 @@ from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
+import numpy as np
+
+from repro.core import agg as agg_merge
 from repro.core.cache import BlockCache
-from repro.core.engine import DatapathEngine, ScanResult, ScanStats
+from repro.core.engine import DatapathEngine, ScanResult, ScanStats, group_domain
 from repro.core.plan import ScanPlan, bind_expr
 from repro.core.zonemap import prune_and_estimate
 from repro.datapath.blockstore import PeerFetcher
@@ -318,7 +321,16 @@ class ScanFabric:
     def _absorb(self, t: FabricTicket, sub: _SubScan, res: ScanResult) -> None:
         """Slice one completed sub-result back into per-row-group chunks.
         Sub-results are uncompacted, so each row group occupies exactly
-        `padded_rows(n)` consecutive rows of the concatenated arrays."""
+        `padded_rows(n)` consecutive rows of the concatenated arrays.
+        Aggregate sub-results carry per-row-group ColPartials instead
+        (ScanResult.agg_partials) — the merge re-folds them in GLOBAL
+        row-group order, so the fabric's float sums land on the exact
+        bit pattern the single-node fold produces."""
+        if res.agg_partials is not None:
+            for rg in sub.rgs:
+                t.parts[rg] = res.agg_partials[rg]
+            t.stats_parts.append(res.stats)
+            return
         off = 0
         for rg in sub.rgs:
             L = padded_rows(t.reader.row_group_meta(rg)["n"])
@@ -331,7 +343,9 @@ class ScanFabric:
         if t.subs or t.status != "queued":
             return bool(t.status != "queued")
         stats = _merge_stats(t.stats_parts, t.reader)
-        if not t.pruned_rgs:  # all pruned — same empty result the engine builds
+        if t.plan.aggregates:
+            t.result = self._merge_agg(t, stats)
+        elif not t.pruned_rgs:  # all pruned — same empty result the engine builds
             empty = {c: jnp.zeros((0,), t.reader.decoded_dtype(c))
                      for c in t.plan.columns}
             mask = jnp.zeros((0,), jnp.bool_)
@@ -355,6 +369,39 @@ class ScanFabric:
         self.catalog.release(t.snapshot)
         t.snapshot = None
         return True
+
+    def _merge_agg(self, t: FabricTicket, stats: ScanStats) -> ScanResult:
+        """Deterministic partial-aggregate merge: every pod's per-row-group
+        ColPartials re-fold in GLOBAL row-group order (t.pruned_rgs), the
+        exact boundary-and-order ResumableScan._finish_agg uses — so the
+        N-pod grouped sum is bit-identical to the single-node one, float
+        accumulation included, regardless of which pods owned what or how
+        a drain replayed a slice."""
+        sources = agg_merge.agg_sources(t.plan.aggregates)
+        n_groups = (group_domain(t.reader, t.plan.group_by)
+                    if t.plan.group_by is not None else 1)
+        if not t.pruned_rgs:
+            merged = {
+                src: agg_merge.identity_partial(
+                    n_groups,
+                    t.reader.decoded_dtype(src) if src is not None else np.int32,
+                )
+                for src in sources
+            }
+        else:
+            merged = {
+                src: agg_merge.merge_partials(
+                    [t.parts[rg][src] for rg in t.pruned_rgs])
+                for src in sources
+            }
+        aggs = agg_merge.finalize(t.plan.aggregates, merged, n_groups)
+        count = int(next(iter(merged.values())).cnt.sum())
+        stats.rows_out = count
+        stats.result_bytes = sum(int(a.nbytes) for a in aggs.values())
+        return ScanResult(
+            {}, jnp.zeros((0,), jnp.bool_), jnp.int32(count), stats,
+            aggregates=aggs, agg_partials=dict(t.parts),
+        )
 
     def result(self, ticket: FabricTicket) -> ScanResult:
         while ticket.status == "queued":

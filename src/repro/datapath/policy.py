@@ -16,6 +16,10 @@ per request from metadata only:
                     are likely to be reused by coalesced neighbors
   3. raw          — highly selective one-off scans: decode+filter fresh and
                     keep the cache for workloads that reuse it
+  4. pre-aggregated — aggregate-pushdown plans that recur: cache the WHOLE
+                    accumulator result (a few KB) instead of seeding the
+                    decoded tier with value columns pushdown never
+                    materializes (DESIGN.md §16)
 """
 
 from __future__ import annotations
@@ -96,10 +100,16 @@ class AdaptiveOffloadPolicy:
         #    caching (the key folds in bloom digests, so per-caller semijoin
         #    state can never serve another caller's probe).  Residency is
         #    read straight from the store's prefiltered tier.
+        #    Aggregate plans take the fourth mode, 'pre-aggregated': same
+        #    whole-result reuse, but what is cached is the (n_groups,)
+        #    accumulator set — a few KB answering the entire scan — and the
+        #    decoded/page tiers are NOT seeded along the way (pushdown never
+        #    materializes the value column, so there is nothing worth
+        #    pinning; decode behaves like 'raw').
         scan_key = engine.plan_cache_key(reader, plan, blooms, tag=scan_tag)
         cached, _ = engine.cache.plan_fetch([scan_key], tier="prefiltered")
         if cached or seen >= self.repeat_k:
-            return "prefiltered"
+            return "pre-aggregated" if plan.aggregates else "prefiltered"
 
         # 2) row-group reuse: are this scan's decoded columns already
         #    resident?  The probe reads the store's DECODED tier directly —
@@ -131,7 +141,7 @@ class StaticPolicy:
     engine's behavior — kept for A/B comparison in benchmarks)."""
 
     def __init__(self, mode: str = "raw"):
-        assert mode in ("raw", "preloaded", "prefiltered")
+        assert mode in ("raw", "preloaded", "prefiltered", "pre-aggregated")
         self.mode = mode
         self.decisions: Dict[str, int] = collections.defaultdict(int)
 

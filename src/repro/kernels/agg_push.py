@@ -1,0 +1,136 @@
+"""Pallas TPU kernels: fused operator pushdown — decode→aggregate.
+
+The paper's SmartNIC wins by operating on data in the datapath; these
+kernels extend that from filter+compact to aggregation (DESIGN.md §16).
+Two entry points, both batched over pages stacked along the block axis
+so many row groups share ONE launch per (encoding, k, dtype) bucket:
+
+  grouped_agg_pallas   decoded value blocks + pre-decode int group ids
+                       (a DICT/string column's codes) + survivor mask ->
+                       per-block partial accumulators (count / hi-lo
+                       split sums / min / max), each (nblocks, n_groups)
+  fused_agg_pallas     BITPACK pages -> in-kernel unpack ladder -> masked
+                       ungrouped aggregate; the value column NEVER exists
+                       outside VMEM — the result DMA is (nblocks, 1)
+                       accumulators instead of (nblocks, 4096) values
+
+Both mirror `kernels/ref.py` `grouped_agg` op-for-op (the kernel bodies
+call the same block math), so parity is exact and every reduction stays
+within a block: grid steps, bucket splits, row-group slices and pod
+shards all produce bit-identical partial rows, and the host-side int64 /
+float64 merge (core/agg.py) is order-independent by exactness.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitunpack import _ladder
+from repro.kernels.ref import grouped_agg
+from repro.lakeformat.encodings import LANES, PACK_BLOCK
+
+# (group, 4096, n_groups) one-hot intermediates bound VMEM: group=2 at
+# the MAX_GROUPS ceiling stays ~4 MB per intermediate
+DEFAULT_GROUP = 2
+MAX_GROUPS = 128  # pushdown eligibility ceiling (engine falls back above)
+
+
+def _out_shapes(nblocks: int, n_groups: int, vdtype):
+    """ShapeDtypeStructs for the 5 accumulator planes (cnt/s0/s1/mn/mx)."""
+    sum_dt = jnp.float32 if jnp.issubdtype(vdtype, jnp.floating) else jnp.int32
+    dts = (jnp.int32, sum_dt, jnp.int32, vdtype, vdtype)
+    return [jax.ShapeDtypeStruct((nblocks, n_groups), dt) for dt in dts]
+
+
+def _grouped_kernel(n_groups, vals_ref, gids_ref, mask_ref,
+                    cnt_ref, s0_ref, s1_ref, mn_ref, mx_ref):
+    cnt, s0, s1, mn, mx = grouped_agg(
+        vals_ref[...], gids_ref[...], mask_ref[...], n_groups
+    )
+    cnt_ref[...], s0_ref[...], s1_ref[...] = cnt, s0, s1
+    mn_ref[...], mx_ref[...] = mn, mx
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "group", "interpret"))
+def grouped_agg_pallas(
+    values: jax.Array,
+    gids: jax.Array,
+    mask: jax.Array,
+    n_groups: int,
+    *,
+    group: int = DEFAULT_GROUP,
+    interpret: bool = True,
+):
+    """values (nblocks, 4096) int32|float32; gids/mask (nblocks, 4096)
+    int32 -> 5 x (nblocks, n_groups): cnt, s0, s1, mn, mx (ref.grouped_agg
+    layout).  Padded blocks carry mask == 0, so their rows are exact merge
+    identities and the caller can simply drop them."""
+    nblocks = values.shape[0]
+    group = min(group, nblocks)
+    pad = (-nblocks) % group
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        gids = jnp.pad(gids, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))  # zeros -> identity rows
+    steps = values.shape[0] // group
+    out_shape = _out_shapes(values.shape[0], n_groups, values.dtype)
+    spec = pl.BlockSpec((group, PACK_BLOCK), lambda i: (i, 0))
+    gspec = pl.BlockSpec((group, n_groups), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_grouped_kernel, n_groups),
+        grid=(steps,),
+        in_specs=[spec, spec, spec],
+        out_specs=[gspec] * 5,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(values, gids.astype(jnp.int32), mask.astype(jnp.int32))
+    return tuple(o[:nblocks] for o in outs)
+
+
+def _fused_kernel(k, packed_ref, mask_ref,
+                  cnt_ref, s0_ref, s1_ref, mn_ref, mx_ref):
+    vals = _ladder(packed_ref[...], k)  # (G, 32, 128) int32, in VMEM only
+    vals = vals.reshape(vals.shape[0], PACK_BLOCK)
+    gids = jnp.zeros(vals.shape, jnp.int32)
+    cnt, s0, s1, mn, mx = grouped_agg(vals, gids, mask_ref[...], 1)
+    cnt_ref[...], s0_ref[...], s1_ref[...] = cnt, s0, s1
+    mn_ref[...], mx_ref[...] = mn, mx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "group", "interpret"))
+def fused_agg_pallas(
+    packed: jax.Array,
+    k: int,
+    mask: jax.Array,
+    *,
+    group: int = DEFAULT_GROUP,
+    interpret: bool = True,
+):
+    """packed (nblocks, k, 128) uint32 BITPACK pages + mask (nblocks,
+    4096) int32 -> 5 x (nblocks, 1) accumulators, decode fused in-kernel
+    (the flagship never-materialize path)."""
+    nblocks = packed.shape[0]
+    group = min(group, nblocks)
+    pad = (-nblocks) % group
+    if pad:
+        packed = jnp.pad(packed, ((0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    steps = packed.shape[0] // group
+    out_shape = _out_shapes(packed.shape[0], 1, jnp.int32)
+    gspec = pl.BlockSpec((group, 1), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_fused_kernel, k),
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((group, k, LANES), lambda i: (i, 0, 0)),
+            pl.BlockSpec((group, PACK_BLOCK), lambda i: (i, 0)),
+        ],
+        out_specs=[gspec] * 5,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(packed, mask.astype(jnp.int32))
+    return tuple(o[:nblocks] for o in outs)

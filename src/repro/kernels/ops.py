@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.agg_push import MAX_GROUPS, fused_agg_pallas, grouped_agg_pallas
 from repro.kernels.bitunpack import bitunpack_pallas
 from repro.kernels.bloom_probe import bloom_probe_pallas
 from repro.kernels.delta_decode import delta_decode_pallas
@@ -288,6 +289,16 @@ def _ref_fused_scan_batch(packed, lohi, k: int):
     return (vals >= lohi[:, 0:1]) & (vals <= lohi[:, 1:2])
 
 
+@functools.partial(jax.jit, static_argnames=("n_groups",))
+def _ref_grouped_agg_batch(values, gids, mask, n_groups: int):
+    return ref.grouped_agg(values, gids, mask, n_groups)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _ref_fused_agg_batch(packed, mask, k: int):
+    return ref.fused_agg_scan(packed, k, mask)
+
+
 def _pad_blocks(arr: np.ndarray, target: int, fill=0) -> np.ndarray:
     """Host-side leading-axis pad to the bucket size.  Padding happens
     BEFORE the jitted call on purpose: padding inside the trace would key
@@ -402,6 +413,57 @@ def fused_scan_batch(packed: np.ndarray, k: int, lo: np.ndarray, hi: np.ndarray,
         return fused_scan_batch_pallas(padded, k, jnp.asarray(lohi),
                                        interpret=interp)[:nb] > 0
     return _ref_fused_scan_batch(padded, lohi, k)[:nb]
+
+
+def _pad_blocks_dev(arr, target: int):
+    """Leading-axis zero-pad that works for host numpy AND device arrays
+    (decoded value blocks never round-trip to host just to be padded)."""
+    nb = arr.shape[0]
+    if nb == target:
+        return arr
+    if isinstance(arr, np.ndarray):
+        return _pad_blocks(arr, target)
+    return jnp.pad(arr, [(0, target - nb)] + [(0, 0)] * (arr.ndim - 1))
+
+
+def grouped_agg_batch(values, gids, mask, n_groups: int, *, backend="auto"):
+    """Batched grouped aggregate over stacked decoded blocks in ONE
+    dispatch: values/gids/mask (nblocks, 4096) -> 5 x (nblocks, n_groups)
+    partial accumulators (ref.grouped_agg layout).  Padded blocks carry
+    mask == 0 so their rows are exact merge identities."""
+    assert 1 <= n_groups <= MAX_GROUPS, n_groups
+    backend, interp = _resolve(backend)
+    nb = values.shape[0]
+    target = bucket_blocks(nb)
+    values = _pad_blocks_dev(values, target)
+    gids = _pad_blocks_dev(gids, target)
+    mask = _pad_blocks_dev(mask, target)
+    _count()
+    outs = (
+        grouped_agg_pallas(values, gids, mask, n_groups, interpret=interp)
+        if backend == "pallas"
+        else _ref_grouped_agg_batch(values, gids, mask, n_groups)
+    )
+    return tuple(o[:nb] for o in outs)
+
+
+def fused_agg_batch(packed: np.ndarray, k: int, mask, *, backend="auto"):
+    """Fully-fused BITPACK decode -> masked ungrouped aggregate in ONE
+    dispatch: stacked (nblocks, k, 128) pages + (nblocks, 4096) survivor
+    mask -> 5 x (nblocks, 1) accumulators.  The decoded value column
+    never leaves the kernel (the pushdown headline path)."""
+    backend, interp = _resolve(backend)
+    nb = packed.shape[0]
+    target = bucket_blocks(nb)
+    packed = _pad_blocks(packed, target)
+    mask = _pad_blocks_dev(mask, target)
+    _count()
+    outs = (
+        fused_agg_pallas(packed, k, mask, interpret=interp)
+        if backend == "pallas"
+        else _ref_fused_agg_batch(packed, mask, k)
+    )
+    return tuple(o[:nb] for o in outs)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, scale=None, backend="auto",

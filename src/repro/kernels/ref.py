@@ -206,6 +206,76 @@ def fused_scan(
 
 
 # ---------------------------------------------------------------------------
+# grouped aggregate pushdown: per-block partial accumulators
+# ---------------------------------------------------------------------------
+
+# int32 sums are computed exactly as a 16-bit hi/lo split per block:
+# v == (v >> 16) * 2^16 + (v & 0xFFFF) in two's complement, and both
+# partial sums fit int32 for any 4096-row block (4096 * 0xFFFF < 2^28),
+# so the host-side int64 recombination is EXACT — which is what makes the
+# merge associative and the fabric's partial-aggregate reduction
+# bit-identical under any bucket/row-group/pod split.
+AGG_INT_SHIFT = 16
+AGG_INT_MASK = 0xFFFF
+
+# identity fills for (block, group) cells with no masked member.  Plain
+# Python scalars on purpose: jnp constants would be captured by the
+# pallas kernel bodies that call grouped_agg, which pallas_call rejects.
+AGG_INT_MIN_IDENT = 2**31 - 1
+AGG_INT_MAX_IDENT = -(2**31)
+AGG_FLT_MIN_IDENT = float("inf")
+AGG_FLT_MAX_IDENT = float("-inf")
+
+
+def grouped_agg(
+    values: jax.Array, gids: jax.Array, mask: jax.Array, n_groups: int
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """(nblk, B) values + (nblk, B) int32 group ids + (nblk, B) mask ->
+    per-block partial accumulators, each (nblk, n_groups):
+
+      cnt  int32    masked member count
+      s0   float32  block sums          (float values)
+           int32    sum of (v >> 16)    (int values, arithmetic shift)
+      s1   int32    sum of (v & 0xFFFF) (int values; zeros for float)
+      mn   value dtype, min (identity fill where the cell is empty)
+      mx   value dtype, max (identity fill where the cell is empty)
+
+    All reductions are WITHIN a block (axis 1), so computing any subset of
+    blocks yields bit-identical rows — the pallas kernel's grid steps and
+    this oracle agree exactly, and cross-block merging happens host-side
+    in int64/float64 (core/agg.py)."""
+    oh = (
+        gids.astype(jnp.int32)[:, :, None]
+        == jnp.arange(n_groups, dtype=jnp.int32)[None, None, :]
+    ) & (mask.astype(jnp.int32) != 0)[:, :, None]
+    cnt = jnp.sum(oh.astype(jnp.int32), axis=1)
+    v = values[:, :, None]
+    if jnp.issubdtype(values.dtype, jnp.floating):
+        s0 = jnp.sum(jnp.where(oh, v.astype(jnp.float32), 0.0), axis=1)
+        s1 = jnp.zeros_like(cnt)
+        mn = jnp.min(jnp.where(oh, v, AGG_FLT_MIN_IDENT), axis=1)
+        mx = jnp.max(jnp.where(oh, v, AGG_FLT_MAX_IDENT), axis=1)
+    else:
+        vi = values.astype(jnp.int32)[:, :, None]
+        s0 = jnp.sum(jnp.where(oh, vi >> AGG_INT_SHIFT, 0), axis=1)
+        s1 = jnp.sum(jnp.where(oh, vi & AGG_INT_MASK, 0), axis=1)
+        mn = jnp.min(jnp.where(oh, vi, AGG_INT_MIN_IDENT), axis=1)
+        mx = jnp.max(jnp.where(oh, vi, AGG_INT_MAX_IDENT), axis=1)
+    return cnt, s0, s1, mn.astype(values.dtype), mx.astype(values.dtype)
+
+
+def fused_agg_scan(
+    packed: jax.Array, k: int, mask: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fully-fused BITPACK decode -> masked ungrouped aggregate: the value
+    column never exists outside the kernel.  Returns the same 5-tuple as
+    `grouped_agg` with n_groups == 1 (shapes (nblk, 1))."""
+    vals = bitunpack(packed, k).reshape(packed.shape[0], PACK_BLOCK)
+    gids = jnp.zeros(vals.shape, jnp.int32)
+    return grouped_agg(vals, gids, mask, 1)
+
+
+# ---------------------------------------------------------------------------
 # attention (oracle for flash_attention kernel)
 # ---------------------------------------------------------------------------
 

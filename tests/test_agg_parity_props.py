@@ -1,0 +1,241 @@
+"""Aggregate-pushdown kernels vs kernels/ref.py oracles: randomized
+parity sweeps (seeded always; hypothesis-driven when available) across
+int/float values, bitpack widths k, group counts, and ragged block
+counts on the two-size ladder's bucket boundaries.
+
+Bit-identity is the contract.  Every reduction in grouped_agg /
+fused_agg_scan is WITHIN a block, so the batched ops must match the
+oracle row-for-row regardless of how many pad blocks the ladder adds —
+pad blocks carry mask == 0 and so emit exact merge identities.  The
+int-sum overflow test pins the 16-bit hi/lo split: per-block int32
+sums of values at the int32 extremes must recombine EXACTLY in int64,
+which is the property the whole order-independent fabric merge rests on.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import agg
+from repro.kernels import ops, ref
+from repro.lakeformat import encodings as E
+from repro.lakeformat.encodings import PACK_BLOCK
+
+BACKENDS = ("ref", "pallas")
+
+# block counts straddling the ladder bucket boundaries {1,2,3,4,6,8,...}
+LADDER_NS = (1, 2, 3, 4, 5, 6, 7, 8, 9, 12, 13, 16, 17, 24, 25, 32, 33)
+
+
+# ---------------------------------------------------------------------------
+# generators (pure, seeded — shared by the fixed sweep and hypothesis)
+# ---------------------------------------------------------------------------
+
+def _rand_agg_inputs(rng, nb: int, n_groups: int, float_vals: bool):
+    if float_vals:
+        vals = rng.standard_normal((nb, PACK_BLOCK)).astype(np.float32) * 1e3
+    else:
+        vals = rng.integers(-(1 << 20), 1 << 20,
+                            (nb, PACK_BLOCK)).astype(np.int32)
+    gids = rng.integers(0, n_groups, (nb, PACK_BLOCK)).astype(np.int32)
+    mask = rng.random((nb, PACK_BLOCK)) < 0.6
+    return vals, gids, mask
+
+
+def _check_grouped(vals, gids, mask, n_groups: int):
+    want = tuple(np.asarray(p) for p in ref.grouped_agg(
+        jnp.asarray(vals), jnp.asarray(gids), jnp.asarray(mask), n_groups))
+    for be in BACKENDS:
+        got = ops.grouped_agg_batch(vals, gids, mask, n_groups, backend=be)
+        for i, (g, w) in enumerate(zip(got, want)):
+            g = np.asarray(g)
+            assert g.shape == w.shape, (be, i)
+            assert np.array_equal(g, w), (be, i, n_groups)
+
+
+def _rand_fused_inputs(rng, nb: int, k: int):
+    v = rng.integers(0, np.uint64(1) << np.uint64(k), size=nb * PACK_BLOCK,
+                     dtype=np.uint64)
+    packed = E.bitpack_encode(v, k)
+    mask = rng.random((nb, PACK_BLOCK)) < 0.6
+    return packed, mask
+
+
+def _check_fused(packed, mask, k: int):
+    want = tuple(np.asarray(p) for p in ref.fused_agg_scan(
+        jnp.asarray(packed), k, jnp.asarray(mask)))
+    for be in BACKENDS:
+        got = ops.fused_agg_batch(packed, k, mask, backend=be)
+        for i, (g, w) in enumerate(zip(got, want)):
+            assert np.array_equal(np.asarray(g), w), (be, i, k)
+
+
+# ---------------------------------------------------------------------------
+# fixed seeded sweeps (always run — hypothesis is optional in this image)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("float_vals", [False, True], ids=["int32", "float32"])
+def test_grouped_agg_parity_across_ladder_boundaries(float_vals):
+    rng = np.random.default_rng(10 if float_vals else 11)
+    for i, nb in enumerate(LADDER_NS):
+        n_groups = (1, 2, 3, 7, 16, ops.MAX_GROUPS)[i % 6]
+        _check_grouped(*_rand_agg_inputs(rng, nb, n_groups, float_vals),
+                       n_groups)
+
+
+def test_fused_agg_parity_across_k_and_ladder_boundaries():
+    # fused path is BITPACK-only by design; k sweeps the writer's range
+    rng = np.random.default_rng(12)
+    for i, k in enumerate(range(1, 31)):
+        nb = LADDER_NS[i % len(LADDER_NS)]
+        packed, mask = _rand_fused_inputs(rng, nb, k)
+        _check_fused(packed, mask, k)
+
+
+def test_bloom_probe_batch_parity():
+    # the op's contract is (nblk, RLE_OUT_BLOCK) key tiles — the engine's
+    # batched semijoin reshapes decoded columns to exactly this
+    from repro.lakeformat.encodings import RLE_OUT_BLOCK
+
+    rng = np.random.default_rng(13)
+    for nb in (1, 3, 8, 17):
+        keys = rng.integers(0, 1 << 30, (nb, RLE_OUT_BLOCK)).astype(np.int32)
+        bits = ops.bloom_build(
+            np.unique(keys.reshape(-1)[::5]).astype(np.int64), 1 << 15)
+        want = np.asarray(ref.bloom_probe(jnp.asarray(keys), bits))
+        for be in BACKENDS:
+            got = np.asarray(ops.bloom_probe(keys, bits, backend=be))
+            assert np.array_equal(got, want), (be, nb)
+        # no false negatives: every inserted key must probe true
+        member = np.isin(keys, np.unique(keys.reshape(-1)[::5]))
+        assert bool(np.all(want[member]))
+
+
+def test_int_sum_hi_lo_split_exact_at_extremes():
+    """Values pinned at int32 extremes across many full blocks: the
+    per-block (v >> 16, v & 0xFFFF) planes each fit int32, and the int64
+    recombination must equal the exact numpy int64 sum — no overflow, no
+    rounding, under every backend."""
+    rng = np.random.default_rng(14)
+    nb = 8
+    extremes = np.array(
+        [np.iinfo(np.int32).max, np.iinfo(np.int32).min, -1, 0, 1],
+        np.int32)
+    vals = extremes[rng.integers(0, len(extremes), (nb, PACK_BLOCK))]
+    gids = rng.integers(0, 4, (nb, PACK_BLOCK)).astype(np.int32)
+    mask = rng.random((nb, PACK_BLOCK)) < 0.9
+    exact = np.zeros(4, np.int64)
+    for g in range(4):
+        sel = mask & (gids == g)
+        exact[g] = vals.astype(np.int64)[sel].sum()
+    for be in BACKENDS:
+        planes = ops.grouped_agg_batch(vals, gids, mask, 4, backend=be)
+        part = agg.fold_blocks(planes, is_float=False)
+        assert part.s.dtype == np.int64
+        assert np.array_equal(part.s, exact), be
+        assert np.array_equal(
+            part.cnt, np.array([(mask & (gids == g)).sum() for g in range(4)],
+                               np.int64))
+
+
+def test_int_merge_is_order_independent():
+    """Exact int64 sums make merge_partials associative AND commutative —
+    the property the fabric relies on only for ints (floats instead pin a
+    canonical order).  Shuffled merge orders must agree bit-for-bit."""
+    rng = np.random.default_rng(15)
+    parts = []
+    for _ in range(6):
+        vals, gids, mask = _rand_agg_inputs(rng, 4, 8, float_vals=False)
+        planes = ops.grouped_agg_batch(vals, gids, mask, 8, backend="ref")
+        parts.append(agg.fold_blocks(planes, is_float=False))
+    base = agg.merge_partials(parts)
+    for _ in range(4):
+        order = rng.permutation(len(parts))
+        m = agg.merge_partials([parts[i] for i in order])
+        assert np.array_equal(m.cnt, base.cnt)
+        assert np.array_equal(m.s, base.s)
+        assert np.array_equal(m.mn, base.mn)
+        assert np.array_equal(m.mx, base.mx)
+
+
+def test_float_sum_canonical_order_is_deterministic():
+    """Float merges are NOT reassociated — they left-fold in the given
+    order, and the same partition + order must reproduce the bit pattern
+    exactly (while a different order is allowed to differ)."""
+    rng = np.random.default_rng(16)
+    parts = []
+    for _ in range(5):
+        vals, gids, mask = _rand_agg_inputs(rng, 3, 4, float_vals=True)
+        planes = ops.grouped_agg_batch(vals, gids, mask, 4, backend="ref")
+        parts.append(agg.fold_blocks(planes, is_float=True))
+    a = agg.merge_partials(parts)
+    b = agg.merge_partials(parts)
+    assert np.array_equal(a.s, b.s)
+    assert a.s.dtype == np.float64
+
+
+def test_identity_partial_is_merge_noop():
+    rng = np.random.default_rng(17)
+    for float_vals in (False, True):
+        vals, gids, mask = _rand_agg_inputs(rng, 4, 8, float_vals)
+        planes = ops.grouped_agg_batch(vals, gids, mask, 8, backend="ref")
+        p = agg.fold_blocks(planes, float_vals)
+        ident = agg.identity_partial(8, vals.dtype)
+        for m in (agg.merge_partials([ident, p]),
+                  agg.merge_partials([p, ident])):
+            assert np.array_equal(m.cnt, p.cnt)
+            assert np.array_equal(m.s, p.s)
+            assert np.array_equal(m.mn, p.mn)
+            assert np.array_equal(m.mx, p.mx)
+
+
+def test_agg_batch_counts_one_dispatch():
+    """Satellite 6 regression: aggregate launches bill the SAME dispatch
+    counter as decode launches — one per batch call, regardless of
+    blocks, groups, or pad."""
+    rng = np.random.default_rng(18)
+    vals, gids, mask = _rand_agg_inputs(rng, 13, 8, False)
+    packed, fmask = _rand_fused_inputs(rng, 13, 9)
+    ops.reset_dispatch_count()
+    ops.grouped_agg_batch(vals, gids, mask, 8, backend="ref")
+    assert ops.dispatch_count() == 1
+    ops.fused_agg_batch(packed, 9, fmask, backend="ref")
+    assert ops.dispatch_count() == 2
+    keys = rng.integers(0, 1 << 20, (13, PACK_BLOCK)).astype(np.int32)
+    bits = ops.bloom_build(keys.reshape(-1)[:64].astype(np.int64), 1 << 15)
+    ops.bloom_probe(keys, bits, backend="ref")
+    assert ops.dispatch_count() == 3
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (optional dependency — skipped when absent)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st_
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=25)
+    @given(seed=st_.integers(0, 2**32 - 1),
+           nb=st_.sampled_from(LADDER_NS),
+           n_groups=st_.sampled_from((1, 2, 5, 16, ops.MAX_GROUPS)),
+           float_vals=st_.booleans())
+    def test_grouped_agg_parity_hypothesis(seed, nb, n_groups, float_vals):
+        rng = np.random.default_rng(seed)
+        _check_grouped(*_rand_agg_inputs(rng, nb, n_groups, float_vals),
+                       n_groups)
+
+    @settings(deadline=None, max_examples=25)
+    @given(seed=st_.integers(0, 2**32 - 1),
+           nb=st_.sampled_from(LADDER_NS),
+           k=st_.integers(1, 30))
+    def test_fused_agg_parity_hypothesis(seed, nb, k):
+        rng = np.random.default_rng(seed)
+        packed, mask = _rand_fused_inputs(rng, nb, k)
+        _check_fused(packed, mask, k)

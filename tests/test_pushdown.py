@@ -1,0 +1,440 @@
+"""Fused operator pushdown (DESIGN.md §16): bit-identity of pushed-down
+aggregation vs scan-then-aggregate, decode→project result thinning,
+batched bloom semijoin identity, the pre-aggregated offload mode, and
+the footer-histogram selectivity upgrade.
+
+The identity contract swept here: for ANY execution shape — offload mode
+× wfq/fifo × batched/sequential dispatch × 1/2/4-pod fabric — the
+aggregate arrays must equal `agg.aggregate_rows_host` over the same
+row scan, bit-for-bit (array_equal, never allclose), because every path
+partitions accumulation at row-group granularity and folds in global
+row-group order.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Cmp, DatapathEngine, ScanPlan, and_
+from repro.core import agg
+from repro.core import tpch
+from repro.core.engine import group_domain, padded_rows
+from repro.core.plan import AggSpec, BloomProbe, bind_expr
+from repro.core.zonemap import prune_row_groups
+from repro.kernels import ops
+from repro.lakeformat.encodings import PACK_BLOCK
+from repro.lakeformat.reader import LakeReader
+
+
+@pytest.fixture(scope="module")
+def small_tables(tmp_path_factory):
+    d = tmp_path_factory.mktemp("tpch")
+    paths = tpch.write_tables(str(d), sf=0.05, seed=0, row_group_size=8192)
+    data = tpch.gen_tables(0.05, 0)
+    return paths, data
+
+
+def _reader(paths, t="lineitem"):
+    return LakeReader(paths[t])
+
+
+PRED = Cmp("l_shipdate", "between", (365, 729))
+SPECS = (
+    AggSpec("sum", "l_extendedprice"),
+    AggSpec("min", "l_quantity"),
+    AggSpec("max", "l_quantity"),
+    AggSpec("count"),
+)
+
+
+def _expected(reader, plan, blooms=None):
+    """Scan-then-aggregate comparator: row scan through the SAME engine,
+    host aggregation segmented at row-group boundaries."""
+    eng = DatapathEngine(backend="ref")
+    srcs = [s for s in agg.agg_sources(plan.aggregates) if s is not None]
+    cols = list(dict.fromkeys(
+        srcs + ([plan.group_by] if plan.group_by else [])))
+    rows = eng.scan(reader, ScanPlan(plan.table, cols, plan.predicate),
+                    blooms=blooms)
+    rgs = prune_row_groups(reader, bind_expr(plan.predicate, reader))
+    segs = [padded_rows(reader.row_group_meta(rg)["n"]) // PACK_BLOCK
+            for rg in rgs]
+    n_groups = (group_domain(reader, plan.group_by)
+                if plan.group_by else 1)
+    return agg.aggregate_rows_host(
+        {c: np.asarray(rows.columns[c]) for c in cols},
+        np.asarray(rows.mask), plan.aggregates, plan.group_by, n_groups,
+        segments=segs)
+
+
+def _assert_identical(got, want):
+    assert set(got) == set(want)
+    for k in want:
+        assert np.array_equal(np.asarray(got[k]), want[k]), k
+
+
+# ---------------------------------------------------------------------------
+# engine-level identity: grouped / ungrouped × sequential / batched
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("group_by", [None, "l_returnflag"],
+                         ids=["ungrouped", "grouped"])
+@pytest.mark.parametrize("batched", [False, True], ids=["seq", "batched"])
+def test_pushdown_matches_scan_then_aggregate(small_tables, group_by, batched):
+    paths, _ = small_tables
+    r = _reader(paths)
+    plan = ScanPlan("lineitem", [], PRED, aggregates=SPECS, group_by=group_by)
+    want = _expected(r, plan)
+    res = DatapathEngine(backend="ref").scan(r, plan, batched=batched)
+    _assert_identical(res.aggregates, want)
+    assert res.agg_partials is not None
+    # result DMA is the accumulator set, not the rows
+    assert res.stats.result_bytes == sum(
+        int(np.asarray(a).nbytes) for a in res.aggregates.values())
+
+
+def test_pushdown_backend_parity(small_tables):
+    paths, _ = small_tables
+    r = _reader(paths)
+    plan = ScanPlan("lineitem", [], PRED, aggregates=SPECS,
+                    group_by="l_returnflag")
+    want = _expected(r, plan)
+    for be in ("ref", "pallas"):
+        for batched in (False, True):
+            res = DatapathEngine(backend=be).scan(r, plan, batched=batched)
+            _assert_identical(res.aggregates, want)
+
+
+def test_float_sum_bit_identity(small_tables):
+    """f64 canonical-order fold: the float sum must be bit-identical, not
+    merely close, across dispatch shapes."""
+    paths, _ = small_tables
+    r = _reader(paths)
+    plan = ScanPlan("lineitem", [], PRED,
+                    aggregates=(AggSpec("sum", "l_extendedprice"),),
+                    group_by="l_returnflag")
+    want = _expected(r, plan)
+    a = DatapathEngine(backend="ref").scan(r, plan)
+    b = DatapathEngine(backend="ref").scan(r, plan, batched=True)
+    key = "sum(l_extendedprice)"
+    assert np.asarray(a.aggregates[key]).dtype == np.float64
+    assert np.array_equal(np.asarray(a.aggregates[key]), want[key])
+    assert np.array_equal(np.asarray(b.aggregates[key]), want[key])
+
+
+def test_fused_agg_skip_decode(small_tables):
+    """BITPACK value column absent from output/predicate: the fused path
+    must aggregate without a decode launch materializing it — identical
+    result, decode_work carries the page bytes, no 'agg' work entry for
+    the skipped source."""
+    paths, _ = small_tables
+    r = _reader(paths)
+    plan = ScanPlan("lineitem", [], PRED,
+                    aggregates=(AggSpec("sum", "l_quantity"),
+                                AggSpec("count")))
+    want = _expected(r, plan)
+    res = DatapathEngine(backend="ref").scan(r, plan)
+    _assert_identical(res.aggregates, want)
+    assert "agg" not in res.stats.decode_work  # fully fused — no decoded src
+
+
+def test_all_pruned_agg_scan(small_tables):
+    paths, _ = small_tables
+    r = _reader(paths)
+    plan = ScanPlan("lineitem", [], Cmp("l_shipdate", "gt", 10**9),
+                    aggregates=SPECS, group_by="l_returnflag")
+    res = DatapathEngine(backend="ref").scan(r, plan)
+    n = group_domain(r, "l_returnflag")
+    assert int(res.count) == 0
+    assert np.array_equal(np.asarray(res.aggregates["count(*)"]),
+                          np.zeros(n, np.int64))
+    assert np.array_equal(np.asarray(res.aggregates["sum(l_extendedprice)"]),
+                          np.zeros(n, np.float64))
+
+
+def test_over_max_groups_host_fallback(small_tables):
+    """Group domain above the kernels' MAX_GROUPS ceiling: pushdown is
+    declined, rows scan normally, and the host fallback must still produce
+    identical aggregates AND per-rg partials (so fabric merge works)."""
+    paths, _ = small_tables
+    r = _reader(paths)
+    assert group_domain(r, "l_partkey") > ops.MAX_GROUPS
+    plan = ScanPlan("lineitem", [], PRED,
+                    aggregates=(AggSpec("sum", "l_quantity"),
+                                AggSpec("count")),
+                    group_by="l_partkey")
+    want = _expected(r, plan)
+    for batched in (False, True):
+        res = DatapathEngine(backend="ref").scan(r, plan, batched=batched)
+        _assert_identical(res.aggregates, want)
+        assert res.agg_partials is not None
+
+
+# ---------------------------------------------------------------------------
+# decode -> project: predicate-only columns dropped before result DMA
+# ---------------------------------------------------------------------------
+
+def test_project_drops_pred_only_columns(small_tables):
+    paths, data = small_tables
+    r = _reader(paths)
+    li = data["lineitem"]
+    pred = and_(PRED, Cmp("l_quantity", "lt", 25))
+    plan = ScanPlan("lineitem", ["l_extendedprice"], pred)
+    for batched in (False, True):
+        res = DatapathEngine(backend="ref").scan(r, plan, batched=batched)
+        # l_shipdate/l_quantity were decoded for the mask but are NOT in
+        # the result set
+        assert set(res.columns) == {"l_extendedprice"}
+        exp = ((li["l_shipdate"] >= 365) & (li["l_shipdate"] <= 729)
+               & (li["l_quantity"] < 25))
+        assert int(res.count) == exp.sum()
+        assert res.stats.result_bytes == sum(
+            int(np.asarray(a).nbytes) for a in res.columns.values()
+        ) + int(np.asarray(res.mask).nbytes)
+
+
+def test_agg_result_bytes_tiny_vs_row_scan(small_tables):
+    """The headline: grouped-sum pushdown DMAs the accumulator set, a
+    >=5x (here orders-of-magnitude) reduction over shipping the rows."""
+    paths, _ = small_tables
+    r = _reader(paths)
+    aplan = ScanPlan("lineitem", [], PRED,
+                     aggregates=(AggSpec("sum", "l_extendedprice"),
+                                 AggSpec("count")),
+                     group_by="l_returnflag")
+    rplan = ScanPlan("lineitem", ["l_extendedprice", "l_returnflag"], PRED)
+    eng = DatapathEngine(backend="ref")
+    ares = eng.scan(r, aplan, batched=True)
+    rres = eng.scan(r, rplan, batched=True)
+    assert ares.stats.result_bytes * 5 <= rres.stats.result_bytes
+    # and no extra kernel dispatches vs the row scan
+    assert ares.stats.kernel_launches <= rres.stats.kernel_launches + len(
+        agg.agg_sources(aplan.aggregates))
+
+
+# ---------------------------------------------------------------------------
+# batched bloom-probe semijoin
+# ---------------------------------------------------------------------------
+
+def _bloom_fixture(data):
+    okeys = np.unique(data["lineitem"]["l_orderkey"])[::7]
+    bits = ops.bloom_build(np.asarray(okeys, np.int64), 1 << 15)
+    pred = and_(PRED, BloomProbe("l_orderkey", name="ok"))
+    return {"ok": bits}, pred
+
+
+def test_bloom_semijoin_batched_identity(small_tables):
+    paths, data = small_tables
+    r = _reader(paths)
+    blooms, pred = _bloom_fixture(data)
+    eng = DatapathEngine(backend="ref")
+    rplan = ScanPlan("lineitem", ["l_quantity"], pred)
+    seq = eng.scan(r, rplan, blooms=blooms)
+    bat = eng.scan(r, rplan, blooms=blooms, batched=True)
+    assert np.array_equal(np.asarray(seq.mask), np.asarray(bat.mask))
+    assert np.array_equal(np.asarray(seq.columns["l_quantity"]),
+                          np.asarray(bat.columns["l_quantity"]))
+    assert int(seq.count) > 0
+
+
+def test_bloom_semijoin_into_fused_agg(small_tables):
+    paths, data = small_tables
+    r = _reader(paths)
+    blooms, pred = _bloom_fixture(data)
+    plan = ScanPlan("lineitem", [], pred, aggregates=SPECS,
+                    group_by="l_returnflag")
+    want = _expected(r, plan, blooms=blooms)
+    eng = DatapathEngine(backend="ref")
+    for batched in (False, True):
+        res = eng.scan(r, plan, blooms=blooms, batched=batched)
+        _assert_identical(res.aggregates, want)
+
+
+# ---------------------------------------------------------------------------
+# service: offload modes x schedulers x dispatch shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["raw", "preloaded", "prefiltered",
+                                  "pre-aggregated"])
+@pytest.mark.parametrize("scheduler,batch_decode",
+                         [("wfq", True), ("wfq", False), ("fifo", True)])
+def test_service_identity_across_modes(small_tables, mode, scheduler,
+                                       batch_decode):
+    from repro.datapath.policy import StaticPolicy
+    from repro.datapath.service import Pod
+
+    paths, _ = small_tables
+    r = _reader(paths)
+    plan = ScanPlan("lineitem", [], PRED, aggregates=SPECS,
+                    group_by="l_returnflag")
+    want = _expected(r, plan)
+    pod = Pod(policy=StaticPolicy(mode), scheduler=scheduler,
+              batch_decode=batch_decode)
+    t = pod.submit("a", r, plan)
+    pod.drain()
+    _assert_identical(t.result.aggregates, want)
+
+
+def test_pre_aggregated_cache_hit(small_tables):
+    """Third identical submit hits the prefiltered tier: the cached
+    accumulator answer must round-trip bit-identically, flagged as a hit."""
+    from repro.datapath.service import Pod
+
+    paths, _ = small_tables
+    r = _reader(paths)
+    plan = ScanPlan("lineitem", [], PRED, aggregates=SPECS,
+                    group_by="l_returnflag")
+    pod = Pod()
+    tickets = []
+    for _ in range(3):
+        tickets.append(pod.submit("a", r, plan))
+        pod.drain()
+    assert pod.policy.decisions["pre-aggregated"] >= 1
+    assert tickets[2].result.stats.cache_hit
+    _assert_identical(tickets[2].result.aggregates,
+                      {k: np.asarray(v)
+                       for k, v in tickets[0].result.aggregates.items()})
+
+
+# ---------------------------------------------------------------------------
+# fabric: deterministic partial-aggregate merge across pods
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_pods", [1, 2, 4])
+def test_fabric_agg_merge_bit_identical(small_tables, n_pods):
+    from repro.datapath.fabric import ScanFabric
+
+    paths, _ = small_tables
+    r = _reader(paths)
+    plan = ScanPlan("lineitem", [], PRED, aggregates=SPECS,
+                    group_by="l_returnflag")
+    want = _expected(r, plan)
+    res = ScanFabric(n_pods=n_pods).scan(r, plan)
+    _assert_identical(res.aggregates, want)
+    assert int(res.count) == int(np.asarray(want["count(*)"]).sum())
+
+
+def test_fabric_float_sum_order_pinned(small_tables):
+    """The pod partition must NOT change the float-sum bit pattern: merge
+    happens in global row-group order regardless of which pod owned which
+    groups."""
+    from repro.datapath.fabric import ScanFabric
+
+    paths, _ = small_tables
+    r = _reader(paths)
+    plan = ScanPlan("lineitem", [], PRED,
+                    aggregates=(AggSpec("sum", "l_extendedprice"),),
+                    group_by="l_returnflag")
+    key = "sum(l_extendedprice)"
+    base = np.asarray(ScanFabric(n_pods=1).scan(r, plan).aggregates[key])
+    for n in (2, 4):
+        got = np.asarray(ScanFabric(n_pods=n).scan(r, plan).aggregates[key])
+        assert np.array_equal(got, base), n
+
+
+def test_fabric_all_pruned_agg(small_tables):
+    from repro.datapath.fabric import ScanFabric
+
+    paths, _ = small_tables
+    r = _reader(paths)
+    plan = ScanPlan("lineitem", [], Cmp("l_shipdate", "gt", 10**9),
+                    aggregates=(AggSpec("sum", "l_quantity"),
+                                AggSpec("count")))
+    res = ScanFabric(n_pods=2).scan(r, plan)
+    assert int(res.count) == 0
+    assert np.array_equal(np.asarray(res.aggregates["count(*)"]),
+                          np.zeros(1, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# cost model: the estimate prices exactly what the scan books
+# ---------------------------------------------------------------------------
+
+def test_agg_footprint_estimate_matches_actual(small_tables):
+    from repro.datapath.costmodel import CostModel
+
+    paths, _ = small_tables
+    r = _reader(paths)
+    plan = ScanPlan("lineitem", [], PRED, aggregates=SPECS,
+                    group_by="l_returnflag")
+    eng = DatapathEngine(backend="ref")
+    cm = CostModel(backend="ref", launch_overhead_s=5e-6)
+    rgs = prune_row_groups(r, bind_expr(PRED, r))
+    est = sum(c.seconds for c in cm.estimate_row_groups(eng, r, plan, rgs))
+    scan = eng.resumable_scan(r, plan, offload="raw")
+    res = None
+    while res is None:
+        res = scan.advance(scan.pending[:1])
+    st = res.stats
+    actual = sum(cm.decode_seconds(b, e) for e, b in st.decode_work.items()
+                 ) + cm.launch_seconds(st.kernel_launches)
+    assert est == pytest.approx(actual, abs=1e-12)
+    assert "agg" in st.decode_work  # the agg pseudo-work is billed
+
+
+def test_footprint_roles(small_tables):
+    paths, _ = small_tables
+    r = _reader(paths)
+    plan = ScanPlan("lineitem", [], PRED, aggregates=SPECS,
+                    group_by="l_returnflag")
+    eng = DatapathEngine(backend="ref")
+    fp = eng.decode_footprint(r, plan, [0])[0]["columns"]
+    assert fp["l_returnflag"]["role"] == "group-key"
+    assert fp["l_extendedprice"]["role"] == "agg-source"
+    assert fp["l_shipdate"]["role"] == "pred"
+    assert not fp["l_shipdate"]["materialized"]  # fused predicate column
+    aggs = [k for k, v in fp.items() if v["role"] == "agg"]
+    assert aggs and all(not fp[k]["materialized"] for k in aggs)
+
+
+# ---------------------------------------------------------------------------
+# footer histograms: selectivity sees skew, legacy files degrade gracefully
+# ---------------------------------------------------------------------------
+
+def test_histogram_selectivity_beats_uniform(tmp_path):
+    """Clustered column: 99% of values in [0, 10], 1% in [990, 1000].  A
+    predicate over the dense cluster must estimate near its true mass —
+    the uniform-over-range model would say ~1%."""
+    from repro.core.zonemap import estimate_selectivity
+    from repro.lakeformat.schema import ColumnSchema, TableSchema
+    from repro.lakeformat.writer import write_table
+
+    rng = np.random.default_rng(0)
+    n = 16384
+    vals = np.where(rng.random(n) < 0.99,
+                    rng.integers(0, 11, n),
+                    rng.integers(990, 1001, n)).astype(np.int32)
+    schema = TableSchema("t", [ColumnSchema("v", "int32", "plain")])
+    path = write_table(str(tmp_path / "t.lake"), schema, {"v": vals},
+                       row_group_size=8192)
+    r = LakeReader(path)
+    # predicate spanning whole bins: the histogram sees the cluster mass
+    # exactly; uniform-over-range would say ~0.5
+    true_frac = float((vals <= 500).mean())
+    est = estimate_selectivity(r, Cmp("v", "le", 500))
+    uniform = 501.0 / 1001.0
+    assert abs(est - true_frac) < 0.05
+    assert abs(est - true_frac) < abs(uniform - true_frac)
+    # point predicate in the dense cluster: bin-mass based, far above the
+    # uniform 1/(width+1)
+    est_eq = estimate_selectivity(r, Cmp("v", "eq", 5))
+    assert est_eq > 2.0 / 1001.0
+
+
+def test_histogram_absent_falls_back_uniform(small_tables):
+    """Zone maps without 'hist' (legacy files) must estimate exactly the
+    old uniform-over-[min,max] fraction."""
+    from repro.core.zonemap import _range_frac
+
+    zm = {"min": 0, "max": 100}
+    assert _range_frac(zm, 0, 50) == pytest.approx(0.5)
+    assert _range_frac(zm, -10, -1) == 0.0
+    assert _range_frac(dict(zm, hist=[1] * 10), 0, 50) == pytest.approx(
+        0.5, abs=0.06)
+
+
+def test_histogram_written_and_consistent(small_tables):
+    paths, _ = small_tables
+    r = _reader(paths)
+    for zm in r.zonemaps("l_shipdate"):
+        if zm["max"] > zm["min"]:
+            assert sum(zm["hist"]) == zm["count"]
