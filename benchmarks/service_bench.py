@@ -72,11 +72,18 @@ Reported rows:
                            Jain index with the WFQ re-level on vs
                            per-pod local clocks, kill-one-pod
                            drain/replay with bit-identity
+    service.faults.*       storage fault plane: fault-free vs 1%/5%
+                           transient-error A/B (bit-identical results,
+                           bounded p99 inflation, zero hung requests),
+                           hedged-read tail seconds clawed back, and the
+                           breaker-open load-shed rate with every
+                           rejection typed Overloaded
 """
 
 from __future__ import annotations
 
 import os
+import time
 
 from repro.core import BlockCache, DatapathEngine, tpch
 from repro.core.plan import Cmp, ScanPlan
@@ -837,6 +844,161 @@ def run_fabric(sf: float = 0.1) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# faults sub-report: fault-free vs 1%/5% transient-error A/B — correctness
+# (bit-identical, zero hangs), bounded p99 inflation, hedge tail win, shed
+# rate under breaker-open pressure (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+FAULT_MAX_TICKS = 4000  # hang guard for the bench drain loop
+
+
+def _faults_workload(reader):
+    return [ScanPlan("lineitem", ["l_extendedprice", "l_quantity"],
+                     Cmp("l_quantity", "le", 25)),
+            ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+                     Cmp("l_shipdate", "between", (365, 729))),
+            ScanPlan("lineitem", ["l_discount", "l_tax"]),
+            ScanPlan("lineitem", ["l_quantity"],
+                     Cmp("l_quantity", "le", 3))]
+
+
+def _run_faulted(reader, rate: float, seed: int = 0):
+    """One chaos pass: 4 tenants under a transient-error + latency-spike
+    schedule at `rate`, hedged reads on.  Returns results + the metrics
+    the A/B compares.  `hung` counts requests that never reached a
+    terminal state inside the tick guard — the bar is zero."""
+    from repro.datapath import FaultPlan, RetryPolicy
+
+    svc = DatapathService(
+        engine=DatapathEngine(backend="ref", cache=BlockCache(4 << 30)),
+        fault_plan=FaultPlan(seed=seed, transient_rate=rate,
+                             spike_rate=rate, spike_s=2e-3),
+        retry_policy=RetryPolicy(max_attempts=10, hedge_after_s=1e-3),
+    )
+    plans = _faults_workload(reader)
+    t0 = time.perf_counter()
+    tickets = [svc.submit(f"tenant{t}", reader, p)
+               for t, p in enumerate(plans)]
+    for _ in range(FAULT_MAX_TICKS):
+        svc.tick()
+        if not svc.queue:
+            break
+    wall = time.perf_counter() - t0
+    hung = sum(tk.status == "queued" for tk in tickets)
+    results = [svc.result(tk) for tk in tickets if tk.status == "done"]
+    snap = svc.telemetry.snapshot()
+    f = snap["faults"]
+    p99s = [v["p99_s"] for v in snap["tenants"].values()]
+    return {
+        "results": results,
+        "wall_s": wall,
+        "hung": int(hung),
+        "p99_s": max(p99s) if p99s else 0.0,
+        "retries": int(f["transient_errors"]),
+        "retry_successes": int(f["retry_successes"]),
+        "retries_exhausted": int(f["retries_exhausted"]),
+        "hedged": int(f["hedged_fetches"]),
+        "hedge_wins": int(f["hedge_wins"]),
+        "hedge_saved_s": float(f["fault_seconds"].get("hedge_saved", 0.0)),
+        "fault_wait_s": float(
+            sum(f["tenant_fault_seconds"].values())),
+    }
+
+
+def _run_fault_shed(reader) -> dict:
+    """Breaker-open pressure: a permanently failing storage target behind
+    a small queue — the breaker trips, admission degrades, and past the
+    shed threshold rejects with typed Overloaded instead of collapsing."""
+    from repro.datapath import FaultPlan, Overloaded, RetryPolicy
+
+    svc = DatapathService(
+        engine=DatapathEngine(backend="ref", cache=BlockCache(1 << 30)),
+        max_queue_depth=4,
+        fault_plan=FaultPlan(transient_rate=1.0, fail_forever=True),
+        retry_policy=RetryPolicy(max_attempts=5),
+    )
+    plan = _faults_workload(reader)[0]
+    submitted = shed = other_reject = 0
+    for i in range(16):
+        try:
+            svc.submit("t0", reader, plan)
+            submitted += 1
+        except Overloaded:
+            shed += 1
+        except Exception:  # noqa: BLE001 — QueueFull etc., also typed
+            other_reject += 1
+        if i % 4 == 3:
+            svc.tick()
+    for _ in range(FAULT_MAX_TICKS):
+        if not svc.queue:
+            break
+        svc.tick()
+    br = svc.telemetry.snapshot()["faults"]
+    return {
+        "submitted": submitted,
+        "shed": shed,
+        "other_rejected": other_reject,
+        "shed_rate": shed / max(shed + submitted + other_reject, 1),
+        "breaker_trips": int(br["breaker_trips"]),
+        "degraded_admits": int(br["breaker_degraded_admits"]),
+    }
+
+
+def run_faults(sf: float = 0.1) -> dict:
+    reader = fabric_setup(sf)
+    _run_faulted(reader, 0.0)  # warmup: jit compilation out of the A/B
+    base = _run_faulted(reader, 0.0)
+    runs = {"rate1pct": _run_faulted(reader, 0.01),
+            "rate5pct": _run_faulted(reader, 0.05)}
+
+    def _identical(a, b):
+        import numpy as np
+        if len(a) != len(b):
+            return False
+        return all(
+            int(x.count) == int(y.count)
+            and np.array_equal(np.asarray(x.mask), np.asarray(y.mask))
+            and all(np.array_equal(np.asarray(x.columns[c]),
+                                   np.asarray(y.columns[c]))
+                    for c in y.columns)
+            for x, y in zip(a, b))
+
+    row("service.faults.baseline", base["wall_s"],
+        f"p99_ms={base['p99_s'] * 1e3:.3f};hung={base['hung']}")
+    report = {}
+    for name, r in runs.items():
+        identical = _identical(r["results"], base["results"])
+        inflation = r["p99_s"] / max(base["p99_s"], 1e-12)
+        row(f"service.faults.{name}", r["wall_s"],
+            f"p99_ms={r['p99_s'] * 1e3:.3f};p99_inflation={inflation:.2f}x;"
+            f"retries={r['retries']};recovered={r['retry_successes']};"
+            f"exhausted={r['retries_exhausted']};"
+            f"fault_wait_s={r['fault_wait_s']:.6f};"
+            f"identical={identical};hung={r['hung']}")
+        report[name] = {k: v for k, v in r.items() if k != "results"}
+        report[name]["identical"] = identical
+        report[name]["p99_inflation"] = inflation
+
+    hedge = runs["rate5pct"]
+    row("service.faults.hedge", 0.0,
+        f"hedged={hedge['hedged']};wins={hedge['hedge_wins']};"
+        f"tail_saved_s={hedge['hedge_saved_s']:.6f}")
+
+    shed = _run_fault_shed(reader)
+    row("service.faults.shed", 0.0,
+        f"submitted={shed['submitted']};shed={shed['shed']};"
+        f"shed_rate={shed['shed_rate']:.2f};trips={shed['breaker_trips']};"
+        f"typed=Overloaded")
+
+    report["baseline"] = {k: v for k, v in base.items() if k != "results"}
+    report["hedge"] = {"hedged": hedge["hedged"],
+                       "wins": hedge["hedge_wins"],
+                       "tail_saved_s": hedge["hedge_saved_s"]}
+    report["shed"] = shed
+    return report
+
+
 def run_pushdown(sf: float = 0.1) -> dict:
     """Fused operator pushdown (DESIGN.md §16) vs scan-then-aggregate on
     a grouped revenue sum: the fused path DMAs only the (n_groups,)
@@ -987,9 +1149,11 @@ def run(sf: float = 0.1, n_tenants: int = 6) -> dict:
     tracing = run_trace(sf)
     kernels = run_kernel_roofline()
     fabric = run_fabric(sf)
+    faults = run_faults(sf)
 
     return {
         "fabric": fabric,
+        "faults": faults,
         "pushdown": pushdown,
         "fairness": fairness,
         "costmodel": costmodel,

@@ -17,6 +17,39 @@ TIER1_RATCHET=1 python scripts/check_tier1.py
 # slow or unavailable, so this step can degrade but not fail CI.
 python -c "from repro.datapath.costmodel import main; import sys; sys.exit(main(['--n', '65536', '--repeats', '1', '--out', 'calibration_ci.json']))"
 
+# seeded chaos smoke: one fixed-seed pass of the storage fault plane —
+# recoverable transient/corrupt/spike schedule over a 2-pod fabric must
+# complete bit-identically with zero exhausted retries (the full
+# property sweep lives in tests/test_chaos_props.py; this is the
+# always-on canary with a pinned seed)
+python - <<'PY'
+from tests.test_chaos_props import (
+    PLANS, POLICY, RECOVERABLE, _assert_identical, _direct, _tables)
+from repro.datapath import ScanFabric
+
+readers = _tables()
+fab = ScanFabric(n_pods=2, tick_bytes=1 << 14,
+                 fault_plan=RECOVERABLE, retry_policy=POLICY)
+tickets = [(i, fab.submit(f"t{i}", readers[p.table], p))
+           for i, p in enumerate(PLANS)]
+for _ in range(2000):
+    fab.tick()
+    if not fab.active:
+        break
+assert not fab.active, "chaos smoke: fabric did not drain (hang)"
+for i, t in tickets:
+    assert t.status == "done", (i, t.error)
+    _assert_identical(t.result, _direct(i))
+for pid in fab.live_pods:
+    f = fab.pods[pid].telemetry.snapshot()["faults"]
+    assert f["retries_exhausted"] == 0, (pid, f)
+    print(f"ci.chaos.{pid},0,transients={int(f['transient_errors'])};"
+          f"corrupt={int(f['corrupt_detected'])};"
+          f"recovered={int(f['retry_successes'])};identical=True")
+print(f"ci.chaos.fleet,0,breaker_drains={fab.report()['breaker_drains']};"
+      f"live={len(fab.live_pods)}/2;identical=True")
+PY
+
 # service benchmark — includes the `fairness` sub-report (FIFO vs WFQ under
 # 1-elephant/3-mice, hold-window savings), the `costmodel` sub-report
 # (calibrated rates + 4x-under-estimator reconciliation A/B), the
@@ -33,7 +66,10 @@ python -c "from repro.datapath.costmodel import main; import sys; sys.exit(main(
 # bytes), and the `fabric` sub-report (pod-sharded fleet: aggregate
 # simulated throughput at 1/2/4 pods, scale-out peer-fetch vs storage
 # bytes, fleet Jain fairness with the WFQ re-level on/off, kill-one-pod
-# drain/replay bit-identity) — appended to the perf trajectory
+# drain/replay bit-identity), and the `faults` sub-report
+# (`service.faults.*`: fault-free vs 1%/5% transient-error A/B with
+# bit-identical results and bounded p99 inflation, hedge tail win,
+# breaker-open shed rate) — appended to the perf trajectory
 python -m benchmarks.run --fast --only service --json BENCH_point.json
 python scripts/append_bench_point.py BENCH_point.json BENCH_service.json
 rm -f BENCH_point.json

@@ -70,6 +70,7 @@ from repro.lakeformat.encodings import (
     decode_column_host,
     padded_rows,
 )
+from repro.lakeformat.integrity import CorruptPageError, page_checksum
 
 # Flight-recorder hook: the repro.datapath.trace MODULE, installed by the
 # datapath scheduler at its import time (engine cannot import datapath —
@@ -130,6 +131,19 @@ class ScanStats:
     # stats object down to the PeerFetcher).  Priced per slice over the
     # inter-pod link at WFQ reconcile; always 0 on single-node services.
     peer_bytes: int = 0
+    # Fault plane (datapath/faults.py).  `fault_wait_s` is MODELED extra
+    # seconds the storage hop cost this scan beyond clean transfers —
+    # failed attempts, retry backoff, latency spikes survived, hedge
+    # exposure — billed into WFQ vtime at slice reconcile so a faulty
+    # tenant's retries charge that tenant, not the fleet.  The counters
+    # mirror telemetry but per-scan, and _merge_stats sums them across
+    # fabric sub-scans like every other numeric field.
+    retry_fetches: int = 0     # fetch attempts that failed and were retried
+    fetch_timeouts: int = 0    # attempts abandoned at the policy timeout
+    hedged_fetches: int = 0    # attempts that launched a hedged second read
+    hedge_wins: int = 0        # hedges that beat the straggling primary
+    corrupt_pages: int = 0     # checksum-detected pages (quarantined)
+    fault_wait_s: float = 0.0  # modeled seconds of fault-plane delay
 
 
 @dataclasses.dataclass
@@ -198,6 +212,11 @@ class DatapathEngine:
         self.backend = backend
         self.offload = offload
         self.cache = cache if cache is not None else BlockCache()
+        # Storage fault plane (datapath/faults.FaultInjector), installed by
+        # the service like the TRACE hook — duck-typed because core cannot
+        # import datapath.  None = clean reads, still checksum-verified.
+        self.faults = None
+        self.verify_checksums = True
 
     # ------------------------------------------------------------------
     # decode
@@ -444,6 +463,37 @@ class DatapathEngine:
                 lo, hi = 1, 0  # empty range, still valid
         return lo, hi
 
+    def _storage_read(self, reader, rg: int, columns,
+                      stats: ScanStats) -> Dict[str, EncodedColumn]:
+        """The ONLY path encoded pages take from storage into the engine —
+        both fetch seams (`_prepare_row_group`, `_serve_resident`) route
+        here.  With a fault injector installed (datapath/faults.py, set on
+        `self.faults` by the service) the read runs the full retry /
+        verify / quarantine / hedge loop.  Without one, pages are STILL
+        checksum-verified against the footer before they can reach a
+        decode kernel; a mismatch quarantines the page key in the block
+        store and raises typed — never returns garbage.  Legacy footers
+        without checksums verify trivially (unverified fallback)."""
+        if self.faults is not None:
+            return self.faults.read(self, reader, rg, columns, stats)
+        got = reader.read_encoded(rg, columns)
+        if self.verify_checksums:
+            meta = getattr(reader, "page_checksum_meta", None)
+            if meta is not None:
+                for name, col in got.items():
+                    expect = meta(rg, name)
+                    if expect is not None and page_checksum(col) != expect:
+                        stats.corrupt_pages += 1
+                        store = getattr(self.cache, "store", None)
+                        if store is not None and hasattr(store, "quarantine"):
+                            store.quarantine(
+                                self.page_cache_key(reader, rg, name))
+                        raise CorruptPageError(
+                            f"{reader.path} rg={rg} column={name}: page "
+                            "failed checksum verification",
+                            table=reader.path, rg=rg, column=name)
+        return got
+
     def _prepare_row_group(self, reader, rg: int, plan: ScanPlan,
                            pred: Optional[Expr], mode: str, stats: ScanStats,
                            pool: Optional[Dict] = None):
@@ -493,7 +543,7 @@ class DatapathEngine:
             tr = _tr()
             if tr is not None:
                 tr.begin("fetch", rg=rg, columns=len(missing))
-            got = reader.read_encoded(rg, missing)
+            got = self._storage_read(reader, rg, missing, stats)
             nb = sum(c.encoded_bytes() for c in got.values())
             if tr is not None:
                 tr.end(name="fetch", nbytes=nb)
@@ -1032,7 +1082,7 @@ class DatapathEngine:
                 tr = _tr()
                 if tr is not None:
                     tr.begin("fetch", rg=rg, columns=1)
-                col = reader.read_encoded(rg, [name])[name]
+                col = self._storage_read(reader, rg, [name], stats)[name]
                 if tr is not None:
                     tr.end(name="fetch", nbytes=col.encoded_bytes())
                 stats.encoded_bytes += col.encoded_bytes()

@@ -35,6 +35,12 @@ trace.py      flight recorder: per-request span trees (admission / waits
               / slices / fetch / decode / filter / reconcile), bounded
               ring of completed traces, Chrome-trace export, and the
               paper-anchored decode/filter/rest stage attribution
+faults.py     storage fault plane: seedable deterministic fault schedules
+              (FaultPlan), bounded retry/backoff/timeout/hedge policy
+              (RetryPolicy + FaultInjector on the engine's storage-read
+              seam), per-target circuit breaker with degraded mode and
+              typed Overloaded load-shed — every extra modeled second
+              reconciled into WFQ virtual time
 
 See DESIGN.md §8–§9 and §11.  The synchronous per-caller path
 (core/engine.py) remains the substrate; the service schedules it — at
@@ -69,6 +75,18 @@ from repro.datapath.policy import (  # noqa: F401
     coalesce_compatible,
 )
 from repro.datapath.fabric import FabricTicket, ScanFabric  # noqa: F401
+from repro.datapath.faults import (  # noqa: F401
+    CircuitBreaker,
+    FaultInjector,
+    FaultPlan,
+    FetchFailed,
+    FetchTimeout,
+    Overloaded,
+    Quarantined,
+    RetryPolicy,
+    StorageFault,
+    TransientFetchError,
+)
 from repro.datapath.scheduler import form_batch, run_tick  # noqa: F401
 from repro.datapath.service import (  # noqa: F401
     DatapathService,

@@ -161,6 +161,22 @@ class BlockStore:
         self.peer_hit_seconds = 0.0
         self.peer_serves = 0
         self.peer_serve_bytes = 0
+        # a sibling probe that raised (pod died between the liveness check
+        # and the fetch) — counted here, then the fetch falls back to the
+        # next peer / storage instead of propagating (DESIGN.md §17)
+        self.peer_errors = 0
+        # Fault plane: keys whose fetched bytes failed checksum
+        # verification.  A quarantined key reads as a miss everywhere
+        # (local get/peek, peer fetch, residency probes — the entry is
+        # dropped) until a verified re-fetch puts it back, which clears
+        # the mark.  The set holds keys currently poisoned; the counter
+        # is cumulative.
+        self._quarantined: set = set()
+        self.quarantines = 0
+        # Pod-death model for the fabric: a dead store refuses probes by
+        # raising — this is what a peer fetch against a crashed sibling
+        # actually sees, and what PeerFetcher must absorb.
+        self.dead = False
 
     # ------------------------------------------------------------------
     # pricing
@@ -189,7 +205,25 @@ class BlockStore:
     # ------------------------------------------------------------------
     def peek(self, key: Hashable) -> Optional[BlockEntry]:
         """Entry lookup without touching LRU order or hit/miss counters."""
+        if self.dead:
+            raise ConnectionError("block store is dead (pod crashed)")
         return self._entries.get(key)
+
+    def quarantine(self, key: Hashable) -> None:
+        """Poison `key` after a checksum failure: drop any resident copy
+        and make the key read as a miss until a verified re-fetch puts a
+        clean value back (put() clears the mark).  A quarantined page can
+        therefore NEVER be decoded — the engine is forced back to
+        storage, and the fault plane retries from there."""
+        e = self._entries.pop(key, None)
+        if e is not None:
+            self.used -= e.nbytes
+            self._pinned_keys.discard(key)
+            self._tier_stats[e.tier].evictions += 1
+        self._quarantined.add(key)
+        self.quarantines += 1
+        if trace._CUR is not None:
+            trace.event("quarantine", nbytes=e.nbytes if e else 0)
 
     def __contains__(self, key: Hashable) -> bool:
         return key in self._entries
@@ -244,6 +278,8 @@ class BlockStore:
         rejected resize leaves the old entry — the ledger never holds an
         unbilled or over-budget byte."""
         assert tier in TIERS, tier
+        # a fresh put IS the verified re-fetch that absolves a poisoned key
+        self._quarantined.discard(key)
         nb = _nbytes(value)
         st = self._tier_stats[tier]
         old = self._entries.get(key)
@@ -508,6 +544,9 @@ class BlockStore:
             "peer_hit_seconds": self.peer_hit_seconds,
             "peer_serves": self.peer_serves,
             "peer_serve_bytes": self.peer_serve_bytes,
+            "peer_errors": self.peer_errors,
+            "quarantines": self.quarantines,
+            "quarantined_live": len(self._quarantined),
         }
 
 
@@ -554,10 +593,26 @@ class PeerFetcher:
         kind = key[0] if isinstance(key, tuple) and key else None
         if kind not in self.PEER_KINDS:
             return None
-        for pid, store in self.peers():
+        try:
+            peers = list(self.peers())
+        except Exception:
+            # the membership callback itself failed — treat as no peers
+            into.peer_errors += 1
+            return None
+        for pid, store in peers:
             if store is into:
                 continue
-            e = store.peek(key)
+            try:
+                e = store.peek(key)
+            except Exception:
+                # The sibling died between the fabric's liveness check and
+                # this probe.  A cache miss must degrade to the next peer
+                # (and ultimately storage), never propagate out of the
+                # miss path — the requesting scan did nothing wrong.
+                into.peer_errors += 1
+                if trace._CUR is not None:
+                    trace.event("peer_error", source=pid)
+                continue
             if e is None or e.tier == "prefiltered" or e.ephemeral:
                 # ephemeral = a raw scan's window-pinned decode; raw mode
                 # leaves no persistent state, and peering must not turn

@@ -233,11 +233,18 @@ class CostModel:
         launch_overhead_s: float = NOMINAL_LAUNCH_OVERHEAD_S,
         interpod_bandwidth_gbps: float = INTERPOD_BANDWIDTH_GBPS,
         interpod_latency_us: float = INTERPOD_LATENCY_US,
+        link_source: str = "nominal",
     ):
         self.rates = dict(NOMINAL_RATES_GBPS)
         if rates:
             self.rates.update({k: float(v) for k, v in rates.items() if v and v > 0})
         self.source = source
+        # link provenance is tracked SEPARATELY from the kernel-rate source:
+        # calibrate() measures decode kernels but nothing today measures the
+        # storage link, so link_source stays 'nominal' until a real fabric
+        # calibration exists — telemetry surfaces this as a one-time warning
+        # instead of silently pricing fetches with guessed constants
+        self.link_source = link_source
         self.backend = backend or active_backend()
         self.link_bandwidth_gbps = link_bandwidth_gbps
         self.link_latency_us = link_latency_us
@@ -336,6 +343,7 @@ class CostModel:
         return {
             "rates_gbps": {k: self.rates[k] for k in sorted(self.rates)},
             "source": self.source,
+            "link_source": self.link_source,
             "backend": self.backend,
             "link_bandwidth_gbps": self.link_bandwidth_gbps,
             "link_latency_us": self.link_latency_us,
@@ -370,6 +378,7 @@ class CostModel:
         return cls(
             rates=d.get("rates_gbps"),
             source=d.get("source", "calibrated"),
+            link_source=d.get("link_source", "nominal"),
             backend=d.get("backend", "ref"),
             link_bandwidth_gbps=d.get("link_bandwidth_gbps", 12.5),
             link_latency_us=d.get("link_latency_us", 10.0),

@@ -54,6 +54,7 @@ from repro.core.zonemap import prune_and_estimate
 from repro.datapath.blockstore import PeerFetcher
 from repro.datapath.catalog import Catalog, Snapshot
 from repro.datapath.costmodel import CostModel
+from repro.datapath.faults import StorageFault
 from repro.datapath.service import Pod, TenantQuota
 from repro.distributed.fault_tolerance import (
     HeartbeatMonitor,
@@ -147,6 +148,9 @@ class ScanFabric:
         self._ids = 0
         self.active: List[FabricTicket] = []
         self.drains: List[object] = []  # PodDrainPlans, newest last
+        # pods evicted because their storage circuit breaker tripped open
+        # (fault plane, DESIGN.md §17) — same drain path as heartbeat death
+        self.breaker_drains = 0
         # per-(pod, tenant) occupancy watermark for the fairness re-level
         self._occ_seen: Dict[Tuple[str, str], float] = {}
 
@@ -189,7 +193,13 @@ class ScanFabric:
         return pid
 
     def _peers(self) -> List[Tuple[str, object]]:
-        return [(pid, self.pods[pid].store) for pid in self._live]
+        # A silently-crashed pod is still in _live until its heartbeat
+        # times out, but its store must NOT serve peer fetches during
+        # that window — it is dead, the fabric just doesn't know yet.
+        # (PeerFetcher additionally absorbs a store that dies between
+        # this listing and the peek itself.)
+        return [(pid, self.pods[pid].store) for pid in self._live
+                if pid not in self._silent]
 
     @property
     def live_pods(self) -> List[str]:
@@ -281,6 +291,19 @@ class ScanFabric:
         for pid in self.monitor.dead_hosts():
             if pid in self._live:
                 self._drain_pod(pid)
+        # A pod whose storage fetches tripped its circuit breaker open is
+        # treated exactly like a heartbeat-silent pod: drain it and replay
+        # its uncollected sub-scans bit-identically on survivors, whose
+        # own breakers (separate storage paths) are presumed healthy.
+        # Never drain the last pod — a one-pod fleet degrades in place.
+        if len(self._live) > 1:
+            for pid in list(self._live):
+                if pid in self._silent or len(self._live) <= 1:
+                    continue
+                br = getattr(self.pods[pid], "breaker", None)
+                if br is not None and br.any_open():
+                    self.breaker_drains += 1
+                    self._drain_pod(pid)
         if self.reconcile_fairness:
             self._rebalance_vtime()
         for pid in list(self._live):
@@ -301,6 +324,20 @@ class ScanFabric:
             for pid, sub in list(t.subs.items()):
                 tk = sub.ticket
                 if tk.status == "error":
+                    # A storage-hop failure on a pod whose circuit breaker
+                    # is OPEN is the pod's problem, not the scan's: drain
+                    # it like a heartbeat-silent pod, which pops this sub
+                    # (and every other uncollected sub it held) and
+                    # replays them bit-identically on survivors.  With no
+                    # survivors the typed error propagates.
+                    br = getattr(self.pods[sub.pod_id], "breaker", None)
+                    if (isinstance(tk.error, StorageFault)
+                            and sub.pod_id in self._live
+                            and len(self._live) > 1
+                            and br is not None and br.any_open()):
+                        self.breaker_drains += 1
+                        self._drain_pod(sub.pod_id)
+                        break  # subs changed; re-examine next tick
                     t.error = tk.error
                     t.status = "error"
                     self.catalog.release(t.snapshot)
@@ -433,8 +470,17 @@ class ScanFabric:
         assert pod_id in self._live, pod_id
         if silent:
             self._silent.add(pod_id)
+            # the crashed pod's store now refuses probes by raising —
+            # exactly what a sibling's peer fetch racing the crash sees
+            self.pods[pod_id].store.dead = True
         else:
             self._drain_pod(pod_id)
+
+    def inject_faults(self, pod_id: str, plan, policy=None) -> None:
+        """Install a fault plan on ONE pod's storage path (the other pods
+        keep clean reads) — the per-pod chaos knob the breaker-drain and
+        straggler tests drive."""
+        self.pods[pod_id].install_faults(plan, policy)
 
     def _drain_pod(self, dead: str) -> None:
         """Remove `dead` from the fleet and replay its uncollected work.
@@ -544,6 +590,7 @@ class ScanFabric:
                  "reassigned": len(p.reassigned), "replayed": len(p.replay)}
                 for p in self.drains
             ],
+            "breaker_drains": self.breaker_drains,
             "pods": pods,
             "peer": peer,
             "stragglers": self.stragglers.report(),

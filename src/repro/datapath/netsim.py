@@ -124,14 +124,20 @@ class SliceClock:
         self.serial_s = 0.0
         self.slices = 0
 
-    def feed(self, nbytes: int, decode_seconds: float) -> Dict[str, float]:
+    def feed(self, nbytes: int, decode_seconds: float,
+             extra_fetch_s: float = 0.0) -> Dict[str, float]:
         """Advance the clock by one slice; returns that slice's fetch
         anatomy so the flight recorder can show hidden-vs-exposed fetch
         time PER SLICE: `exposed_s` is how long the decoder actually
         stalled waiting for this slice's fetch to land (including link
         backlog), `hidden_s` the part of the transfer that overlapped
-        earlier decode work."""
+        earlier decode work.  `extra_fetch_s` is fault-plane time the
+        slice's fetch additionally occupied the link with (retries,
+        backoff, latency spikes, hedge exposure — ScanStats.fault_wait_s
+        deltas from datapath/faults.py), so chaos runs show their tail in
+        the same anatomy."""
         fetch_s = self.link.fetch_seconds(nbytes) if nbytes > 0 else 0.0
+        fetch_s += max(0.0, float(extra_fetch_s))
         fetch_done = self.link_free + fetch_s
         start = max(fetch_done, self.device_free)
         exposed = max(0.0, fetch_done - self.device_free)

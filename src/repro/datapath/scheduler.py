@@ -307,7 +307,8 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
         if len(group) > 1:
             tel.inc("coalesced_groups")
             tel.inc("coalesced_requests", len(group))
-        fetches: List[Tuple[object, List[int], int]] = []
+        # (req, fetched rgs, launch delta, fault-plane seconds delta)
+        fetches: List[Tuple[object, List[int], int, float]] = []
         if service.batch_decode and len(group) > 1:
             # cross-request bucket stacking: every coalesced request's
             # pages decode through ONE bucket pass (engine.
@@ -330,12 +331,9 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
             try:
                 try:
                     if req.rs is None:  # first dispatch: pin the offload mode
-                        mode = service.policy.choose(
-                            service.engine, req.reader, req.plan, req.blooms,
-                            row_groups=req.row_groups,
-                            selectivity=req.est_rows / max(req.reader.n_rows, 1),
-                            scan_tag=req.scan_tag,
-                        )
+                        # service._choose_mode wraps the adaptive policy
+                        # with the circuit breaker's degraded-raw override
+                        mode = service._choose_mode(req)
                         tel.inc(f"offload_{mode}")
                         req.mode = mode
                         req.rs = ResumableScan(
@@ -347,6 +345,7 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
                     work0 = dict(rs.stats.decode_work)
                     launches0 = rs.stats.kernel_launches
                     peer0 = rs.stats.peer_bytes
+                    fault0 = rs.stats.fault_wait_s
                     if rs.result is None and rgs:
                         dec0 = rs.stats.decoded_bytes
                         fetched: List[int] = []
@@ -374,7 +373,9 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
                         tel.observe_tenant_bytes(req.tenant, rs.stats.decoded_bytes - dec0)
                         if fetched:
                             fetches.append(
-                                (req, fetched, rs.stats.kernel_launches - launches0))
+                                (req, fetched,
+                                 rs.stats.kernel_launches - launches0,
+                                 rs.stats.fault_wait_s - fault0))
                     if rgs:
                         # retroactive honesty: the estimate was charged at
                         # dispatch; re-bill by the decode work the slice REALLY
@@ -396,7 +397,8 @@ def run_tick(service, batch: List[Tuple[object, List[int]]]) -> None:
                             tracer.begin(rt, "reconcile")
                         actual_s = _reconcile_slice(
                             service, req, work, launches,
-                            peer_bytes=rs.stats.peer_bytes - peer0)
+                            peer_bytes=rs.stats.peer_bytes - peer0,
+                            fault_s=rs.stats.fault_wait_s - fault0)
                         if rt is not None:
                             tracer.end(rt, name="reconcile",
                                        launches=launches, actual_s=actual_s)
@@ -454,7 +456,7 @@ def _run_group_stacked(service, group, pool, fetches) -> None:
     engine = service.engine
 
     # -- per request: open the slice span, pin mode, create the scan ----
-    live = []  # (req, rgs, rt, work0, launches0, dec0, peer0)
+    live = []  # (req, rgs, rt, work0, launches0, dec0, peer0, fault0)
     items: List[dict] = []
     item_of: Dict[int, int] = {}  # req_id -> index into the group output
     for req, rgs in group:
@@ -467,12 +469,7 @@ def _run_group_stacked(service, group, pool, fetches) -> None:
             trace.set_slice(tracer, rt)
         try:
             if req.rs is None:  # first dispatch: pin the offload mode
-                mode = service.policy.choose(
-                    engine, req.reader, req.plan, req.blooms,
-                    row_groups=req.row_groups,
-                    selectivity=req.est_rows / max(req.reader.n_rows, 1),
-                    scan_tag=req.scan_tag,
-                )
+                mode = service._choose_mode(req)
                 tel.inc(f"offload_{mode}")
                 req.mode = mode
                 req.rs = ResumableScan(
@@ -493,7 +490,7 @@ def _run_group_stacked(service, group, pool, fetches) -> None:
         rs = req.rs
         live.append((req, rgs, rt, dict(rs.stats.decode_work),
                      rs.stats.kernel_launches, rs.stats.decoded_bytes,
-                     rs.stats.peer_bytes))
+                     rs.stats.peer_bytes, rs.stats.fault_wait_s))
         if rs.result is None and rgs:
             item_of[req.req_id] = len(items)
             items.append({
@@ -515,7 +512,7 @@ def _run_group_stacked(service, group, pool, fetches) -> None:
             tel.inc("xreq_fallback")
 
     # -- finalize per request, in dispatch order ------------------------
-    for req, rgs, rt, work0, launches0, dec0, peer0 in live:
+    for req, rgs, rt, work0, launches0, dec0, peer0, fault0 in live:
         pool.owner = req.tenant
         rs = req.rs
         if rt is not None:
@@ -536,7 +533,8 @@ def _run_group_stacked(service, group, pool, fetches) -> None:
                     if fetched:
                         fetches.append(
                             (req, fetched,
-                             rs.stats.kernel_launches - launches0))
+                             rs.stats.kernel_launches - launches0,
+                             rs.stats.fault_wait_s - fault0))
                 if rgs:
                     work = {
                         e: b - work0.get(e, 0)
@@ -550,7 +548,8 @@ def _run_group_stacked(service, group, pool, fetches) -> None:
                         tracer.begin(rt, "reconcile")
                     actual_s = _reconcile_slice(
                         service, req, work, launches,
-                        peer_bytes=rs.stats.peer_bytes - peer0)
+                        peer_bytes=rs.stats.peer_bytes - peer0,
+                        fault_s=rs.stats.fault_wait_s - fault0)
                     if rt is not None:
                         tracer.end(rt, name="reconcile",
                                    launches=launches, actual_s=actual_s)
@@ -574,7 +573,7 @@ def _run_group_stacked(service, group, pool, fetches) -> None:
 
 
 def _reconcile_slice(service, req, work: Dict[str, int], launches: int = 0,
-                     peer_bytes: int = 0) -> float:
+                     peer_bytes: int = 0, fault_s: float = 0.0) -> float:
     """Close the loop on one completed slice: compare the decode-seconds
     charged at dispatch against the slice's actual cost and re-bill the
     tenant's virtual time (service._vreconcile).
@@ -592,7 +591,15 @@ def _reconcile_slice(service, req, work: Dict[str, int], launches: int = 0,
     `peer_bytes` is what this slice pulled over the inter-pod hop (fabric
     peer block-store fetches): the transfer is billed to the tenant whose
     miss triggered it at the calibrated inter-pod link rate — cheaper
-    than the storage hop, but never free."""
+    than the storage hop, but never free.
+
+    `fault_s` is the slice's fault-plane time (ScanStats.fault_wait_s
+    delta: retry backoff, failed attempts, latency spikes, hedge
+    exposure — datapath/faults.py).  It is billed into the SAME actual
+    so a faulty tenant's retries advance that tenant's virtual time —
+    recovery work can never buy share from healthy tenants — and the
+    sched + recon == actual telemetry invariant keeps holding under
+    chaos."""
     charged_s, raw_s = req.charged_s, req.charged_raw_s
     req.charged_s = req.charged_raw_s = 0.0
     actual_s = sum(
@@ -603,12 +610,15 @@ def _reconcile_slice(service, req, work: Dict[str, int], launches: int = 0,
         peer_s = service.cost_model.peer_fetch_seconds(peer_bytes)
         actual_s += peer_s
         service.telemetry.observe_peer(req.tenant, peer_bytes, peer_s)
+    if fault_s:
+        actual_s += fault_s
+        service.telemetry.observe_fault_wait(req.tenant, fault_s)
     service._vreconcile(req.tenant, charged_s, raw_s, actual_s,
                         table=req.reader.path)
     return actual_s
 
 
-def _simulate_fetch(service, fetches: List[Tuple[object, List[int], int]]) -> None:
+def _simulate_fetch(service, fetches) -> None:
     """Model the tick's storage->NIC transfer for the row groups actually
     read this tick (cache-hit / pool-fed / failed slices fetch nothing),
     double-buffered against on-device decode.
@@ -644,7 +654,7 @@ def _simulate_fetch(service, fetches: List[Tuple[object, List[int], int]]) -> No
     if service.batch_decode:
         # one pipeline unit per slice; dedupe (rg, column) across slices
         seen: Dict[Tuple[int, str], dict] = {}
-        for req, rgs, launches in fetches:
+        for req, rgs, launches, _fault_s in fetches:
             enc_b = dec_b = 0
             dec_t = 0.0
             for fp in service.engine.decode_footprint(req.reader, req.plan,
@@ -670,8 +680,11 @@ def _simulate_fetch(service, fetches: List[Tuple[object, List[int], int]]) -> No
             # notwithstanding (counters are set, not incremented — the
             # clock already accumulates)
             tracer = service.tracer
-            for (req, frgs, _l), enc_b, dec_t in zip(fetches, enc, dec_s):
-                info = clock.feed(enc_b, dec_t)
+            for (req, frgs, _l, fault_s), enc_b, dec_t in zip(fetches, enc,
+                                                              dec_s):
+                # fault-plane seconds ride the slice's fetch leg so chaos
+                # tails show up in the same hidden-vs-exposed anatomy
+                info = clock.feed(enc_b, dec_t, extra_fetch_s=fault_s)
                 # flight recorder: per-slice hidden-vs-exposed fetch time
                 # from the streaming pipeline clock
                 rt = tracer.live(req.req_id) if tracer is not None else None
@@ -695,7 +708,7 @@ def _simulate_fetch(service, fetches: List[Tuple[object, List[int], int]]) -> No
         # Each request's columns are priced with its OWN reader's metadata;
         # on overlap the first contributor wins (materialization is an OR).
         per_rg: Dict[int, Dict[str, dict]] = {}
-        for req, rgs, _launches in fetches:
+        for req, rgs, _launches, _fault_s in fetches:
             for fp in service.engine.decode_footprint(req.reader, req.plan,
                                                       rgs, pred=req.pred):
                 cols = per_rg.setdefault(fp["rg"], {})
@@ -727,7 +740,7 @@ def _simulate_fetch(service, fetches: List[Tuple[object, List[int], int]]) -> No
         # sequential dispatch pipelines at row-group granularity merged
         # across requests, so per-request anatomy does not exist — attach
         # the tick-level overlap summary to each participating request
-        for req, frgs, _l in fetches:
+        for req, frgs, _l, _fs in fetches:
             rt = tracer.live(req.req_id)
             if rt is not None:
                 tracer.event(rt, "sim_fetch", rgs=len(frgs),

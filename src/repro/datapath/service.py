@@ -52,6 +52,13 @@ from repro.core.plan import ScanPlan, bind_expr
 from repro.core.zonemap import prune_and_estimate
 from repro.datapath.blockstore import BlockStore
 from repro.datapath.costmodel import CostModel
+from repro.datapath.faults import (
+    CircuitBreaker,
+    FaultInjector,
+    FaultPlan,
+    Overloaded,
+    RetryPolicy,
+)
 from repro.datapath.netsim import PrefetchPipeline, SliceClock
 from repro.datapath.policy import AdaptiveOffloadPolicy
 from repro.datapath.scheduler import form_batch, run_tick
@@ -177,6 +184,15 @@ class Pod:
         trace_sample_rate: float = 1.0,
         trace_capacity: int = 64,
         tracer: Optional[Tracer] = None,
+        # storage fault plane (datapath/faults.py, DESIGN.md §17): a
+        # FaultPlan installs the deterministic injector on the engine's
+        # storage-read seam; a RetryPolicy alone still installs it (clean
+        # plan) so retries/timeouts/hedging and checksum verification run
+        # against real storage faults too.  The breaker defaults on
+        # whenever the injector is installed.
+        fault_plan: Optional[FaultPlan] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        breaker: Optional[CircuitBreaker] = None,
         pod_id: str = "pod0",
     ):
         assert scheduler in ("wfq", "fifo"), scheduler
@@ -247,11 +263,60 @@ class Pod:
         self._recur_gaps: collections.deque = collections.deque(maxlen=32)
         self._ids = itertools.count()
         self._tick = 0
+        # -- storage fault plane -------------------------------------------
+        self.breaker = breaker
+        self.retry_policy = retry_policy
+        self.faults: Optional[FaultInjector] = None
+        if fault_plan is not None or retry_policy is not None:
+            self.install_faults(fault_plan or FaultPlan(), retry_policy)
+        # cost-model provenance into telemetry (one-time nominal-link
+        # warning when the per-backend JSON never calibrated the link)
+        self.telemetry.note_costmodel(self.cost_model)
 
     EST_SCALE_ALPHA = 0.5  # EWMA weight of the newest slice's observed error
     EST_SCALE_CLAMP = 64.0  # bound on the adaptive dispatch-time scale
     HOLD_AUTO_MAX = 4  # ceiling on the auto-tuned coalescing window
     HOLD_AUTO_MIN_RECUR = 0.25  # recurrence rate below which holding is off
+
+    # ------------------------------------------------------------------
+    # storage fault plane
+    # ------------------------------------------------------------------
+    def install_faults(self, plan: FaultPlan,
+                       policy: Optional[RetryPolicy] = None) -> None:
+        """Install (or replace) the fault injector on the engine's storage
+        read seam.  Idempotent per pod; the fabric's `inject_faults` routes
+        here for per-pod chaos."""
+        self.retry_policy = policy or self.retry_policy or RetryPolicy()
+        if self.breaker is None:
+            self.breaker = CircuitBreaker()
+        self.faults = FaultInjector(
+            plan, self.retry_policy, link=self.cost_model.link_model(),
+            pod_id=self.pod_id, telemetry=self.telemetry,
+            breaker=self.breaker, clock=lambda: self._tick,
+        )
+        self.engine.faults = self.faults
+
+    def breaker_open(self) -> bool:
+        """Any storage target's circuit breaker currently open?  The
+        fabric polls this each tick: an open breaker evicts the pod from
+        the fleet exactly like heartbeat silence (drain + replay)."""
+        return self.breaker is not None and self.breaker.any_open()
+
+    def _choose_mode(self, req: ScanRequest) -> str:
+        """Offload mode for a request's first dispatch — the ONE place
+        both scheduler paths (sequential run_tick and the stacked group
+        pass) decide it.  An open breaker on the request's table degrades
+        to raw offload: no caching ambitions, minimum bytes at risk,
+        while recovery probes decide when to trust the target again."""
+        if self.breaker is not None and self.breaker.degraded(req.reader.path):
+            self.telemetry.inc("breaker_degraded_dispatches")
+            return "raw"
+        return self.policy.choose(
+            self.engine, req.reader, req.plan, req.blooms,
+            row_groups=req.row_groups,
+            selectivity=req.est_rows / max(req.reader.n_rows, 1),
+            scan_tag=req.scan_tag,
+        )
 
     # ------------------------------------------------------------------
     # admission
@@ -350,6 +415,28 @@ class Pod:
             raise QueueFull(
                 f"queue at max depth {self.max_queue_depth}; tenant={tenant!r}"
             )
+        if self.breaker is not None:
+            # Graceful degradation instead of queue collapse: while the
+            # table's storage target is tripped open, requests still admit
+            # in degraded (raw) mode — but once the queue nears capacity
+            # they shed with a typed Overloaded, and after the cooldown
+            # one admission becomes the half-open recovery probe.
+            path = getattr(reader, "path", str(reader))
+            verdict = self.breaker.admit(
+                path, self._tick,
+                queue_frac=len(self.queue) / max(self.max_queue_depth, 1),
+            )
+            if verdict == "shed":
+                self.telemetry.inc("rejected_overloaded")
+                raise Overloaded(
+                    f"storage target {path!r} breaker open and queue at "
+                    f"{len(self.queue)}/{self.max_queue_depth}; "
+                    f"tenant={tenant!r} — retry after cooldown"
+                )
+            if verdict == "probe":
+                self.telemetry.inc("breaker_probes")
+            elif verdict == "degraded":
+                self.telemetry.inc("breaker_degraded_admits")
 
         pred = bind_expr(plan.predicate, reader)
         rgs, selectivity = prune_and_estimate(reader, pred)

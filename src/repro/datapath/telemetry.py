@@ -78,6 +78,19 @@ class Telemetry:
         # the flight recorder's Tracer (datapath/trace.py), registered by
         # the service so snapshots carry the per-request stage attribution
         self.tracer = None
+        # fault-plane ledger: modeled seconds the storage fault plane added,
+        # bucketed by cause (backoff / wasted / timeout / straggle /
+        # hedge_saved), plus the per-tenant total so the WFQ honesty
+        # invariant (sched + recon == actual) stays checkable under faults
+        self.fault_seconds: Dict[str, float] = collections.defaultdict(float)
+        self.tenant_fault_seconds: Dict[str, float] = collections.defaultdict(float)
+        # one-shot warnings (emitted at most once per key, surfaced in the
+        # snapshot so headless bench runs still record them)
+        self._warnings: Dict[str, str] = {}
+        # cost-model provenance, registered by the service at construction:
+        # which backend the rate tables came from and whether the link model
+        # is still running on nominal (uncalibrated) constants
+        self.costmodel_info: Optional[dict] = None
 
     # -- recording ---------------------------------------------------------
     def inc(self, name: str, value: float = 1.0) -> None:
@@ -138,6 +151,50 @@ class Telemetry:
         self.inc("peer_fetch_bytes", nbytes)
         self.inc("peer_fetch_seconds", seconds)
 
+    def observe_fault_seconds(self, kind: str, seconds: float) -> None:
+        """Modeled seconds the fault plane added to one fetch attempt,
+        bucketed by cause.  `hedge_saved` is NEGATIVE accounting — the tail
+        seconds a hedged read clawed back — and is recorded as a positive
+        magnitude under its own key so the win is visible in reports."""
+        self.fault_seconds[kind] += seconds
+        self.inc("fault_seconds_total", seconds)
+
+    def observe_fault_wait(self, tenant: str, seconds: float) -> None:
+        """One slice's total fault-plane delay billed into `tenant`'s WFQ
+        virtual time at reconciliation — retries, backoff, spikes, timeouts.
+        Kept per-tenant so the honesty ledger (cost_report) can show that
+        fault seconds were charged to the tenant that incurred them."""
+        self.tenant_fault_seconds[tenant] += seconds
+        self.inc("fault_wait_seconds", seconds)
+
+    def warn_once(self, key: str, message: str) -> None:
+        """Record a warning at most once per key.  Warnings ride the
+        snapshot (benchmark JSON) rather than stderr so headless runs
+        keep them."""
+        if key not in self._warnings:
+            self._warnings[key] = message
+            self.inc("warnings")
+
+    def note_costmodel(self, cm) -> None:
+        """Register cost-model provenance.  Fires the one-time
+        `nominal_link` warning when the link model is running on nominal
+        (uncalibrated) constants — the silent fallback the calibration
+        loader takes when its JSON lacks link entries."""
+        link_source = getattr(cm, "link_source", "nominal")
+        self.costmodel_info = {
+            "backend": getattr(cm, "backend", "unknown"),
+            "source": getattr(cm, "source", "unknown"),
+            "link_source": link_source,
+            "nominal_link": link_source == "nominal",
+        }
+        if link_source == "nominal":
+            self.warn_once(
+                "nominal_link",
+                "LinkModel is using nominal bandwidth/latency constants "
+                "(calibration provided no link entries); fetch seconds are "
+                "modeled, not measured",
+            )
+
     # -- reading -----------------------------------------------------------
     def tenant_latency(self, tenant: str) -> Dict[str, float]:
         xs = list(self._tenant_latency.get(tenant, ()))
@@ -164,6 +221,7 @@ class Telemetry:
             | set(self.tenant_recon_seconds)
             | set(self.tenant_retained_bytes)
             | set(self.tenant_peer_bytes)
+            | set(self.tenant_fault_seconds)
             | set(self._tenant_latency)
         )
 
@@ -180,9 +238,41 @@ class Telemetry:
                 "est_s": est,
                 "actual_s": act,
                 "recon_s": self.tenant_recon_seconds.get(t, 0.0),
+                "fault_s": self.tenant_fault_seconds.get(t, 0.0),
                 "rel_err": (est - act) / act if act > 0 else 0.0,
             }
         return out
+
+    def fault_report(self) -> dict:
+        """Storage-fault-plane ledger: what went wrong, what the retry /
+        hedge / breaker machinery did about it, and what it cost.  Fixed
+        keys, zero when the plane is quiet, so benchmark JSON is stable
+        whether or not faults were injected."""
+        c = self.counters
+        return {
+            "transient_errors": c.get("faults_transient", 0.0),
+            "fetch_timeouts": c.get("fetch_timeouts", 0.0),
+            "short_reads": c.get("faults_short_read", 0.0),
+            "corrupt_injected": c.get("faults_corrupt", 0.0),
+            "corrupt_detected": c.get("corrupt_detected", 0.0),
+            "quarantined_pages": c.get("quarantined_pages", 0.0),
+            "unverified_pages": c.get("unverified_pages", 0.0),
+            "retry_successes": c.get("fetch_retry_successes", 0.0),
+            "retries_exhausted": c.get("fetch_retries_exhausted", 0.0),
+            "hedged_fetches": c.get("hedged_fetches", 0.0),
+            "hedge_wins": c.get("hedge_wins", 0.0),
+            "breaker_trips": c.get("breaker_trips", 0.0),
+            "breaker_probes": c.get("breaker_probes", 0.0),
+            "breaker_degraded_admits": c.get("breaker_degraded_admits", 0.0),
+            "breaker_degraded_dispatches": c.get(
+                "breaker_degraded_dispatches", 0.0
+            ),
+            "rejected_overloaded": c.get("rejected_overloaded", 0.0),
+            "fault_seconds": dict(sorted(self.fault_seconds.items())),
+            "tenant_fault_seconds": dict(
+                sorted(self.tenant_fault_seconds.items())
+            ),
+        }
 
     def batch_report(self) -> dict:
         """Batched-decode dispatch ledger: slices dispatched through the
@@ -273,6 +363,14 @@ class Telemetry:
             "fairness": self.fairness(),
             "cost": self.cost_report(),
             "batch": self.batch_report(),
+            "faults": self.fault_report(),
+            "costmodel": (
+                dict(self.costmodel_info)
+                if self.costmodel_info is not None
+                else {"backend": "unknown", "source": "unknown",
+                      "link_source": "nominal", "nominal_link": True}
+            ),
+            "warnings": dict(sorted(self._warnings.items())),
             "store": self.store.stats() if self.store is not None else {},
             "trace": self.trace_report(),
         }

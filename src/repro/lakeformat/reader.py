@@ -41,6 +41,15 @@ class LakeReader:
     def row_group_meta(self, rg: int) -> dict:
         return self.footer["row_groups"][rg]
 
+    def page_checksum_meta(self, rg: int, column: str) -> Optional[int]:
+        """Footer checksum for one page, or None on legacy files written
+        before the field existed (those pages read back unverified)."""
+        cmeta = self.footer["row_groups"][rg]["columns"].get(column)
+        if cmeta is None:
+            return None
+        ck = cmeta.get("checksum")
+        return None if ck is None else int(ck)
+
     def decoded_dtype(self, column: str) -> np.dtype:
         """Dtype of the DECODED device column: float32 columns decode to
         float32, everything else (ints, string codes) to int32.  Lets the

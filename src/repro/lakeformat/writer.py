@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.lakeformat.encodings import EncodedColumn, Encoding, encode_column
+from repro.lakeformat.integrity import page_checksum
 from repro.lakeformat.schema import ColumnSchema, TableSchema, strings_to_codes
 
 MAGIC = b"LAKE1\0\0\0"
@@ -105,6 +106,10 @@ class LakeWriter:
                 "buffers": bufmeta,
                 "zonemap": _zone_map(vals),
                 "encoded_bytes": enc.encoded_bytes(),
+                # Per-page CRC32 over the encoded buffers; verified by the
+                # engine on every storage fetch.  Footers that predate this
+                # field read back as unverified (reader returns None).
+                "checksum": page_checksum(enc),
             }
         self._row_groups.append({"n": n, "columns": meta_cols})
         self._n_rows += int(n or 0)

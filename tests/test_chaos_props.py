@@ -1,0 +1,276 @@
+"""Chaos property sweep for the storage fault plane (DESIGN.md §17).
+
+The correctness bar: under ANY deterministic fault schedule, every scan
+that completes is BIT-IDENTICAL to the fault-free run, nothing hangs
+(the tick loop is bounded), nothing is silently dropped (every ticket
+terminates done-or-typed-error), and the WFQ honesty invariant
+(sched + recon == actual) holds with fault seconds folded in.
+
+Fixed-seed configuration grids always run — scheduler (wfq/fifo) x
+decode path (sequential/batched) x fabric width (1/2/4 pods) x fault
+mix.  A hypothesis sweep over seeds and rates widens the net when
+hypothesis is installed (same policy as tests/test_recon_props.py).
+"""
+
+import functools
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import BlockCache, Cmp, DatapathEngine, ScanPlan, tpch
+from repro.datapath import (
+    DatapathService,
+    FaultPlan,
+    Overloaded,
+    QueueFull,
+    QuotaExceeded,
+    RetryPolicy,
+    ScanFabric,
+    StorageFault,
+)
+from repro.lakeformat.integrity import CorruptPageError
+from repro.lakeformat.reader import LakeReader
+
+RG_ROWS = 2048
+TICK_BYTES = 1 << 14
+MAX_TICKS = 2000  # hang guard: orders of magnitude above any real drain
+
+
+@functools.lru_cache(maxsize=1)
+def _tables():
+    d = tempfile.mkdtemp(prefix="tpch_chaos_")
+    paths = tpch.write_tables(d, sf=0.05, seed=0, row_group_size=RG_ROWS)
+    return {k: LakeReader(p) for k, p in paths.items()}
+
+
+PLANS = [
+    ScanPlan("lineitem", ["l_extendedprice", "l_quantity"],
+             Cmp("l_quantity", "le", 25)),  # unprunable
+    ScanPlan("lineitem", ["l_extendedprice", "l_discount"],
+             Cmp("l_shipdate", "between", (365, 729))),  # zone-map pruned
+    ScanPlan("lineitem", ["l_quantity"], Cmp("l_quantity", "le", 3),
+             compact=True),
+    ScanPlan("part", ["p_partkey", "p_size"], Cmp("p_size", "le", 10)),
+]
+
+# recoverable mix: every fault kind, rates low enough that bounded
+# retries always clear them (checked: retries_exhausted == 0 below)
+RECOVERABLE = FaultPlan(seed=0, transient_rate=0.12, corrupt_rate=0.06,
+                        short_read_rate=0.04, spike_rate=0.25, spike_s=1e-3)
+POLICY = RetryPolicy(max_attempts=10, timeout_s=0.5, hedge_after_s=5e-4)
+
+
+@functools.lru_cache(maxsize=None)
+def _direct(idx):
+    plan = PLANS[idx]
+    return DatapathEngine(backend="ref").scan(_tables()[plan.table], plan)
+
+
+def _assert_identical(got, want):
+    assert int(got.count) == int(want.count)
+    assert np.array_equal(np.asarray(got.mask), np.asarray(want.mask))
+    assert set(got.columns) == set(want.columns)
+    for name in want.columns:
+        assert np.array_equal(
+            np.asarray(got.columns[name]), np.asarray(want.columns[name])
+        ), name
+
+
+def _bounded_drain(obj):
+    """Tick until idle with a hang guard — `drain()` without the ability
+    to loop forever."""
+    for _ in range(MAX_TICKS):
+        obj.tick()
+        pending = obj.active if hasattr(obj, "active") else obj.queue
+        if not pending:
+            return
+    pytest.fail(f"no progress after {MAX_TICKS} ticks — hang")
+
+
+def _check_honesty(telemetry):
+    snap = telemetry.snapshot()
+    for t, row in snap["cost"].items():
+        assert row["est_s"] + row["recon_s"] == pytest.approx(
+            row["actual_s"], abs=1e-9), (t, row)
+
+
+# ---------------------------------------------------------------------------
+# single pod: scheduler x decode-path grid under the recoverable mix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["wfq", "fifo"])
+@pytest.mark.parametrize("batch", [True, False])
+def test_pod_chaos_bit_identical(scheduler, batch):
+    readers = _tables()
+    svc = DatapathService(
+        engine=DatapathEngine(backend="ref", cache=BlockCache(1 << 30)),
+        scheduler=scheduler, batch_decode=batch, tick_bytes=TICK_BYTES,
+        fault_plan=RECOVERABLE, retry_policy=POLICY,
+    )
+    tickets = [(idx, svc.submit(f"t{idx}", readers[PLANS[idx].table],
+                                PLANS[idx]))
+               for idx in range(len(PLANS))]
+    _bounded_drain(svc)
+    for idx, tk in tickets:
+        _assert_identical(svc.result(tk), _direct(idx))
+    f = svc.telemetry.snapshot()["faults"]
+    assert f["retries_exhausted"] == 0
+    assert f["corrupt_detected"] == f["corrupt_injected"] + f["short_reads"]
+    _check_honesty(svc.telemetry)
+
+
+# ---------------------------------------------------------------------------
+# fabric: pod-count grid, every pod faulty, plus a straggler pod
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_pods", [1, 2, 4])
+@pytest.mark.parametrize("scheduler,batch", [("wfq", True), ("fifo", False)])
+def test_fabric_chaos_bit_identical(n_pods, scheduler, batch):
+    readers = _tables()
+    plan = RECOVERABLE
+    if n_pods > 1:  # one whole-pod straggler exercises the hedge path
+        plan = FaultPlan(seed=0, transient_rate=0.12, corrupt_rate=0.06,
+                         short_read_rate=0.04, spike_rate=0.25, spike_s=1e-3,
+                         straggler_pods={"pod1": 2e-3})
+    fab = ScanFabric(n_pods=n_pods, scheduler=scheduler, batch_decode=batch,
+                     tick_bytes=TICK_BYTES, fault_plan=plan,
+                     retry_policy=POLICY)
+    tickets = [(idx, fab.submit(f"t{idx}", readers[PLANS[idx].table],
+                                PLANS[idx]))
+               for idx in range(len(PLANS))]
+    _bounded_drain(fab)
+    for idx, tk in tickets:
+        assert tk.status == "done", (idx, tk.status, tk.error)
+        _assert_identical(tk.result, _direct(idx))
+    for pid in fab.live_pods:
+        f = fab.pods[pid].telemetry.snapshot()["faults"]
+        assert f["retries_exhausted"] == 0
+        _check_honesty(fab.pods[pid].telemetry)
+
+
+# ---------------------------------------------------------------------------
+# unrecoverable schedules: typed terminal errors, no hangs, no silent drops
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,exc_types", [
+    ("transient", (StorageFault,)),
+    ("corrupt", (StorageFault, CorruptPageError)),
+])
+def test_fail_forever_terminates_typed_never_hangs(kind, exc_types):
+    readers = _tables()
+    rates = {"transient_rate": 1.0} if kind == "transient" else {
+        "corrupt_rate": 1.0}
+    svc = DatapathService(
+        engine=DatapathEngine(backend="ref", cache=BlockCache(1 << 30)),
+        tick_bytes=TICK_BYTES,
+        fault_plan=FaultPlan(fail_forever=True, **rates),
+        retry_policy=RetryPolicy(max_attempts=3),
+    )
+    tickets = [svc.submit(f"t{i}", readers[p.table], p)
+               for i, p in enumerate(PLANS)]
+    _bounded_drain(svc)
+    for tk in tickets:
+        assert tk.status == "error", tk.status  # terminal, never dropped
+        with pytest.raises(exc_types):
+            svc.result(tk)
+
+
+def test_every_rejection_is_typed():
+    """Under chaos + pressure, every admission rejection is a typed error:
+    QueueFull, QuotaExceeded, or Overloaded — never a bare exception,
+    never a silent drop."""
+    readers = _tables()
+    svc = DatapathService(
+        engine=DatapathEngine(backend="ref", cache=BlockCache(1 << 30)),
+        tick_bytes=TICK_BYTES, max_queue_depth=4,
+        fault_plan=FaultPlan(transient_rate=1.0, fail_forever=True),
+        retry_policy=RetryPolicy(max_attempts=5),
+    )
+    submitted, rejected = [], 0
+    for i in range(16):
+        try:
+            submitted.append(svc.submit("t0", readers["lineitem"], PLANS[0]))
+        except (QueueFull, QuotaExceeded, Overloaded):
+            rejected += 1
+        if i % 4 == 3:
+            svc.tick()
+    _bounded_drain(svc)
+    assert rejected > 0
+    assert svc.telemetry.counters["rejected_overloaded"] >= 1
+    for tk in submitted:  # everything admitted reached a terminal state
+        assert tk.status in ("done", "error")
+        if tk.status == "error":
+            assert isinstance(tk.error, (StorageFault, CorruptPageError))
+
+
+def test_fabric_one_poisoned_pod_survivors_complete():
+    """Fault schedules confined to one pod: the breaker-drain path removes
+    it and every scan still completes bit-identically."""
+    readers = _tables()
+    fab = ScanFabric(n_pods=3, tick_bytes=TICK_BYTES)
+    tickets = [(idx, fab.submit(f"t{idx}", readers[PLANS[idx].table],
+                                PLANS[idx]))
+               for idx in range(len(PLANS))]
+    fab.inject_faults("pod2", FaultPlan(transient_rate=1.0,
+                                        fail_forever=True),
+                      RetryPolicy(max_attempts=5))
+    _bounded_drain(fab)
+    for idx, tk in tickets:
+        assert tk.status == "done", (idx, tk.error)
+        _assert_identical(tk.result, _direct(idx))
+    assert "pod2" not in fab.live_pods
+    assert fab.report()["breaker_drains"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: random seeds and rates, always-recoverable envelope
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=15)
+    @given(
+        seed=st.integers(0, 2**16),
+        transient=st.floats(0.0, 0.2),
+        corrupt=st.floats(0.0, 0.1),
+        spike=st.floats(0.0, 0.5),
+        n_pods=st.sampled_from([1, 2]),
+        scheduler=st.sampled_from(["wfq", "fifo"]),
+        batch=st.booleans(),
+        idx=st.integers(0, len(PLANS) - 1),
+    )
+    def _hyp_chaos(seed, transient, corrupt, spike, n_pods, scheduler,
+                   batch, idx):
+        readers = _tables()
+        fab = ScanFabric(
+            n_pods=n_pods, scheduler=scheduler, batch_decode=batch,
+            tick_bytes=TICK_BYTES,
+            fault_plan=FaultPlan(seed=seed, transient_rate=transient,
+                                 corrupt_rate=corrupt, spike_rate=spike,
+                                 spike_s=1e-3),
+            retry_policy=RetryPolicy(max_attempts=12, hedge_after_s=1e-3),
+        )
+        plan = PLANS[idx]
+        t = fab.submit("t0", readers[plan.table], plan)
+        _bounded_drain(fab)
+        assert t.status == "done", t.error
+        _assert_identical(t.result, _direct(idx))
+        for pid in fab.live_pods:
+            _check_honesty(fab.pods[pid].telemetry)
+
+    def test_chaos_hypothesis_sweep():
+        _hyp_chaos()
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_chaos_hypothesis_sweep():
+        pass

@@ -358,6 +358,101 @@ def test_fabric_stacks_across_requests_and_stays_identical(readers):
 
 
 # ---------------------------------------------------------------------------
+# drain windows: a pod dies while a request is parked in the coalescing
+# hold window, or mid-flight while peer fetches are feeding survivors —
+# and the breaker-drain path (fetch faults, not heartbeats) replays too
+# ---------------------------------------------------------------------------
+
+def test_drain_while_request_parked_in_hold_window(readers):
+    """A sub-scan still parked in its pod's coalescing hold window when
+    the pod dies replays bit-identically on survivors — held requests
+    are queued, undispatched state and must never be lost."""
+    fab = ScanFabric(n_pods=3, tick_bytes=TICK_BYTES, hold_ticks=4,
+                     heartbeat_timeout_ticks=2)
+    r = readers["lineitem"]
+    t = fab.submit("t0", r, PLANS[1])
+    fab.tick()  # every sub is now HELD (a lone request has no partner)
+    parked = [
+        (pid, s) for pid, s in t.subs.items()
+        if s.ticket.status == "queued"
+        and any(q.held_ticks > 0 and not q.started
+                for q in fab.pods[s.pod_id].queue
+                if q.ticket is s.ticket)
+    ]
+    assert parked, "expected at least one sub parked in the hold window"
+    fab.fail_pod(parked[0][1].pod_id, silent=True)
+    fab.drain()
+    assert t.status == "done" and t.replays >= 1
+    _assert_identical(t.result, _direct(readers, 1))
+
+
+def test_drain_mid_peer_fetch_falls_back_to_storage(readers):
+    """Kill a warm pod SILENTLY mid-scan: until the heartbeat timeout
+    expires, survivors' peer fetches still list the dead pod as a
+    sibling, hit its dead store (ConnectionError), and must fall back to
+    the next peer / storage — then the drain replays the dead pod's own
+    work.  End state: bit-identical, no propagated peer error."""
+    fab = ScanFabric(n_pods=3, tick_bytes=TICK_BYTES,
+                     heartbeat_timeout_ticks=3)
+    r = readers["lineitem"]
+    fab.scan(r, PLANS[1])  # warm every pod's store
+    t = fab.submit("t0", r, PLANS[1])
+    fab.tick()
+    victims = [s.pod_id for s in t.subs.values()
+               if s.ticket.status == "queued"]
+    assert victims
+    victim = victims[0]
+    assert fab.pods[victim].store.dead is False
+    fab.fail_pod(victim, silent=True)
+    assert fab.pods[victim].store.dead is True
+    with pytest.raises(ConnectionError):
+        fab.pods[victim].store.peek(("page", r.path, 0, "l_quantity"))
+    fab.drain()
+    assert t.status == "done"
+    _assert_identical(t.result, _direct(readers, 1))
+    # the fleet stays healthy for the next scan
+    _assert_identical(fab.scan(r, PLANS[1]), _direct(readers, 1))
+
+
+def test_breaker_open_pod_is_drained_and_replayed(readers):
+    """A pod whose storage fetches trip its circuit breaker is treated
+    like a heartbeat-silent pod: drained, its sub-scans replayed
+    bit-identically on survivors whose storage paths are healthy."""
+    from repro.datapath import FaultPlan, RetryPolicy
+
+    fab = ScanFabric(n_pods=3, tick_bytes=TICK_BYTES)
+    r = readers["lineitem"]
+    t = fab.submit("t0", r, PLANS[1])
+    victim = next(s.pod_id for s in t.subs.values())
+    fab.inject_faults(victim, FaultPlan(transient_rate=1.0,
+                                        fail_forever=True),
+                      RetryPolicy(max_attempts=5))
+    fab.drain()
+    assert t.status == "done" and t.replays >= 1
+    assert victim not in fab.live_pods
+    assert fab.report()["breaker_drains"] >= 1
+    _assert_identical(t.result, _direct(readers, 1))
+
+
+def test_breaker_drain_never_takes_the_last_pod(readers):
+    """A one-pod fleet with a tripped breaker degrades in place (typed
+    error) rather than draining itself out of existence."""
+    from repro.datapath import FaultPlan, FetchFailed, RetryPolicy
+
+    fab = ScanFabric(n_pods=1, tick_bytes=TICK_BYTES)
+    r = readers["lineitem"]
+    fab.inject_faults("pod0", FaultPlan(transient_rate=1.0,
+                                        fail_forever=True),
+                      RetryPolicy(max_attempts=5))
+    t = fab.submit("t0", r, PLANS[1])
+    fab.drain()
+    assert t.status == "error"
+    assert isinstance(t.error, FetchFailed)
+    assert fab.live_pods == ["pod0"]
+    assert fab.report()["breaker_drains"] == 0
+
+
+# ---------------------------------------------------------------------------
 # hypothesis sweep (skips without hypothesis; the fixed grid above always
 # runs, so bit-identity is never unguarded)
 # ---------------------------------------------------------------------------
